@@ -1,0 +1,186 @@
+"""Paper figure/table reproductions via the calibrated α-β simulator.
+
+One function per paper artifact; each yields CSV rows
+``name,us_per_call,derived`` where us_per_call is the modeled operation time
+and derived is the figure's headline quantity (bandwidth GB/s, speedup, ...).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import simulator as sim
+from repro.core.balance import uniform_plan
+from repro.core.topology import (ClusterSpec, PodSpec, H100_NVLINK,
+                                 MI300X_XGMI, V100_PCIE, W7800, paper_cluster,
+                                 tpu_multipod)
+
+GB = 1 << 30
+
+
+def _workload(name, zero=1, micro_batch=4, seq=None):
+    cfg = get_config(name)
+    n = cfg.n_params()
+    return sim.TrainWorkload(name=name, flops_per_token=6.0 * n,
+                             param_bytes=2.0 * n,
+                             seq_len=seq or (1024 if "gpt" in name else 8192),
+                             micro_batch=micro_batch, zero_stage=zero)
+
+
+def fig7_collectives():
+    """Fig 7: All-Reduce/All-Gather/Reduce-Scatter bus bandwidth vs #GPUs."""
+    rows = []
+    for op in ("all_reduce", "all_gather", "reduce_scatter"):
+        for n in (2, 4, 8):
+            for variant, cluster in (
+                    ("nccl", paper_cluster(n, 0)),
+                    ("rccl", paper_cluster(0, n)),
+                    ("hetccl_nv", paper_cluster(n, 0)),
+                    ("hetccl_amd", paper_cluster(0, n))):
+                t = sim.collective_time(op, GB, cluster, "hier")
+                rows.append((f"fig7/{op}/{variant}/n{n}", t * 1e6,
+                             GB / t / 1e9))
+        for n in (12, 16):
+            c = paper_cluster(n // 2, n // 2)
+            t = sim.collective_time(op, GB, c, "hier")
+            rows.append((f"fig7/{op}/hetccl_het/n{n}", t * 1e6, GB / t / 1e9))
+    return rows
+
+
+def fig8_p2p():
+    """Fig 8: RDMA point-to-point bandwidth across message sizes."""
+    nv = PodSpec("nvidia", V100_PCIE, 4)
+    amd = PodSpec("amd", W7800, 4)
+    rows = []
+    for size in (1 << 10, 1 << 15, 1 << 20, 1 << 25, 1 << 30):
+        for label, a, b in (("nv_nv", nv, nv), ("amd_amd", amd, amd),
+                            ("het", nv, amd)):
+            t = sim.p2p_time(size, a, b, 25e9)
+            rows.append((f"fig8/p2p/{label}/{size}B", t * 1e6, size / t / 1e9))
+    return rows
+
+
+def fig9_training_speedup():
+    """Fig 9: training throughput speedup vs the RCCL (AMD-only) baseline."""
+    rows = []
+    for model in ("gpt-125m", "gpt-355m", "llama-1b", "llama-3b"):
+        for zero in (1, 3):
+            w = _workload(model, zero)
+            setups = {
+                "4A": (paper_cluster(0, 4), "flat"),
+                "4N": (paper_cluster(4, 0), "flat"),
+                "8A": (paper_cluster(0, 8), "flat"),
+                "8N": (paper_cluster(8, 0), "flat"),
+                "4A+4N": (paper_cluster(4, 4), "hier"),
+                "8A+8N": (paper_cluster(8, 8), "hier"),
+            }
+            tps = {}
+            for tag, (cluster, mode) in setups.items():
+                n_pods = len(cluster.pods)
+                total_micro = 4 * n_pods
+                plan = (sim.balanced_plan(w, cluster, total_micro)
+                        if n_pods > 1 else
+                        uniform_plan(1, total_micro, w.micro_batch))
+                tps[tag] = sim.throughput_tokens_per_s(w, cluster, plan, mode)
+            base = tps["4A"]
+            for tag, tp in tps.items():
+                rows.append((f"fig9/{model}/zero{zero}/{tag}",
+                             1e6 * 1.0 / tp * 1e6, tp / base))
+            eff = sim.efficiency(w, paper_cluster(8, 8),
+                                 [paper_cluster(8, 0), paper_cluster(0, 8)], 8)
+            rows.append((f"fig9/{model}/zero{zero}/efficiency", 0.0, eff))
+    return rows
+
+
+def fig11_other_collectives():
+    rows = []
+    for op in ("reduce", "broadcast", "all_to_all"):
+        for n in (8, 16):
+            c = paper_cluster(n // 2, n // 2)
+            t = sim.collective_time(op, GB, c, "hier")
+            rows.append((f"fig11/{op}/hetccl_het/n{n}", t * 1e6, GB / t / 1e9))
+    return rows
+
+
+def fig13_14_mpi():
+    """Fig 13/14: GPU-aware MPI vs HetCCL crossover."""
+    c = paper_cluster(8, 8)
+    rows = []
+    for size in (1 << 12, 1 << 16, 1 << 20, 1 << 24, 1 << 28, 1 << 30):
+        t_h = sim.collective_time("all_reduce", size, c, "hier")
+        t_m = sim.mpi_collective_time("all_reduce", size, c)
+        rows.append((f"fig14/all_reduce/hetccl/{size}B", t_h * 1e6,
+                     size / t_h / 1e9))
+        rows.append((f"fig14/all_reduce/mpi/{size}B", t_m * 1e6,
+                     size / t_m / 1e9))
+    nv = PodSpec("nvidia", V100_PCIE, 4)
+    amd = PodSpec("amd", W7800, 4)
+    for size in (1 << 12, 1 << 20, 1 << 30):
+        t_h = sim.p2p_time(size, nv, amd, 25e9)
+        t_m = sim.p2p_time(size, nv, amd, 25e9, alpha=1.5e-6)
+        rows.append((f"fig13/p2p/hetccl/{size}B", t_h * 1e6, size / t_h / 1e9))
+        rows.append((f"fig13/p2p/mpi/{size}B", t_m * 1e6, size / t_m / 1e9))
+    return rows
+
+
+def fig15_highend():
+    """Fig 15: no overhead on NVLink/xGMI single-node systems."""
+    rows = []
+    for label, chip in (("h100", H100_NVLINK), ("mi300x", MI300X_XGMI)):
+        c = ClusterSpec((PodSpec(label, chip, 8),))
+        for size in (1 << 20, 1 << 30):
+            t_native = sim.collective_time("all_reduce", size, c, "flat")
+            t_het = sim.collective_time("all_reduce", size, c, "hier")
+            rows.append((f"fig15/{label}/native/{size}B", t_native * 1e6,
+                         size / t_native / 1e9))
+            rows.append((f"fig15/{label}/hetccl/{size}B", t_het * 1e6,
+                         t_het / t_native))
+    return rows
+
+
+def fig16_rdma_ablation():
+    nv = PodSpec("nvidia", V100_PCIE, 4)
+    amd = PodSpec("amd", W7800, 4)
+    rows = []
+    for size in (1 << 20, 1 << 25, 1 << 30):
+        t_r = sim.p2p_time(size, nv, amd, 25e9, rdma=True)
+        t_h = sim.p2p_time(size, nv, amd, 25e9, rdma=False)
+        rows.append((f"fig16/rdma/{size}B", t_r * 1e6, size / t_r / 1e9))
+        rows.append((f"fig16/host_staged/{size}B", t_h * 1e6, size / t_h / 1e9))
+    return rows
+
+
+def table4_balancing():
+    """Table 4: balanced vs uniform micro-batch speedup (ZeRO-3).
+
+    Max-feasible batch shrinks with model size (paper D.2 "maximum feasible
+    batch size before OOM"); comm_scale=20 models per-layer ZeRO-3 sync
+    granularity + PCIe link contention (see simulator.step_time).  Expected:
+    the paper's decreasing 1.22 -> 1.08 trend, within ~0.1 absolute."""
+    het = paper_cluster(8, 8)
+    cases = {"gpt-125m": (16, 1024, 12), "gpt-355m": (8, 1024, 12),
+             "llama-1b": (1, 8192, 12), "llama-3b": (1, 8192, 6)}
+    rows = []
+    for model, (mb, seq, total_micro) in cases.items():
+        w = _workload(model, zero=3, micro_batch=mb, seq=seq)
+        bal = sim.throughput_tokens_per_s(
+            w, het, sim.balanced_plan(w, het, total_micro), "hier",
+            comm_scale=20.0)
+        uni = sim.throughput_tokens_per_s(
+            w, het, uniform_plan(2, total_micro, mb), "hier", comm_scale=20.0)
+        rows.append((f"table4/{model}/balancing_speedup", 0.0, bal / uni))
+    return rows
+
+
+def scale_1000_chips():
+    """Beyond-paper: hierarchical collectives at fleet scale (design target)."""
+    rows = []
+    for pods in (2, 4, 8, 16):
+        c = tpu_multipod(pods, 256)
+        t = sim.collective_time("all_reduce", GB, c, "hier")
+        rows.append((f"scale/all_reduce/{pods * 256}chips", t * 1e6,
+                     GB / t / 1e9))
+    return rows
+
+
+ALL = (fig7_collectives, fig8_p2p, fig9_training_speedup,
+       fig11_other_collectives, fig13_14_mpi, fig15_highend,
+       fig16_rdma_ablation, table4_balancing, scale_1000_chips)

@@ -1,0 +1,179 @@
+"""Perf hillclimbing driver (§Perf): re-lower a dry-run cell with config
+overrides and report the three roofline terms + top collective contributors.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations --arch X --shape Y \
+        [--mesh single|multi] [--zero 1|3] [--micro-tokens 8192] \
+        [--seq-shard-acts] [--cross-dtype bfloat16] [--mode flat|hier] [--top 8]
+
+Each invocation = one measurement of the hypothesis->change->measure loop;
+results are appended to results/perf_log.jsonl.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import RunConfig
+from repro.core.balance import uniform_plan
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.roofline import analysis as A
+from repro.roofline.analysis import Roofline, analyze_hlo
+from repro.launch.dryrun import (_serve_batch_sds, _train_batch_sds,
+                                 model_flops_spec)
+from repro.train.trainer import make_train_program
+
+
+def top_collectives(hlo: str, n_devices: int, top: int = 8):
+    comps = A._split_computations(hlo)
+    parsed = {k: A._parse_ops(v) for k, v in comps.items()}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            entry = re.match(r"ENTRY\s+%?([\w.\-]+)", line).group(1)
+    mult_of, rows = {}, []
+
+    def visit(comp, mult):
+        if comp not in parsed or mult_of.get(comp, 0) >= mult:
+            return
+        mult_of[comp] = mult
+        for op in parsed[comp].values():
+            if op.kind == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = A._trip_count(comps.get(m.group(1), [])) if m else 1
+                if b:
+                    visit(b.group(1), mult * max(trips, 1))
+            elif op.kind in ("fusion", "call", "custom-call"):
+                for cm in re.finditer(r"(?:calls|to_apply)=\{?%?([\w.\-]+)",
+                                      op.attrs):
+                    visit(cm.group(1), mult)
+
+    visit(entry, 1.0)
+    for comp, mult in mult_of.items():
+        for op in parsed[comp].values():
+            if op.kind in A._COLLECTIVES:
+                g = A._group_size(op.attrs, n_devices)
+                wire = {"all-reduce": 2 * (g - 1) / g,
+                        "all-gather": (g - 1) / g,
+                        "reduce-scatter": (g - 1) * 1.0,
+                        "all-to-all": (g - 1) / g,
+                        "collective-permute": 1.0}[op.kind] * op.out_bytes
+                meta = re.search(r'op_name="([^"]+)"', op.attrs)
+                rows.append((mult * wire, op.kind, g, mult, op.type_str[:38],
+                             (meta.group(1) if meta else "")[-72:]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--zero", type=int, default=3)
+    ap.add_argument("--micro-tokens", type=int, default=8192)
+    ap.add_argument("--mode", default=None, help="flat|hier collective mode")
+    ap.add_argument("--cross-dtype", default=None)
+    ap.add_argument("--seq-shard-acts", action="store_true",
+                    help="shard the residual stream's seq dim over 'model'")
+    ap.add_argument("--moe-no-buf-replication", action="store_true")
+    ap.add_argument("--moe-ffn-shard", action="store_true",
+                    help="TP inside experts (shard d_ff_expert) instead of "
+                         "sharding the expert dim")
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--top", type=int, default=8)
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = get_config(args.arch)
+    if args.loss_chunk:
+        cfg = dataclasses.replace(cfg, loss_chunk=args.loss_chunk)
+    if args.attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=args.attn_chunk)
+    shape = SHAPES[args.shape]
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = int(np.prod(mesh.devices.shape))
+    model = build(cfg)
+
+    if args.moe_no_buf_replication:
+        import repro.models.moe as moe_mod
+        import functools
+        moe_mod.moe_ffn = functools.partial(moe_mod.moe_ffn, replicate_buffers=False)
+        import repro.models.transformer as tfm
+        tfm.moe_mod = moe_mod
+    if args.seq_shard_acts or args.moe_ffn_shard:
+        from repro.models import common as mc
+        orig = mc.make_rules
+
+        def patched(cfg_, mesh_, zero_stage=1):
+            r = orig(cfg_, mesh_, zero_stage)
+            if args.seq_shard_acts:
+                r["_attn_sp"] = True
+            if args.moe_ffn_shard:
+                r["experts"] = None
+                r["expert_mlp"] = "model"
+            return r
+        mc.make_rules = patched
+        import repro.train.trainer as tr
+        tr.make_rules = patched
+
+    n_pods = 2 if multi else 1
+    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+                      for a in ("pod", "data")]))
+    per_dev = shape.global_batch // dp
+    mb = max(1, min(per_dev, args.micro_tokens // shape.seq_len))
+    n_micro = per_dev // mb
+    plan = uniform_plan(n_pods, n_micro * n_pods, mb)
+    rc = RunConfig(zero_stage=args.zero,
+                   collective_mode=args.mode or ("hier" if multi else "flat"),
+                   cross_dtype=args.cross_dtype)
+    batch_sds, extra = _train_batch_sds(cfg, shape, mesh, plan)
+    prog = make_train_program(model, mesh, rc, plan, extra_batch_specs=extra)
+    state_sds = jax.eval_shape(prog.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    t0 = time.time()
+    compiled = prog.step_fn.lower(state_sds, batch_sds).compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo, n_dev, pod_size=256 if multi else 0)
+    roof = Roofline(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                    n_devices=n_dev,
+                    model_flops_per_step=model_flops_spec(cfg, shape),
+                    stats=stats, xla_flops=0, xla_bytes=0,
+                    memory_per_device={
+                        "temp_bytes": compiled.memory_analysis().temp_size_in_bytes})
+    rec = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
+           "mesh": args.mesh, "zero": args.zero, "n_micro": n_micro, "mb": mb,
+           "mode": rc.collective_mode, "cross_dtype": args.cross_dtype,
+           "seq_shard_acts": args.seq_shard_acts,
+           "cross_pod_GB": stats.cross_pod_bytes / 1e9,
+           "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+           "collective_s": roof.collective_s, "dominant": roof.dominant,
+           "step_s": roof.step_s, "roofline_frac": roof.roofline_fraction,
+           "useful": roof.useful_flops_fraction,
+           "temp_GB": compiled.memory_analysis().temp_size_in_bytes / 1e9,
+           "compile_s": round(t_compile, 1)}
+    print(json.dumps(rec, indent=1))
+    print("top collectives (wire GB/chip x kind x group x loop-mult):")
+    for wire, kind, g, mult, tstr, opname in top_collectives(hlo, n_dev, args.top):
+        print(f"  {wire / 1e9:9.1f}GB {kind:18s} g={g:<4d} mult={mult:6.0f} "
+              f"{tstr:38s} {opname}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_log.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Render the §Roofline table from results/dryrun/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_table [--dir results/dryrun]
+        [--mesh single|multi|both] [--md results/roofline_table.md]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def render(rows, mesh="single"):
+    hdr = (f"| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           f"xpod_GB | dom | useful | roofline | temp_GB |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in rows:
+        if mesh != "both" and r["mesh"] != mesh:
+            continue
+        tmp = (r["memory_per_device"]["temp_bytes"] or 0) / 1e9
+        xp = r.get("cross_pod_bytes_per_chip", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.2f} | "
+            f"{r['collective_s']:.2f} | {xp:.1f} | {r['dominant'][:4]} | "
+            f"{r['useful_flops_frac']:.2f} | {r['roofline_frac']:.4f} | "
+            f"{tmp:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--md", default="results/roofline_table.md")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    text = render(rows, args.mesh)
+    print(text)
+    if args.md:
+        os.makedirs(os.path.dirname(args.md), exist_ok=True)
+        with open(args.md, "w") as f:
+            f.write(f"# Roofline table ({args.dir}, {len(rows)} cells)\n\n")
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

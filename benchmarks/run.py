@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Simulator-driven figure
+reproductions (Figs 7-9, 11, 13-16, Table 4) + measured runs on this host
+(real collectives, Fig 12 convergence, Table 4 profiling, kernel refs).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    from benchmarks import paper_figs, real_runs
+    print("name,us_per_call,derived")
+    failures = 0
+    groups = list(paper_figs.ALL) + list(real_runs.ALL)
+    if "--sim-only" in sys.argv:
+        groups = list(paper_figs.ALL)
+    for fn in groups:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.3f},{derived:.6g}", flush=True)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}:{e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

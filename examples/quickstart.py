@@ -1,0 +1,49 @@
+"""Quickstart: train a tiny model with HetCCL collectives in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 2-island mesh (8 forced host devices), installs the hierarchical
+HetCCL backend, and trains a reduced llama for 20 steps — the 'drop-in
+backend' usage the paper targets: the training code below never names a
+collective implementation.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core.balance import uniform_plan
+from repro.data.pipeline import DataPipeline
+from repro.models import build
+from repro.train.trainer import make_train_program
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    rc = RunConfig(zero_stage=1, collective_mode="hier",   # <- the backend knob
+                   learning_rate=3e-3, param_dtype="float32")
+    prog = make_train_program(model, mesh, rc, uniform_plan(2, 4, 1))
+    state = prog.init_fn(jax.random.PRNGKey(0))
+    pipe = DataPipeline(seed=0, plan=prog.plan, dp_world=prog.dp_world(),
+                        seq_len=64, vocab=cfg.vocab)
+    for step in range(20):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        state, metrics = prog.step_fn(state, batch)
+        if step % 5 == 0 or step == 19:
+            print(f"step {step:3d}  loss {float(metrics['loss']):.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.3f}  "
+                  f"tokens {int(metrics['tokens'])}")
+    print("done — collectives ran through the HetCCL hierarchical backend "
+          f"(mode={prog.hcfg.resolved_mode()}).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps with
+the full production stack — HetCCL hierarchical collectives, GPU-aware
+workload balancing on a heterogeneous 2-island mesh, ZeRO, checkpointing,
+failure injection + automatic recovery, straggler monitoring.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--zero 1|3]
+                                                [--arch gpt-125m] [--full-size]
+
+Default uses the reduced config so a few hundred steps finish on CPU in
+minutes; --full-size runs the true ~125M-parameter model (slow on CPU).
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core.balance import PodProfile, make_plan
+from repro.data.pipeline import DataPipeline
+from repro.models import build
+from repro.train import checkpoint as ck
+from repro.train import ft
+from repro.train.trainer import make_train_program
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--zero", type=int, default=1)
+    ap.add_argument("--arch", default="gpt-125m")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--fail-at", type=int, default=120,
+                    help="inject a failure at this step (recovery demo)")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    print(f"arch={cfg.name}  params={model.n_params():,}  zero={args.zero}")
+
+    # --- GPU-aware balancing: profile each island, then plan (paper §4.5) ---
+    # On this single-host sim both islands profile equal; we inject a 2:1
+    # ratio to exercise the balancer exactly as the paper's cluster does.
+    profiles = [PodProfile("pod-fast", 2.0), PodProfile("pod-slow", 1.0)]
+    plan = make_plan(profiles, total_micro=6, micro_batch=1)
+    print(f"balance plan: micro_per_pod={plan.micro_per_pod} "
+          f"weights={tuple(round(w, 3) for w in plan.weights)}")
+
+    rc = RunConfig(zero_stage=args.zero, collective_mode="hier",
+                   learning_rate=1e-3, param_dtype="float32")
+    prog = make_train_program(model, mesh, rc, plan)
+    state = prog.init_fn(jax.random.PRNGKey(0))
+    pipe = DataPipeline(seed=0, plan=plan, dp_world=prog.dp_world(),
+                        seq_len=args.seq, vocab=cfg.vocab)
+
+    def batches(step):
+        return {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    ck.save(args.ckpt_dir, 0, state)
+    mon = ft.StragglerMonitor()
+    t0 = time.perf_counter()
+
+    def log(step, m):
+        if step % 20 == 0:
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d}  loss {m['loss']:.4f}  "
+                  f"tokens/s {m['tokens'] * (step + 1) / max(dt, 1e-9):,.0f}")
+
+    state, history = ft.run_supervised(
+        prog.step_fn, state, batches, ckpt_dir=args.ckpt_dir,
+        ckpt_every=50, n_steps=args.steps,
+        state_shardings=prog.state_shardings,
+        fail_at=args.fail_at if 0 < args.fail_at < args.steps else None,
+        monitor=mon, metrics_cb=log)
+
+    print(f"finished {args.steps} steps: "
+          f"loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f} "
+          f"(injected failure at step {args.fail_at}, recovered from ckpt)")
+    assert history[-1]["loss"] < history[0]["loss"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own models."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (LONG_500K, DECODE_32K, PREFILL_32K, SHAPES,
+                                TRAIN_4K, ModelConfig, RunConfig, ShapeConfig)
+
+ARCH_IDS = (
+    "whisper-medium",
+    "smollm-360m",
+    "smollm-135m",
+    "starcoder2-7b",
+    "deepseek-coder-33b",
+    "zamba2-7b",
+    "mixtral-8x7b",
+    "moonshot-v1-16b-a3b",
+    "qwen2-vl-72b",
+    "mamba2-2.7b",
+)
+
+# the paper's own evaluation models (Table 2) — used by the figure benchmarks
+PAPER_IDS = ("gpt-125m", "gpt-355m", "llama-1b", "llama-3b")
+
+_MODULES = {
+    "whisper-medium": "whisper_medium",
+    "smollm-360m": "smollm_360m",
+    "smollm-135m": "smollm_135m",
+    "starcoder2-7b": "starcoder2_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "zamba2-7b": "zamba2_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "mamba2-2.7b": "mamba2_27b",
+    "gpt-125m": "paper_models",
+    "gpt-355m": "paper_models",
+    "llama-1b": "paper_models",
+    "llama-3b": "paper_models",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIGS[arch_id] if hasattr(mod, "CONFIGS") else mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

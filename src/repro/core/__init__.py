@@ -1,0 +1,11 @@
+"""HetCCL core: the paper's contribution as a composable JAX layer.
+
+- tacc:        runtime function-table dispatch (paper §4.2 / Appendix C)
+- collectives: flat + hierarchical (local-native + cross-pod P2P ring) ops
+- hetccl:      drop-in public API + install() (the LD_PRELOAD analogue, §4.4)
+- balance:     GPU-aware micro-batch balancing (§4.5 / Appendix F.2)
+- topology:    island/cluster hardware descriptions (Table 1 + TPU targets)
+- simulator:   calibrated α-β model validating the paper's figures
+"""
+from repro.core import balance, collectives, hetccl, simulator, tacc, topology  # noqa: F401
+from repro.core.hetccl import HetCCLConfig, install  # noqa: F401

@@ -1,0 +1,139 @@
+"""GPU-aware workload balancing (paper §4.5, Appendix F.2).
+
+HetCCL assigns each device a micro-batch proportional to its profiled
+throughput:  b_i = B * s_i / sum_j s_j,  equalizing b_i / s_i so all devices
+finish together and the collective never waits on a straggler.
+
+SPMD adaptation (DESIGN.md §2): ``jax.jit`` requires uniform per-device
+shapes, so heterogeneous *sizes* become heterogeneous *micro-batch counts*:
+every device runs ``n_micro_max`` micro-steps of identical shape, and pods
+with a smaller share mask out trailing micro-steps.  Gradients are weighted by
+true token counts, so the math is exactly the paper's weighted data
+parallelism (and HetSeq's weighted averaging, which the paper cites).
+
+On a real mixed-generation fleet each island runs its own compiled program
+(MPMD) and only meets at the collective boundary — the layer this library
+owns; the analytic simulator models that timing, this module owns the
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.topology import ClusterSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PodProfile:
+    """Measured throughput of one island (paper: the short profiling run)."""
+
+    name: str
+    tokens_per_s: float
+    n_devices: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HetPlan:
+    """A balanced micro-batch assignment.
+
+    micro_per_pod[i]  — number of live micro-steps pod i runs per step,
+    n_micro_max       — uniform loop length (= max over pods),
+    weights[i]        — pod i's fraction of the global batch actually processed.
+    """
+
+    pod_names: tuple[str, ...]
+    micro_per_pod: tuple[int, ...]
+    n_micro_max: int
+    micro_batch: int              # per-device micro-batch size (uniform)
+
+    @property
+    def weights(self) -> tuple[float, ...]:
+        tot = sum(self.micro_per_pod)
+        return tuple(m / tot for m in self.micro_per_pod)
+
+    def live_mask(self) -> np.ndarray:
+        """(n_pods, n_micro_max) 0/1 mask of live micro-steps."""
+        m = np.zeros((len(self.micro_per_pod), self.n_micro_max), np.float32)
+        for i, k in enumerate(self.micro_per_pod):
+            m[i, :k] = 1.0
+        return m
+
+    @property
+    def total_micro(self) -> int:
+        return sum(self.micro_per_pod)
+
+
+def make_plan(profiles: Sequence[PodProfile], total_micro: int,
+              micro_batch: int, min_per_pod: int = 1) -> HetPlan:
+    """b_i = B * s_i / sum_j s_j  with largest-remainder rounding to whole
+    micro-batches (the paper rounds to whole per-GPU micro-batches)."""
+    speeds = np.array([p.tokens_per_s for p in profiles], np.float64)
+    if speeds.sum() <= 0:
+        raise ValueError("profiles must have positive throughput")
+    ideal = total_micro * speeds / speeds.sum()
+    base = np.maximum(np.floor(ideal).astype(int), min_per_pod)
+    # largest-remainder correction to hit total_micro exactly: shrink the
+    # most-overshooting pod that is still above the minimum.
+    while base.sum() > total_micro:
+        cand = [i for i in range(len(base)) if base[i] > min_per_pod]
+        if not cand:
+            break                      # total < n_pods * min: keep minimums
+        i = cand[int(np.argmax((base - ideal)[cand]))]
+        base[i] -= 1
+    rem = total_micro - base.sum()
+    if rem > 0:
+        order = np.argsort(-(ideal - base))
+        for i in order[:rem]:
+            base[i] += 1
+    return HetPlan(
+        pod_names=tuple(p.name for p in profiles),
+        micro_per_pod=tuple(int(b) for b in base),
+        n_micro_max=int(base.max()),
+        micro_batch=micro_batch,
+    )
+
+
+def uniform_plan(n_pods: int, total_micro: int, micro_batch: int,
+                 names: Sequence[str] | None = None) -> HetPlan:
+    """The unbalanced baseline (same micro-batch count everywhere)."""
+    assert total_micro % n_pods == 0
+    k = total_micro // n_pods
+    return HetPlan(
+        pod_names=tuple(names or (f"pod{i}" for i in range(n_pods))),
+        micro_per_pod=(k,) * n_pods,
+        n_micro_max=k,
+        micro_batch=micro_batch,
+    )
+
+
+def plan_from_cluster(cluster: ClusterSpec, total_micro: int,
+                      micro_batch: int) -> HetPlan:
+    profiles = [PodProfile(p.name, p.effective_flops, p.n_chips)
+                for p in cluster.pods]
+    return make_plan(profiles, total_micro, micro_batch)
+
+
+def profile_throughput(step_fn: Callable[[], object], tokens_per_step: int,
+                       warmup: int = 1, iters: int = 3) -> tuple[float, float]:
+    """The paper's short profiling run: a few warm-up steps, then measure
+    tokens/s.  Returns (tokens_per_s, profiling_seconds) — the overhead column
+    of Table 4."""
+    t_start = time.perf_counter()
+    for _ in range(warmup):
+        step_fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        step_fn()
+    dt = (time.perf_counter() - t0) / iters
+    return tokens_per_step / dt, time.perf_counter() - t_start
+
+
+def imbalance(plan: HetPlan, profiles: Sequence[PodProfile]) -> float:
+    """max_i(b_i/s_i) / mean_i(b_i/s_i) — 1.0 means perfectly balanced."""
+    t = np.array([m / p.tokens_per_s
+                  for m, p in zip(plan.micro_per_pod, profiles)])
+    return float(t.max() / t.mean())

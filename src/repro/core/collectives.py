@@ -1,0 +1,416 @@
+"""HetCCL collectives: vendor-local native stages + cross-island P2P rings.
+
+The paper's mechanism (§4.1-§4.2): a collective over a heterogeneous group is
+decomposed into
+
+  1. a *vendor-local* stage executed by the vendor's optimized library
+     (NCCL / RCCL), and
+  2. a *cross-vendor* stage built from RDMA point-to-point transfers,
+
+so near-native local performance is preserved and only the unavoidable
+cross-island hop crosses the slow boundary.
+
+TPU mapping (see DESIGN.md §2):
+
+  * vendor-local stage  -> native XLA collectives over intra-pod mesh axes
+    (``jax.lax.psum`` / ``all_gather`` / ``psum_scatter``), which XLA lowers to
+    ICI-optimized collectives;
+  * cross-vendor RDMA   -> explicit ``jax.lax.ppermute`` rings over the
+    ``"pod"`` axis (the only pure point-to-point JAX collective).
+
+Everything here must run inside a ``jax.shard_map`` whose manual axes include
+the axes being reduced over, created with ``check_vma=False`` (ring ppermutes
+produce values the VMA type system cannot prove invariant).
+
+All ops are registered in the TACC function table under variants ``"flat"``
+(single-stage native) and ``"hier"`` (two-stage HetCCL) so the whole backend
+can be swapped at runtime (paper §4.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tacc
+
+Axis = str | Sequence[str]
+
+
+def _axes_tuple(axes: Axis) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def axis_world(axes: Axis) -> int:
+    n = 1
+    for a in _axes_tuple(axes):
+        n *= lax.axis_size(a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Ring primitives over a single axis (the "RDMA" stage).
+# Wire traffic per rank: reduce_scatter / all_gather move (n-1)/n * bytes,
+# all_reduce 2(n-1)/n * bytes — bandwidth-optimal, like NCCL's ring.
+# ---------------------------------------------------------------------------
+
+def _fwd_perm(n: int) -> list[tuple[int, int]]:
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
+    """x: (n*c, ...) tiled on dim 0 -> this rank's reduced chunk (c, ...).
+
+    Matches ``lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)``.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    assert x.shape[0] % n == 0, (x.shape, n)
+    chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    idx = lax.axis_index(axis)
+    perm = _fwd_perm(n)
+
+    def body(s, acc):
+        send_idx = (idx - s - 1) % n
+        blk = jnp.take(acc, send_idx, axis=0)
+        rblk = lax.ppermute(blk, axis, perm)
+        return acc.at[(idx - s - 2) % n].add(rblk)
+
+    acc = lax.fori_loop(0, n - 1, body, chunks)
+    return jnp.take(acc, idx, axis=0)
+
+
+def ring_reduce_scatter_mixed(x: jax.Array, axis: str,
+                              wire_dtype=None) -> jax.Array:
+    """Ring reduce-scatter with narrow wire + f32 accumulation.
+
+    Payloads cross the wire in ``wire_dtype`` (default: x.dtype) while the
+    local accumulator stays f32 — the semantics of the paper's GPU-side
+    collective reduction (App. E.3) and of the `collective_reduce` Pallas
+    kernel.  Halves ZeRO-3 gradient wire bytes vs an f32 reduce-scatter.
+    Returns the f32-reduced chunk owned by this rank (tiled on dim 0).
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x.astype(jnp.float32)
+    wire_dtype = wire_dtype or x.dtype
+    assert x.shape[0] % n == 0, (x.shape, n)
+    chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:]).astype(jnp.float32)
+    idx = lax.axis_index(axis)
+    perm = _fwd_perm(n)
+
+    def body(s, acc):
+        send_idx = (idx - s - 1) % n
+        blk = jnp.take(acc, send_idx, axis=0).astype(wire_dtype)
+        rblk = lax.ppermute(blk, axis, perm)
+        return acc.at[(idx - s - 2) % n].add(rblk.astype(jnp.float32))
+
+    acc = lax.fori_loop(0, n - 1, body, chunks)
+    return jnp.take(acc, idx, axis=0)
+
+
+def ring_all_gather(x: jax.Array, axis: str) -> jax.Array:
+    """x: (c, ...) per-rank chunk -> (n*c, ...) rank-major, all ranks equal.
+
+    Matches ``lax.all_gather(x, axis, axis=0, tiled=True)``.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    perm = _fwd_perm(n)
+    out = jnp.zeros((n,) + x.shape, x.dtype).at[idx].set(x)
+
+    def body(s, state):
+        acc, cur = state
+        cur = lax.ppermute(cur, axis, perm)          # chunk of rank (idx - s - 1)
+        acc = acc.at[(idx - s - 1) % n].set(cur)
+        return acc, cur
+
+    out, _ = lax.fori_loop(0, n - 1, body, (out, x))
+    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def ring_all_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Bandwidth-optimal ring all-reduce (reduce-scatter + all-gather)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    red = ring_all_gather(ring_reduce_scatter(flat, axis), axis)
+    if pad:
+        red = red[: flat.shape[0] - pad]
+    return red.reshape(shape).astype(dtype)
+
+
+def ring_all_to_all(x: jax.Array, axis: str) -> jax.Array:
+    """x: (n, ...) block i destined for rank i -> (n, ...) block j from rank j.
+
+    Matches ``lax.all_to_all(x, axis, split_axis=0, concat_axis=0)`` for a
+    leading block dim of size n.  Uses n-1 ppermutes of stride s.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    out = jnp.zeros_like(x)
+    out = out.at[idx].set(jnp.take(x, idx, axis=0))
+    for s in range(1, n):  # static unroll: perms differ per step
+        perm = [(j, (j + s) % n) for j in range(n)]
+        blk = jnp.take(x, (idx + s) % n, axis=0)     # my block destined (idx+s)
+        rblk = lax.ppermute(blk, axis, perm)          # from rank (idx - s)
+        out = out.at[(idx - s) % n].set(rblk)
+    return out
+
+
+def ring_broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
+    """Chain-forward the root's value around the ring (n-1 hops)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    perm = _fwd_perm(n)
+    # Chain-forward: after k hops rank (root+k) receives root's value (every
+    # rank forwards what it currently holds); each rank keeps the value that
+    # arrives on its turn.
+    idx = lax.axis_index(axis)
+    cur = x
+    kept = x
+    for s in range(n - 1):
+        cur = lax.ppermute(cur, axis, perm)
+        kept = jnp.where((idx - root) % n == s + 1, cur, kept)
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# Flat (single-stage, native XLA) collectives — the homogeneous baseline.
+# ---------------------------------------------------------------------------
+
+@tacc.register("all_reduce", "flat", default=True)
+def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, **_):
+    all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    return lax.psum(x, all_axes)
+
+
+@tacc.register("all_gather", "flat", default=True)
+def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
+                    tiled: bool = True, **_):
+    out = x
+    for a in _axes_tuple(axes):
+        out = lax.all_gather(out, a, axis=dim, tiled=tiled)
+    if pod_axis:
+        out = lax.all_gather(out, pod_axis, axis=dim, tiled=tiled)
+    return out
+
+
+@tacc.register("reduce_scatter", "flat", default=True)
+def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0, **_):
+    all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
+    out = x
+    for a in all_axes:
+        out = lax.psum_scatter(out, a, scatter_dimension=dim, tiled=True)
+    return out
+
+
+@tacc.register("all_to_all", "flat", default=True)
+def flat_all_to_all(x, axes: Axis, pod_axis: str | None = None, *,
+                    split_axis: int = 0, concat_axis: int = 0, **_):
+    all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
+    return lax.all_to_all(x, all_axes, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=True)
+
+
+@tacc.register("broadcast", "flat", default=True)
+def flat_broadcast(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0, **_):
+    all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    # emulate: zero non-root contributions, then sum.
+    flat_idx = jnp.zeros((), jnp.int32)
+    stride = 1
+    for a in reversed(all_axes):
+        flat_idx = flat_idx + lax.axis_index(a) * stride
+        stride *= lax.axis_size(a)
+    return lax.psum(jnp.where(flat_idx == root, x, jnp.zeros_like(x)), all_axes)
+
+
+@tacc.register("reduce", "flat", default=True)
+def flat_reduce(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0, **_):
+    all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    s = lax.psum(x, all_axes)
+    flat_idx = jnp.zeros((), jnp.int32)
+    stride = 1
+    for a in reversed(all_axes):
+        flat_idx = flat_idx + lax.axis_index(a) * stride
+        stride *= lax.axis_size(a)
+    return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
+
+
+@tacc.register("p2p", "flat", default=True)
+def p2p(x, axis: str, perm: Sequence[tuple[int, int]]):
+    """Point-to-point send/recv (the RDMA verbs analogue)."""
+    return lax.ppermute(x, axis, list(perm))
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (HetCCL) collectives: local native stage + cross-pod ring.
+# ---------------------------------------------------------------------------
+
+def _flatten_pad(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % multiple
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+@tacc.register("all_reduce", "hier")
+def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
+                    cross_dtype=None, **_):
+    """AllReduce = local ReduceScatter -> cross-pod ring AllReduce -> local AllGather.
+
+    ``cross_dtype`` optionally compresses the cross-island stage (the slow
+    links), a beyond-paper knob: gradients cast to e.g. bf16 only while they
+    transit the pod boundary.
+    """
+    local = _axes_tuple(axes)
+    if not pod_axis:
+        return lax.psum(x, local)
+    D = 1
+    for a in local:
+        D *= lax.axis_size(a)
+    P = lax.axis_size(pod_axis)
+    shape, dtype = x.shape, x.dtype
+    flat, pad = _flatten_pad(x, D * P)
+    n = flat.shape[0]
+    if D > 1:
+        shard = lax.psum_scatter(flat.reshape(D, n // D), local,
+                                 scatter_dimension=0, tiled=False)
+    else:
+        shard = flat
+    if cross_dtype is not None and cross_dtype != dtype:
+        shard = shard.astype(cross_dtype)
+    shard = ring_all_gather(ring_reduce_scatter(shard, pod_axis), pod_axis)
+    if cross_dtype is not None and cross_dtype != dtype:
+        shard = shard.astype(dtype)
+    if D > 1:
+        flat = lax.all_gather(shard, local, axis=0, tiled=False).reshape(n)
+    else:
+        flat = shard
+    if pad:
+        flat = flat[:n - pad]
+    return flat.reshape(shape)
+
+
+@tacc.register("all_gather", "hier")
+def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0,
+                    tiled: bool = True, **_):
+    """Local native gather, then cross-pod ring gather (pod-major order)."""
+    out = flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
+    if pod_axis:
+        if dim != 0:
+            out = jnp.moveaxis(out, dim, 0)
+        out = ring_all_gather(out, pod_axis)
+        if dim != 0:
+            out = jnp.moveaxis(out, 0, dim)
+    return out
+
+
+@tacc.register("reduce_scatter", "hier")
+def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
+                        dim: int = 0, **_):
+    """Cross-pod ring reduce-scatter first (P2P), then local native stage."""
+    out = x
+    if pod_axis:
+        if dim != 0:
+            out = jnp.moveaxis(out, dim, 0)
+        out = ring_reduce_scatter(out, pod_axis)
+        if dim != 0:
+            out = jnp.moveaxis(out, 0, dim)
+    return flat_reduce_scatter(out, axes, None, dim=dim)
+
+
+@tacc.register("all_to_all", "hier")
+def hier_all_to_all(x, axes: Axis, pod_axis: str | None = "pod", *,
+                    split_axis: int = 0, concat_axis: int = 0, **_):
+    """Two-stage A2A: cross-pod superblocks via P2P ring, then local native A2A.
+
+    Matches flat all_to_all over (pod, *axes) with pod-major rank order for
+    split_axis == concat_axis == 0.
+    """
+    if not pod_axis:
+        return flat_all_to_all(x, axes, None, split_axis=split_axis,
+                               concat_axis=concat_axis)
+    assert split_axis == 0 and concat_axis == 0, "hier a2a supports dim 0"
+    P = lax.axis_size(pod_axis)
+    D = 1
+    for a in _axes_tuple(axes):
+        D *= lax.axis_size(a)
+    n = x.shape[0]
+    assert n % (P * D) == 0, (n, P, D)
+    blk = x.reshape((P, D, n // (P * D)) + x.shape[1:])
+    blk = ring_all_to_all(blk, pod_axis)             # exchange pod superblocks
+    blk = blk.reshape((P * D, n // (P * D)) + x.shape[1:])
+    blk = blk.reshape((P, n // P) + x.shape[1:])
+    out = lax.all_to_all(blk, _axes_tuple(axes), split_axis=1, concat_axis=1,
+                         tiled=True)
+    return out.reshape((n,) + x.shape[1:])
+
+
+@tacc.register("broadcast", "hier")
+def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0, **_):
+    out = flat_broadcast(x, axes, None, root=root)   # local stage from local root
+    if pod_axis:
+        out = ring_broadcast(out, pod_axis, root=0)
+    return out
+
+
+@tacc.register("reduce", "hier")
+def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0, **_):
+    s = hier_all_reduce(x, axes, pod_axis)
+    flat_idx = jnp.zeros((), jnp.int32)
+    stride = 1
+    all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    for a in reversed(all_axes):
+        flat_idx = flat_idx + lax.axis_index(a) * stride
+        stride *= lax.axis_size(a)
+    return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers (used inside fwd/bwd of the model, e.g. ZeRO-3).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fsdp_all_gather(x: jax.Array, axis: str, dim: int = 0) -> jax.Array:
+    """AllGather whose adjoint is ReduceScatter — ZeRO-3's parameter gather.
+
+    The gathered value is pinned behind an optimization barrier so XLA cannot
+    hoist a later bf16->f32 convert BEFORE the gather (which would double the
+    wire bytes; observed on the CPU backend, which upcasts bf16 dots).
+    """
+    out = lax.all_gather(x, axis, axis=dim, tiled=True)
+    return lax.optimization_barrier(out)
+
+
+def _fsdp_ag_fwd(x, axis, dim):
+    return fsdp_all_gather(x, axis, dim), None
+
+
+def _fsdp_ag_bwd(axis, dim, _, g):
+    # Gradient reduce-scatter with the narrow wire (g.dtype) and f32
+    # accumulation — the collective_reduce kernel semantics.  Also dodges an
+    # XLA:CPU miscompile of bf16 psum_scatter inside partially-manual
+    # shard_map (see DESIGN.md §8).
+    gm = jnp.moveaxis(g, dim, 0) if dim else g
+    out = ring_reduce_scatter_mixed(gm, axis)
+    out = jnp.moveaxis(out, 0, dim) if dim else out
+    return (out.astype(g.dtype),)
+
+
+fsdp_all_gather.defvjp(_fsdp_ag_fwd, _fsdp_ag_bwd)

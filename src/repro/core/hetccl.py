@@ -1,0 +1,165 @@
+"""HetCCL public API — the drop-in collective layer (paper §4, Fig 2b).
+
+Applications (our trainer, serving engine, examples) call these functions; the
+TACC registry resolves them to the *flat* (single-stage native) or *hier*
+(vendor-local + cross-pod P2P) implementation at **runtime**.  Swapping the
+backend under an unmodified application — the paper's LD_PRELOAD trick — is
+:func:`install`.
+
+Also provides :func:`tree_all_reduce`, a bucketed gradient all-reduce
+(flatten leaves -> fixed-size fusion buckets -> one collective per bucket),
+the classic DDP optimization NCCL users get from bucketing; plus optional
+``cross_dtype`` compression of the cross-island stage only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tacc
+from repro.core import collectives as _coll  # noqa: F401  (registers impls)
+
+
+@dataclasses.dataclass(frozen=True)
+class HetCCLConfig:
+    """Runtime configuration of the collective layer.
+
+    mode:        "flat" | "hier" | "auto".  "auto" picks "hier" iff a pod axis
+                 is present (i.e. the job spans islands) — mirroring HetCCL's
+                 transparent activation on heterogeneous clusters.
+    local_axes:  intra-island mesh axes carrying data parallelism.
+    pod_axis:    the island boundary axis (None on single-island meshes).
+    bucket_bytes: gradient fusion bucket size.
+    cross_dtype: optional dtype for the cross-island stage (gradient
+                 compression on the slow links; beyond-paper).
+    """
+
+    mode: str = "auto"
+    local_axes: tuple[str, ...] = ("data",)
+    pod_axis: str | None = "pod"
+    bucket_bytes: int = 64 * 1024 * 1024
+    cross_dtype: Any = None
+
+    def resolved_mode(self) -> str:
+        if self.mode != "auto":
+            return self.mode
+        return "hier" if self.pod_axis else "flat"
+
+    def dp_axes(self) -> tuple[str, ...]:
+        """Pod-major: matches the gather order of both flat and hier
+        all_gather (pod blocks of local blocks) and P(('pod','data'))."""
+        return ((self.pod_axis,) if self.pod_axis else ()) + self.local_axes
+
+
+_CURRENT = HetCCLConfig(pod_axis=None)
+
+
+def install(config: HetCCLConfig) -> HetCCLConfig:
+    """Swap the active collective backend (the LD_PRELOAD analogue).
+
+    Existing training code keeps calling the same functions; only the registry
+    default changes.  Returns the previous config so callers can restore it.
+    """
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = config
+    mode = config.resolved_mode()
+    for op in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+               "broadcast", "reduce"):
+        if mode in tacc.variants(op):
+            tacc.set_default(op, mode)
+    return prev
+
+
+def current() -> HetCCLConfig:
+    return _CURRENT
+
+
+def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
+    cfg = cfg or _CURRENT
+    return tacc.dispatch(op, x, cfg.local_axes, cfg.pod_axis,
+                         variant=cfg.resolved_mode(), **kw)
+
+
+def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
+    cfg = cfg or _CURRENT
+    if cfg.resolved_mode() == "hier" and cfg.cross_dtype is not None:
+        kw.setdefault("cross_dtype", cfg.cross_dtype)
+    return _call("all_reduce", x, cfg, **kw)
+
+
+def all_gather(x, cfg: HetCCLConfig | None = None, **kw):
+    return _call("all_gather", x, cfg, **kw)
+
+
+def reduce_scatter(x, cfg: HetCCLConfig | None = None, **kw):
+    return _call("reduce_scatter", x, cfg, **kw)
+
+
+def all_to_all(x, cfg: HetCCLConfig | None = None, **kw):
+    return _call("all_to_all", x, cfg, **kw)
+
+
+def broadcast(x, cfg: HetCCLConfig | None = None, **kw):
+    return _call("broadcast", x, cfg, **kw)
+
+
+def reduce(x, cfg: HetCCLConfig | None = None, **kw):
+    return _call("reduce", x, cfg, **kw)
+
+
+def p2p(x, axis: str, perm: Sequence[tuple[int, int]]):
+    return tacc.dispatch("p2p", x, axis, perm)
+
+
+def world_size(cfg: HetCCLConfig | None = None) -> int:
+    cfg = cfg or _CURRENT
+    return _coll.axis_world(cfg.dp_axes())
+
+
+# ---------------------------------------------------------------------------
+# Bucketed gradient reduction (DDP-style fusion).
+# ---------------------------------------------------------------------------
+
+def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
+    """All-reduce every leaf of ``tree``, fused into ~bucket_bytes buckets.
+
+    Leaves are flattened, grouped by dtype into buckets, reduced with one
+    collective per bucket, and unpacked.  ``mean_by``: optional scalar (e.g.
+    summed token count) every leaf is divided by after reduction.
+    """
+    cfg = cfg or _CURRENT
+    leaves, treedef = jax.tree.flatten(tree)
+    order = sorted(range(len(leaves)), key=lambda i: jnp.dtype(leaves[i].dtype).name)
+    buckets: list[list[int]] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    cur_dtype = None
+    for i in order:
+        lf = leaves[i]
+        nbytes = lf.size * lf.dtype.itemsize
+        if cur and (lf.dtype != cur_dtype or cur_bytes + nbytes > cfg.bucket_bytes):
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_dtype = lf.dtype
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(cur)
+
+    out = list(leaves)
+    for bucket in buckets:
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
+        red = all_reduce(flat, cfg)
+        off = 0
+        for i in bucket:
+            sz = leaves[i].size
+            out[i] = red[off:off + sz].reshape(leaves[i].shape)
+            off += sz
+    if mean_by is not None:
+        out = [o / mean_by.astype(o.dtype) if jnp.issubdtype(o.dtype, jnp.floating)
+               else o for o in out]
+    return jax.tree.unflatten(treedef, out)

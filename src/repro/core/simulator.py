@@ -1,0 +1,214 @@
+"""Analytic α-β performance simulator for heterogeneous clusters.
+
+This container has no multi-vendor GPUs (and no TPUs), so the paper's
+*measured* figures are validated through a calibrated latency/bandwidth model:
+
+  time(op, n bytes, group) = α·(steps) + Σ_stage bytes_on_wire / bw_stage
+
+with the hierarchical decomposition HetCCL uses: vendor-local stages run at
+island-local bandwidth, the cross-island stage at the RDMA (or host-staged)
+bandwidth, bounded by the slower endpoint (paper §5.2: "HetCCL (HET) achieves
+performance bounded by the slower of the two vendor libraries").
+
+Used by the figure-level benchmarks (Figs 7, 8, 9, 11, 13-16; Table 4) to
+reproduce the paper's claims from its own hardware constants (Table 1),
+and by the scale studies (1000+ chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.balance import HetPlan, PodProfile, make_plan, uniform_plan
+from repro.core.topology import (ClusterSpec, HOST_STAGED_BW, MPI_ALPHA,
+                                 MPI_HOST_REDUCE_BW, PodSpec, RDMA_ALPHA)
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point (paper Fig 8 / Fig 13 / Fig 16)
+# ---------------------------------------------------------------------------
+
+def p2p_time(nbytes: float, src: PodSpec, dst: PodSpec, inter_bw: float,
+             alpha: float = RDMA_ALPHA, rdma: bool = True) -> float:
+    """One cross-island transfer: bounded by the slower endpoint."""
+    path_bw = min(src.chip.local_link_bw * src.chip.local_links,
+                  dst.chip.local_link_bw * dst.chip.local_links,
+                  inter_bw)
+    if not (rdma and src.rdma and dst.rdma):
+        # host-staged: GPU->CPU->NIC->CPU->GPU (Fig 1a / Fig 16)
+        path_bw = min(path_bw, HOST_STAGED_BW)
+    return alpha + nbytes / path_bw
+
+
+def p2p_bandwidth(nbytes: float, src: PodSpec, dst: PodSpec, inter_bw: float,
+                  **kw) -> float:
+    return nbytes / p2p_time(nbytes, src, dst, inter_bw, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Collectives (paper Figs 7, 11, 14, 15)
+# ---------------------------------------------------------------------------
+
+_RING_FACTORS = {
+    # fraction of the buffer each rank moves per link in a ring algorithm
+    "all_reduce": lambda n: 2.0 * (n - 1) / n,
+    "all_gather": lambda n: (n - 1) / n,
+    "reduce_scatter": lambda n: (n - 1) / n,
+    "reduce": lambda n: (n - 1) / n,
+    "broadcast": lambda n: (n - 1) / n,
+    "all_to_all": lambda n: (n - 1) / n,
+}
+
+
+def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
+                           n_ranks: int, alpha: float = RDMA_ALPHA) -> float:
+    """Vendor-local stage: the island's native library over its interconnect."""
+    if n_ranks <= 1:
+        return 0.0
+    bw = pod.chip.local_link_bw * pod.chip.local_links
+    steps = n_ranks - 1
+    return alpha * steps + _RING_FACTORS[op](n_ranks) * nbytes / bw
+
+
+def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
+                    mode: str = "auto", alpha: float | None = None) -> float:
+    """Time of one collective over every chip in ``cluster``.
+
+    mode "flat": one ring over all chips, every link bounded by the slowest
+    endpoint in the group (what a naive single-stage heterogeneous ring pays).
+    mode "hier": HetCCL — local stage per island at native bandwidth +
+    cross-island ring over per-island shards.
+    """
+    alpha = cluster.inter_pod_alpha if alpha is None else alpha
+    pods = list(cluster.pods)
+    n = cluster.n_chips
+    if n <= 1:
+        return 0.0
+    if mode == "auto":
+        mode = "hier" if len(pods) > 1 else "flat"
+    if len(pods) == 1 or mode == "flat":
+        bw = cluster.slowest_endpoint_bw() if len(pods) > 1 else \
+            pods[0].chip.local_link_bw * pods[0].chip.local_links
+        return alpha * (n - 1) + _RING_FACTORS[op](n) * nbytes / bw
+    # hierarchical: local stage + cross-pod ring on 1/n_local shards.
+    P = len(pods)
+    if op == "all_reduce":
+        local_rs = max(_local_collective_time("reduce_scatter", nbytes, p, p.n_chips)
+                       for p in pods)
+        shard = nbytes / max(min(p.n_chips for p in pods), 1)
+        cross_bw = cluster.slowest_endpoint_bw()
+        cross = alpha * 2 * (P - 1) + _RING_FACTORS["all_reduce"](P) * shard / cross_bw
+        local_ag = max(_local_collective_time("all_gather", nbytes, p, p.n_chips)
+                       for p in pods)
+        return local_rs + cross + local_ag
+    if op in ("all_gather", "reduce_scatter", "broadcast", "reduce"):
+        local = max(_local_collective_time(op, nbytes, p, p.n_chips) for p in pods)
+        shard = nbytes / max(min(p.n_chips for p in pods), 1)
+        cross_bw = cluster.slowest_endpoint_bw()
+        cross = alpha * (P - 1) + _RING_FACTORS[op](P) * shard / cross_bw
+        return local + cross
+    if op == "all_to_all":
+        local = max(_local_collective_time(op, nbytes, p, p.n_chips) for p in pods)
+        cross_bytes = nbytes * (P - 1) / P
+        cross = alpha * (P - 1) + cross_bytes / cluster.slowest_endpoint_bw()
+        return local + cross
+    raise ValueError(op)
+
+
+def collective_busbw(op: str, nbytes: float, cluster: ClusterSpec,
+                     mode: str = "auto") -> float:
+    """Algorithm bandwidth (bytes / time), the y-axis of paper Figs 7/11."""
+    return nbytes / collective_time(op, nbytes, cluster, mode)
+
+
+def mpi_collective_time(op: str, nbytes: float, cluster: ClusterSpec) -> float:
+    """GPU-aware-MPI baseline (paper Fig 13/14): lower per-message α, but
+    reductions staged through host memory."""
+    n = cluster.n_chips
+    t = MPI_ALPHA * math.ceil(math.log2(max(n, 2)))
+    bw = cluster.slowest_endpoint_bw()
+    t += _RING_FACTORS[op](n) * nbytes / bw
+    if op in ("all_reduce", "reduce", "reduce_scatter"):
+        t += 2.0 * nbytes / MPI_HOST_REDUCE_BW   # host-staged reduction
+    return t
+
+
+# ---------------------------------------------------------------------------
+# End-to-end training step (paper Fig 9, Table 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainWorkload:
+    """Per-micro-batch cost of one model under one ZeRO stage."""
+
+    name: str
+    flops_per_token: float        # fwd+bwd FLOPs per token (≈ 6·N with remat factor)
+    param_bytes: float            # gradient/parameter traffic volume
+    seq_len: int
+    micro_batch: int              # per-device micro-batch (sequences)
+    zero_stage: int = 1
+
+    @property
+    def tokens_per_micro(self) -> int:
+        return self.micro_batch * self.seq_len
+
+
+def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
+              mode: str = "auto", overlap: float = 0.0,
+              comm_scale: float = 1.0) -> float:
+    """One optimizer step: max-over-pods compute + collective traffic.
+
+    ZeRO-1: grads AllReduce'd once per step (bucketed);
+    ZeRO-3: per-layer param AllGather (fwd+bwd) + grad ReduceScatter, modeled
+    as 3x param volume split between local and cross stages.
+    ``overlap``: fraction of communication hidden under compute (0 = none).
+    ``comm_scale``: multiplier for per-layer sync granularity + link
+    contention effects the bulk α-β terms miss (paper ZeRO-3 on PCIe: layers
+    × 3 blocking collectives sharing one link with gradient traffic; ~20 on
+    the paper testbed, 1.0 for bulk-synchronous TPU estimates).
+    """
+    # compute: pod i runs micro_per_pod[i] micro-steps
+    comp = 0.0
+    for pod, n_micro in zip(cluster.pods, plan.micro_per_pod):
+        per_micro = (workload.tokens_per_micro * pod.n_chips *
+                     workload.flops_per_token) / pod.effective_flops
+        comp = max(comp, n_micro * per_micro)
+    if workload.zero_stage >= 3:
+        comm = collective_time("all_gather", 2 * workload.param_bytes, cluster, mode)
+        comm += collective_time("reduce_scatter", workload.param_bytes, cluster, mode)
+    else:
+        comm = collective_time("all_reduce", workload.param_bytes, cluster, mode)
+    return comp + (1.0 - overlap) * comm_scale * comm
+
+
+def throughput_tokens_per_s(workload: TrainWorkload, cluster: ClusterSpec,
+                            plan: HetPlan, mode: str = "auto",
+                            overlap: float = 0.0,
+                            comm_scale: float = 1.0) -> float:
+    live = sum(m * workload.tokens_per_micro * p.n_chips
+               for m, p in zip(plan.micro_per_pod, cluster.pods))
+    return live / step_time(workload, cluster, plan, mode, overlap, comm_scale)
+
+
+def balanced_plan(workload: TrainWorkload, cluster: ClusterSpec,
+                  total_micro: int) -> HetPlan:
+    """Profiling-based plan: speeds from each pod's effective throughput."""
+    profs = [PodProfile(p.name, p.effective_flops, p.n_chips) for p in cluster.pods]
+    return make_plan(profs, total_micro, workload.micro_batch)
+
+
+def efficiency(workload: TrainWorkload, het_cluster: ClusterSpec,
+               homo_clusters: Sequence[ClusterSpec], total_micro: int,
+               mode: str = "hier") -> float:
+    """Paper §5.3: het throughput / sum of homogeneous throughputs."""
+    het_tp = throughput_tokens_per_s(
+        workload, het_cluster, balanced_plan(workload, het_cluster, total_micro),
+        mode)
+    homo_tp = 0.0
+    for c in homo_clusters:
+        share = max(1, round(total_micro * c.n_chips / het_cluster.n_chips))
+        homo_tp += throughput_tokens_per_s(
+            workload, c, uniform_plan(len(c.pods), share * len(c.pods),
+                                      workload.micro_batch), "flat")
+    return het_tp / homo_tp if homo_tp else float("nan")

@@ -1,0 +1,126 @@
+"""TACC — the runtime dispatch layer (paper §4.2, Appendix C).
+
+The paper's TACC unifies CUDA and HIP behind one API by keeping a
+*platform-specific function table* that is resolved at **runtime**
+(``taccSetPlatformAuto``), never at compile time.  That is what made HetCCL
+able to carry both vendors' code paths in one binary.
+
+The JAX analogue: one Python package carries several implementations of each
+performance-critical op —
+
+* ``"tpu"``      -> Pallas TPU kernels (the per-platform "device code",
+  compiled by the platform's own compiler, here Mosaic; paper §4.3),
+* ``"cpu"``      -> pure-jnp reference implementations,
+* ``"interpret"``-> Pallas kernels executed in interpreter mode (used to
+  validate the TPU kernel bodies on CPU),
+
+and for *collective* ops —
+
+* ``"flat"``     -> single-stage native XLA collectives,
+* ``"hier"``     -> HetCCL's two-stage hierarchical collectives
+  (vendor-local native stage + cross-pod P2P ring stage).
+
+A table maps ``(op, variant) -> callable`` and is consulted on every call, so
+swapping the whole communication backend (the paper's LD_PRELOAD trick) is a
+single registry update — see :func:`repro.core.hetccl.install`.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict
+
+import jax
+
+_lock = threading.Lock()
+_TABLE: Dict[str, Dict[str, Callable[..., Any]]] = {}
+_DEFAULT_VARIANT: Dict[str, str] = {}
+_PLATFORM: str | None = None     # resolved lazily (taccSetPlatformAuto)
+
+
+class TaccError(KeyError):
+    pass
+
+
+def register(op: str, variant: str, *, default: bool = False) -> Callable:
+    """Decorator: register ``fn`` as the ``variant`` implementation of ``op``."""
+
+    def deco(fn: Callable) -> Callable:
+        with _lock:
+            _TABLE.setdefault(op, {})[variant] = fn
+            if default or op not in _DEFAULT_VARIANT:
+                _DEFAULT_VARIANT[op] = variant
+        return fn
+
+    return deco
+
+
+def set_platform(platform: str) -> None:
+    """Pin the platform (paper: ``taccSetPlatform``)."""
+    global _PLATFORM
+    _PLATFORM = platform
+
+
+def set_platform_auto() -> str:
+    """Detect the platform from the runtime (paper: ``taccSetPlatformAuto``)."""
+    global _PLATFORM
+    _PLATFORM = jax.default_backend()
+    return _PLATFORM
+
+
+def get_platform() -> str:
+    if _PLATFORM is None:
+        set_platform_auto()
+    return _PLATFORM  # type: ignore[return-value]
+
+
+def set_default(op: str, variant: str) -> None:
+    with _lock:
+        if op not in _TABLE or variant not in _TABLE[op]:
+            raise TaccError(f"no implementation registered for ({op!r}, {variant!r})")
+        _DEFAULT_VARIANT[op] = variant
+
+
+def get_default(op: str) -> str:
+    return _DEFAULT_VARIANT[op]
+
+
+def resolve(op: str, variant: str | None = None) -> Callable[..., Any]:
+    """Resolve ``op`` to a concrete implementation.
+
+    Resolution order: explicit ``variant`` -> current platform -> registered
+    default.  This mirrors TACC's function-table indirection: callers never
+    name a platform-specific entry point.
+    """
+    impls = _TABLE.get(op)
+    if not impls:
+        raise TaccError(f"unknown op {op!r}; registered: {sorted(_TABLE)}")
+    if variant is not None:
+        if variant not in impls:
+            raise TaccError(
+                f"op {op!r} has no variant {variant!r}; has {sorted(impls)}")
+        return impls[variant]
+    plat = get_platform()
+    if plat in impls:
+        return impls[plat]
+    return impls[_DEFAULT_VARIANT[op]]
+
+
+def dispatch(op: str, *args: Any, variant: str | None = None, **kwargs: Any) -> Any:
+    return resolve(op, variant)(*args, **kwargs)
+
+
+def _fn_name(fn) -> str:
+    base = getattr(fn, "func", fn)            # unwrap functools.partial
+    mod = getattr(base, "__module__", "?")
+    qual = getattr(base, "__qualname__", getattr(base, "__name__", repr(base)))
+    return f"{mod}.{qual}"
+
+
+def table() -> Dict[str, Dict[str, str]]:
+    """Readable dump of the function table (paper Appendix C analogue)."""
+    return {op: {v: _fn_name(fn) for v, fn in impls.items()}
+            for op, impls in sorted(_TABLE.items())}
+
+
+def variants(op: str) -> list[str]:
+    return sorted(_TABLE.get(op, {}))

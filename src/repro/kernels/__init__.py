@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (per-platform device code, resolved via TACC).
+
+flash_attention  — online-softmax attention (causal/bidir/SWA, GQA)
+grouped_matmul   — per-expert batched GEMM over the MoE capacity buffer
+ssd_scan         — Mamba2 chunked state-space scan (state resident in VMEM)
+collective_reduce— ring reduce-scatter chunk accumulation (paper App. E.3)
+
+Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd wrappers and
+the TACC registrations (tpu -> Pallas, cpu -> ref, interpret -> validation).
+EXAMPLE.md documents the layout convention."""
+from repro.kernels import ops  # noqa: F401  (registers TACC entries)

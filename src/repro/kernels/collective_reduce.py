@@ -1,0 +1,42 @@
+"""Collective local-reduction kernel (Pallas TPU).
+
+The paper's only device-side compute is the reduction inside collectives
+(Appendix E.3: "HetCCL performs reductions entirely on the GPU" — vs MPI's
+host-staged reduction).  This is its TPU analogue: the chunk accumulation
+step of a ring reduce-scatter, fused with the optional cross-island dtype
+decompression (the beyond-paper gradient-compression knob casts the wire
+payload to bf16; the accumulator stays f32).
+
+  acc_new = acc + incoming.astype(f32)
+
+Tiled (8, 128)-aligned 2-D blocks; ops.py reshapes flat chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(acc_ref, inc_ref, o_ref):
+    o_ref[...] = (acc_ref[...].astype(jnp.float32) +
+                  inc_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def collective_reduce(acc, incoming, *, block=(256, 256),
+                      interpret: bool = False):
+    """acc (M, L), incoming (M, L) possibly narrower dtype -> acc.dtype."""
+    M, L = acc.shape
+    bm, bl = min(block[0], M), min(block[1], L)
+    assert M % bm == 0 and L % bl == 0, (acc.shape, block)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(M // bm, L // bl),
+        in_specs=[
+            pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, L), acc.dtype),
+        interpret=interpret,
+    )(acc, incoming)

@@ -1,0 +1,63 @@
+"""Grouped (per-expert) matmul kernel (Pallas TPU).
+
+Batched GEMM over the MoE capacity buffer: x (G, M, K) @ w (G, K, N) ->
+(G, M, N), the compute hot spot of the MoE families.  Blocked for the MXU:
+
+  grid = (G, M/bm, N/bn, K/bk) — the K axis is innermost/sequential,
+  accumulating into an f32 VMEM scratch tile; the output tile is written on
+  the last K step.  bm/bn/bk default 128 (MXU-aligned).
+
+Tokens dropped by the capacity dispatch are zero rows — they flow through
+harmlessly, so no group-size masking is needed in-kernel (the dispatch layer
+owns validity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                   interpret: bool = False):
+    """x: (G, M, K), w: (G, K, N) -> (G, M, N).  Dims padded by ops.py."""
+    G, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (x.shape, w.shape)
+    grid = (G, M // bm, N // bn, K // bk)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,89 @@
+"""Mamba2 SSD chunked-scan kernel (Pallas TPU).
+
+One (batch, head) stream per grid row; the chunk axis is sequential, carrying
+the (N, P) recurrent state in VMEM scratch — the state never round-trips to
+HBM between chunks, which is the point of the TPU adaptation (the GPU
+reference materializes inter-chunk states in global memory).
+
+  grid = (B, H, n_chunks), dimension_semantics = (parallel, parallel,
+  arbitrary).
+
+Per chunk (all in VMEM): within-chunk decay L from the dt·A cumsum, the
+attention-like quadratic form (C B^T ∘ L) @ (x·dt) on the MXU, the
+cross-chunk contribution C · state, and the state update.
+
+Layouts (prepared by ops.py): x (B,H,nc,Q,P), dt/a (B,H,nc,Q), B/C
+(B,H,nc,Q,N).  Q is the chunk length (defaults 128/256 — MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, s_scr, *, Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)         # (Q,)
+    a = a_ref[0, 0, 0].astype(jnp.float32)           # (Q,) cumsum of dt*A
+    Bc = b_ref[0, 0, 0].astype(jnp.float32)          # (Q, N)
+    Cc = c_ref[0, 0, 0].astype(jnp.float32)          # (Q, N)
+
+    # L[i,j] = exp(a_i - a_j), i >= j (a is non-increasing => exponent <= 0)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = ii >= jj
+    diff = jnp.where(causal, a[:, None] - a[None, :], 0.0)  # mask pre-exp
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    xdt = x * dt[:, None]
+    y_intra = jax.lax.dot_general(scores * L, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(a_i) * C_i . state   (state: (N, P))
+    y_inter = jax.lax.dot_general(Cc, s_scr[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + y_inter * jnp.exp(a)[:, None]
+    o_ref[0, 0, 0] = y.astype(o_ref.dtype)
+
+    # state update: s = exp(a_Q) * s + sum_j exp(a_Q - a_j) B_j (x·dt)_j
+    decay_to_end = jnp.exp(a[-1] - a)                 # (Q,)
+    s_new = jax.lax.dot_general(Bc * decay_to_end[:, None], xdt,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s_scr[...] = jnp.exp(a[-1]) * s_scr[...] + s_new
+
+
+def ssd_scan_pallas(x, dt, a_cum, B_in, C_in, *, interpret: bool = False):
+    """x (B,H,nc,Q,P), dt/a_cum (B,H,nc,Q), B_in/C_in (B,H,nc,Q,N)
+    -> y (B,H,nc,Q,P).  a_cum = within-chunk cumsum of dt*A."""
+    B, H, nc, Q, P = x.shape
+    N = B_in.shape[-1]
+    grid = (B, H, nc)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a_cum, B_in, C_in)

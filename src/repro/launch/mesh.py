@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as functions (not module-level constants) so importing this module
+never touches JAX device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls these.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds the 2-island 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(n_pods: int = 1, data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (device count must already be forced)."""
+    if n_pods > 1:
+        return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

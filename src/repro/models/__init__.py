@@ -1,0 +1,3 @@
+"""Model substrate: attention, MoE, SSD, transformer families, registry."""
+from repro.models.registry import Model, build  # noqa: F401
+from repro.models.transformer import Ctx  # noqa: F401

@@ -1,0 +1,210 @@
+"""Shared model machinery: parameter metadata, sharding rules, norms, RoPE.
+
+Parameters are plain nested dicts of arrays.  A parallel tree of
+:class:`ParamMeta` (one per leaf) is the single source of truth for shapes,
+logical axes and initializers; PartitionSpecs, ShapeDtypeStructs and real
+initializations all derive from it.
+
+Logical axes -> mesh axes is resolved by a *rules* dict per run (Flax-style
+logical partitioning), so ZeRO stages and per-arch TP/SP plans are pure data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float | None = None            # stddev; None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_meta(fn: Callable[[ParamMeta], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_meta)
+
+
+def init_params(key: jax.Array, metas, dtype=jnp.float32):
+    """Materialize a parameter tree from its metadata tree."""
+    leaves, treedef = jax.tree.flatten(metas, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k, m: ParamMeta):
+        if m.init == "zeros":
+            return jnp.zeros(m.shape, dtype)
+        if m.init == "ones":
+            return jnp.ones(m.shape, dtype)
+        fan_in = m.shape[0] if len(m.shape) > 1 else m.shape[-1]
+        scale = m.scale if m.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, m.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [init_one(k, m) for k, m in zip(keys, leaves)])
+
+
+def shape_tree(metas, dtype):
+    """ShapeDtypeStruct tree (for eval_shape / dry-run lowering)."""
+    return tree_map_meta(lambda m: jax.ShapeDtypeStruct(m.shape, dtype), metas)
+
+
+def spec_tree(metas, rules: dict[str, Any]):
+    """PartitionSpec tree under a logical->mesh rules dict.
+
+    A rule value may be a mesh axis name, a tuple of axes, or None.  Dims
+    whose size is not divisible by the mapped mesh-axis product fall back to
+    replication (JAX rejects uneven shardings).
+    """
+    sizes = rules.get("_axis_sizes", {})
+
+    def one(m: ParamMeta):
+        parts = []
+        used: set[str] = set()
+        for dim, ax in zip(m.shape, m.axes):
+            ent = rules.get(ax) if ax else None
+            if ent is None:
+                parts.append(None)
+                continue
+            axes = (ent,) if isinstance(ent, str) else tuple(ent)
+            axes = tuple(a for a in axes if a and a not in used)
+            prod = 1
+            for a in axes:
+                prod *= sizes.get(a, 1)
+            if not axes or dim % prod != 0:
+                parts.append(None)
+                continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        return P(*parts)
+
+    return tree_map_meta(one, metas)
+
+
+def manual_only(spec: P, manual_axes: tuple[str, ...]) -> P:
+    """Project a PartitionSpec onto the manual axes (for shard_map in_specs)."""
+    def proj(ent):
+        if ent is None:
+            return None
+        axes = (ent,) if isinstance(ent, str) else tuple(ent)
+        kept = tuple(a for a in axes if a in manual_axes)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+    return P(*(proj(e) for e in spec))
+
+
+def auto_only(spec: P, manual_axes: tuple[str, ...]) -> P:
+    def proj(ent):
+        if ent is None:
+            return None
+        axes = (ent,) if isinstance(ent, str) else tuple(ent)
+        kept = tuple(a for a in axes if a not in manual_axes)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+    return P(*(proj(e) for e in spec))
+
+
+def make_rules(cfg: ModelConfig, mesh, zero_stage: int = 1) -> dict[str, Any]:
+    """Logical->mesh rules for one (arch, mesh, zero) combination.
+
+    TP plan: head-sharded attention when head counts divide the model axis,
+    sequence-parallel attention otherwise (DESIGN.md §4).  ZeRO-3 adds the
+    'data' axis onto the 'embed' dims (params gathered per layer in the scan
+    body through the HetCCL layer).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    fsdp = "data" if zero_stage >= 3 and "data" in sizes else None
+    heads_ok = cfg.n_heads > 0 and (cfg.n_heads % model_n == 0)
+    kv_ok = cfg.n_kv_heads > 0 and (cfg.n_kv_heads % model_n == 0)
+    rules: dict[str, Any] = {
+        "_axis_sizes": sizes,
+        "layers": None,
+        "group": None,
+        "embed": fsdp,
+        "mlp": "model",
+        "vocab": "model",
+        "q_heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head": None,
+        "experts": "model" if (cfg.n_experts and cfg.n_experts % model_n == 0) else None,
+        "expert_mlp": None if (cfg.n_experts and cfg.n_experts % model_n == 0) else "model",
+        "inner": "model",
+        "state": None,
+        "conv": None,
+        "scalar": None,
+    }
+    # sequence-parallel attention plan for non-divisible head counts:
+    rules["_attn_sp"] = bool(cfg.n_heads) and not heads_ok
+    rules["_zero_stage"] = zero_stage
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-5):
+    """f32 statistics and scaling, result cast back to x.dtype."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, sections: tuple[int, ...] = ()):
+    """Rotary embedding, split-half convention.
+
+    x: (..., S, H, hd).  positions: (..., S) int — or (3, ..., S) for M-RoPE
+    with ``sections`` giving how many frequency pairs each of the three
+    position streams (temporal/height/width) owns (qwen2-vl §M-RoPE).
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # (hd/2,)
+    if sections:
+        assert sum(sections) == hd // 2, (sections, hd)
+        # stream id per frequency pair; positions: (3, B, S)
+        stream = np.repeat(np.arange(len(sections)), sections)
+        pos = jnp.moveaxis(positions, 0, -1)              # (B, S, 3)
+        pos = jnp.take(pos, jnp.asarray(stream), axis=-1)  # (B, S, hd/2)
+        angles = pos.astype(jnp.float32) * freqs          # (B, S, hd/2)
+        angles = angles[..., None, :]                     # (B, S, 1, hd/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, hd/2)
+        angles = angles[..., None, :]                     # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts: top-k routing with capacity-buffer dispatch.
+
+Dispatch is sort-based: token/expert assignments are sorted by expert id and
+scattered into an (E, C, D) capacity buffer — no (T, E, C) one-hot tensor is
+ever materialized (memory O(E·C·D) instead of O(T·E·C)).  Tokens overflowing
+an expert's capacity are dropped (standard GShard semantics; the router aux
+loss keeps overflow rare).
+
+The expert GEMMs run as batched einsums over the capacity buffer on the
+reference path; on TPU the TACC registry dispatches to the grouped-matmul
+Pallas kernel (`repro.kernels.grouped_matmul`).
+
+Sharding: expert weight tensors are sharded over the 'model' axis on the
+expert dim when E divides it (moonshot: 64/16) and on the per-expert FFN dim
+otherwise (mixtral: 8 experts, d_ff 14336/16); XLA's SPMD partitioner inserts
+the expert-parallel all-to-all when resharding tokens to expert-owning ranks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tacc
+
+
+def _replicated(t):
+    """Pin a tensor replicated over the auto (model) axes.
+
+    The token-side dispatch/combine tensors must NOT inherit the expert
+    sharding: gathering from an expert-sharded capacity buffer makes XLA
+    emit partitioned gathers that all-reduce the top_k-times-expanded
+    (T*k, D) matrix (measured 6x wire inflation, EXPERIMENTS.md §Perf).
+    Replicating the (E, C, D) buffers costs one (E*C, D) all-gather instead.
+    """
+    try:
+        return jax.lax.with_sharding_constraint(t, P(*([None] * t.ndim)))
+    except Exception:
+        return t
+
+
+@tacc.register("expert_ffn", "cpu", default=True)
+def expert_ffn_ref(buf, w1, w3, w2):
+    """SwiGLU over the capacity buffer.  buf (E,C,D); w* (E,D,F)/(E,F,D).
+
+    The activation stays in the compute dtype: an f32 upcast here makes
+    XLA rewrite the dots to f32 and sink the convert through the ZeRO-3
+    weight all-gathers, doubling their wire bytes (silu is smooth; bf16 is
+    numerically fine and matches the Pallas kernel path)."""
+    h1 = jnp.einsum("ecd,edf->ecf", buf, w1)
+    h3 = jnp.einsum("ecd,edf->ecf", buf, w3)
+    h = jax.nn.silu(h1) * h3
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def moe_ffn(x, params, *, n_experts: int, top_k: int, capacity_factor: float,
+            router_weight_key: str = "router", expert_axis: str | None = None,
+            replicate_buffers: bool = True):
+    """x: (T, D) tokens -> (out (T, D), aux_metrics dict).
+
+    params: {"router": (D, E), "w1": (E, D, F), "w3": (E, D, F), "w2": (E, F, D)}
+    expert_axis: mesh axis the expert dim is sharded over (None -> per-expert
+    FFN-dim TP, the mixtral case).  The expert GEMM output is pinned to that
+    sharding before the combine gather — otherwise the SPMD partitioner
+    "satisfies" the replication constraint by gathering the weights and
+    computing all experts redundantly on every rank (measured on moonshot).
+    """
+    T, D = x.shape
+    E, k = n_experts, top_k
+    C = max(int(T * k * capacity_factor / E), 1)
+
+    logits = (x.astype(jnp.float32) @ params[router_weight_key].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_e = expert_idx.reshape(-1)                           # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    tok_of = order // k
+    counts = jnp.bincount(flat_e, length=E)                   # (E,)
+    offsets = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - offsets[sorted_e]               # rank within expert
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)         # drops -> scratch row
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].set(jnp.take(x, tok_of, axis=0), mode="drop")
+    buf = buf[:-1].reshape(E, C, D)
+    if replicate_buffers:
+        buf = _replicated(buf)
+
+    out_buf = tacc.dispatch("expert_ffn", buf, params["w1"], params["w3"],
+                            params["w2"])                     # (E, C, D)
+    if expert_axis:
+        try:
+            out_buf = jax.lax.with_sharding_constraint(
+                out_buf, P(expert_axis, None, None))
+        except Exception:
+            pass
+    out_flat = (_replicated(out_buf) if replicate_buffers else out_buf).reshape(E * C, D)
+
+    # ---- combine ------------------------------------------------------------
+    gathered = jnp.take(out_flat, jnp.minimum(slot, E * C - 1), axis=0)
+    gathered = gathered * keep[:, None].astype(gathered.dtype)
+    gates_sorted = gate_vals.reshape(-1)[order]
+    weighted = gathered * gates_sorted[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, D), jnp.float32).at[tok_of].add(
+        weighted.astype(jnp.float32)).astype(x.dtype)
+
+    # ---- aux losses (switch-style load balance + router z-loss) -------------
+    me = probs.mean(axis=0)                                   # avg prob per expert
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = one_hot_top1.mean(axis=0)                            # fraction routed
+    aux_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keep.mean()
+    return out, {"moe_aux": aux_loss, "moe_z": z_loss, "moe_dropped": dropped}

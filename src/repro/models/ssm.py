@@ -1,0 +1,146 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) in pure jnp.
+
+The chunked SSD algorithm: within a chunk the recurrence is materialized as a
+masked quadratic form (attention-like, runs on the MXU); across chunks a
+linear state recurrence is scanned.  The per-chunk quadratic part is the
+compute hot spot and has a Pallas kernel (`repro.kernels.ssd_scan`); this
+module is the reference/dry-run path, TACC-dispatched.
+
+Shapes: x (B,S,H,P) heads x headdim;  dt (B,S,H) (post-softplus);  A (H,)
+negative reals;  B_in/C_in (B,S,G,N) with H % G == 0;  D (H,).
+Since A<0 and dt>0 every exponent below is <= 0 — numerically safe in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tacc
+
+
+def _expand_groups(t, H):
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group H//G times."""
+    B, S, G, N = t.shape
+    return jnp.repeat(t, H // G, axis=2)
+
+
+@tacc.register("ssd_chunk", "cpu", default=True)
+def ssd_chunk_ref(xc, dtc, ac, Bc, Cc):
+    """One chunk's intra-chunk output + its state contribution.
+
+    xc (B,Q,H,P), dtc (B,Q,H), ac (B,Q,H) = cumsum of dt*A within chunk,
+    Bc/Cc (B,Q,H,N).  Returns (y_intra (B,Q,H,P), state (B,H,N,P), decay
+    (B,H) = exp(total chunk log-decay)).
+    """
+    af = ac.astype(jnp.float32)
+    # L[i,j] = exp(a_i - a_j) for i >= j.  The exponent is masked BEFORE the
+    # exp: for i < j it is positive and can overflow, and inf * 0 from a
+    # post-exp where() poisons the backward pass with NaNs.
+    diff = af[:, :, None] - af[:, None, :]                   # (B,Q,Q,H)
+    Q = af.shape[1]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    L = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    scores = jnp.einsum("bihn,bjhn->bijh", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    w = scores * L                                            # (B,Q,Q,H)
+    xdt = xc.astype(jnp.float32) * dtc.astype(jnp.float32)[..., None]
+    y_intra = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+    a_last = af[:, -1]                                        # (B,H)
+    decay_to_end = jnp.exp(a_last[:, None] - af)              # (B,Q,H)
+    state = jnp.einsum("bjhn,bjh,bjhp->bhnp", Bc.astype(jnp.float32),
+                       decay_to_end, xdt)
+    return y_intra, state, jnp.exp(a_last)
+
+
+def ssd_scan(x, dt, A, B_in, C_in, D, chunk: int, init_state=None):
+    """Full SSD over the sequence.  Returns (y (B,S,H,P), final_state).
+
+    final_state: (B,H,N,P) — the recurrent state after the last position
+    (used to seed decoding after prefill).
+    """
+    B, S, H, P = x.shape
+    N = B_in.shape[-1]
+    Bh = _expand_groups(B_in, H)
+    Ch = _expand_groups(C_in, H)
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    dA = dt.astype(jnp.float32) * A.astype(jnp.float32)       # (B,S,H), <= 0
+    rs = lambda t: t.reshape((B, nc, chunk) + t.shape[2:])
+    xc, dtc, dAc, Bc, Cc = map(rs, (x, dt, dA, Bh, Ch))
+    ac = jnp.cumsum(dAc, axis=2)                              # within-chunk cumsum
+
+    def per_chunk(args):
+        return tacc.dispatch("ssd_chunk", *args)
+
+    def body(carry, inp):
+        s_prev = carry                                        # (B,H,N,P)
+        xb, dtb, ab, Bb, Cb = inp
+        y_intra, s_local, decay = jax.checkpoint(per_chunk)((xb, dtb, ab, Bb, Cb))
+        # inter-chunk: y_i += exp(a_i) * C_i . s_prev
+        ein = jnp.exp(ab.astype(jnp.float32))                 # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", Cb.astype(jnp.float32), s_prev)
+        y = y_intra + y_inter * ein[..., None]
+        s_next = decay[:, :, None, None] * s_prev + s_local
+        return s_next, y
+
+    s0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    final_state, yc = jax.lax.scan(body, s0, (mv(xc), mv(dtc), mv(ac), mv(Bc), mv(Cc)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[:, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, B_in, C_in, D):
+    """One-token recurrence.  x (B,1,H,P), state (B,H,N,P) -> (y, new_state)."""
+    B, _, H, P = x.shape
+    Bh = _expand_groups(B_in, H)[:, 0]                        # (B,H,N)
+    Ch = _expand_groups(C_in, H)[:, 0]
+    dtf = dt.astype(jnp.float32)[:, 0]                        # (B,H)
+    xf = x.astype(jnp.float32)[:, 0]                          # (B,H,P)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))              # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32), xf * dtf[..., None])
+    new_state = decay[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y[:, None].astype(x.dtype), new_state
+
+
+def ssd_reference(x, dt, A, B_in, C_in, D, init_state=None):
+    """Sequential O(S) oracle: the plain recurrence, for tests."""
+    B, S, H, P = x.shape
+    N = B_in.shape[-1]
+    s = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        y, s = ssd_decode_step(s, x[:, t:t + 1], dt[:, t:t + 1], A,
+                               B_in[:, t:t + 1], C_in[:, t:t + 1], D)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), s
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (the short conv in the Mamba2 block)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w):
+    """x (B,S,C), w (W,C) depthwise causal -> (B,S,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_decode_step(conv_state, x_new, w):
+    """conv_state (B,W-1,C), x_new (B,1,C) -> (y (B,1,C), new_state)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_new], axis=1)     # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))[:, None]
+    return y.astype(x_new.dtype), window[:, 1:]

@@ -1,0 +1,473 @@
+"""Roofline analysis from compiled HLO.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on the v5e
+target:
+
+  compute   = dot_flops_per_chip            / PEAK_FLOPS
+  memory    = hbm_bytes_per_chip            / HBM_BW
+  collective= wire_bytes_per_chip           / ICI_BW
+
+Why not just ``compiled.cost_analysis()``: XLA's flop/byte counters count a
+while-loop *body once*, but scan-over-layers puts ~all compute inside while
+loops.  So this module is a small static analyzer over ``compiled.as_text()``:
+
+  * builds the computation call graph (entry -> while bodies -> fusions),
+  * multiplies each computation by its enclosing loops' trip counts (parsed
+    from the loop-condition constants),
+  * dot FLOPs  = 2 * |result| * |contracting dims| per `dot` op,
+  * HBM bytes  = sum of (operand + result) bytes of *top-level* ops — the
+    fusion-boundary model of TPU HBM traffic,
+  * wire bytes = ring-algorithm bytes per collective op
+    (all-reduce 2(g-1)/g * n, all-gather/reduce-scatter/all-to-all (g-1)/g * n
+    on the *full* logical buffer, collective-permute n).
+
+`cost_analysis()` numbers are also reported for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\)\s*->|\{)",
+                      re.MULTILINE)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    operands: list[str]
+    attrs: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _type_bytes(self.type_str)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its body lines.
+
+    HLO text layout: computation headers start at column 0
+    (``%name (params...) -> type {`` — possibly containing ``/*index=N*/``
+    comments inside tuple types), body lines are indented, ``}`` closes.
+    """
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        stripped = line.strip()
+        if cur is not None and "=" in stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _parse_ops(lines: list[str]) -> dict[str, Op]:
+    """Robust HLO op-line parser.
+
+    Handles tuple types with ``/*index=N*/`` comments and nested parens by
+    walking balanced delimiters instead of regexing the whole line.
+    """
+    ops: dict[str, Op] = {}
+    for ln in lines:
+        m = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*", ln)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = ln[m.end():].lstrip()
+        # --- type segment ---
+        if rest.startswith("("):                      # tuple type
+            depth = 0
+            end = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            type_str, rem = rest[:end], rest[end:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            type_str, rem = rest[:sp], rest[sp + 1:].lstrip()
+        m2 = re.match(r"([\w\-]+)\(", rem)
+        if not m2:
+            continue
+        kind = m2.group(1)
+        # --- operand list: balanced slice starting at the '(' ---
+        depth = 0
+        start = m2.end() - 1
+        end = start
+        for i in range(start, len(rem)):
+            ch = rem[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = rem[start + 1:end]
+        attrs = rem[end + 1:]
+        operands = [a.strip().lstrip("%") for a in _strip_args(args)]
+        ops[name] = Op(name, type_str, kind, operands, attrs)
+    return ops
+
+
+def _strip_args(args: str) -> list[str]:
+    """Top-level comma split of the operand list (operands are %names)."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o.split("=")[0] for o in out if o.strip()]
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)   # iota form
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _crosses_pod(attrs: str, pod_size: int) -> bool:
+    """True if the op's communication crosses the pod (island) boundary.
+
+    Handles explicit replica groups, the iota form (with optional
+    transpose), and collective-permute source/target pairs."""
+    if pod_size <= 0:
+        return False
+    m = re.search(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}", attrs)
+    if m:
+        for pm in re.finditer(r"\{(\d+),(\d+)\}", m.group(1)):
+            if int(pm.group(1)) // pod_size != int(pm.group(2)) // pod_size:
+                return True
+        return False
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                  r"(?:T\(([\d,]+)\))?", attrs)
+    if m:
+        G, S = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        import numpy as _np
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        groups = ids.reshape(G, S)
+        pods = groups // pod_size
+        return bool((pods != pods[:, :1]).any())
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        ids = [int(i) for i in m.group(1).split(",")]
+        return len({i // pod_size for i in ids}) > 1
+    return False
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0            # ring-model per-chip bytes on the wire
+    cross_pod_bytes: float = 0.0       # subset of wire_bytes crossing islands
+    operand_bytes: float = 0.0         # spec-literal: sum of operand sizes
+    per_collective: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    notes: list = dataclasses.field(default_factory=list)
+
+
+def analyze_hlo(hlo: str, n_devices: int, pod_size: int = 0) -> HLOStats:
+    """pod_size: devices per island (0 = single island; cross-island ops are
+    classified by replica-group membership and priced at DCI bandwidth)."""
+    comps = _split_computations(hlo)
+    parsed = {c: _parse_ops(lines) for c, lines in comps.items()}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = next(iter(comps))
+
+    stats = HLOStats()
+    mult_of: dict[str, float] = {}
+    fusion_bodies: set[str] = set()
+
+    def visit(comp: str, mult: float, fused: bool):
+        if comp not in parsed:
+            return
+        if fused:
+            fusion_bodies.add(comp)
+        if mult_of.get(comp, 0) >= mult:
+            return
+        mult_of[comp] = mult
+        ops = parsed[comp]
+        for op in ops.values():
+            if op.kind == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = _trip_count(comps.get(m.group(1), [])) if m else 1
+                stats.n_while += 1
+                if b:
+                    visit(b.group(1), mult * max(trips, 1), fused)
+                if m:
+                    visit(m.group(1), mult, fused)
+            elif op.kind in ("fusion", "call", "custom-call", "conditional",
+                             "map", "reduce", "sort", "scatter"):
+                inner_fused = fused or op.kind in (
+                    "fusion", "map", "reduce", "sort", "scatter")
+                for attr_key in ("calls", "to_apply", "branch_computations"):
+                    for cm in re.finditer(attr_key + r"=\{?%?([\w.\-]+)",
+                                          op.attrs):
+                        visit(cm.group(1), mult, inner_fused)
+
+    # pass 1: multipliers
+    visit(entry, 1.0, False)
+
+    # pass 2: accumulate
+    for comp, mult in mult_of.items():
+        ops = parsed[comp]
+        top_level = comp not in fusion_bodies
+        for op in ops.values():
+            if op.kind == "dot":
+                out_dims = _type_dims(op.type_str)
+                lhs = ops.get(op.operands[0]) if op.operands else None
+                k = 1
+                mdim = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", op.attrs)
+                if lhs is not None and mdim:
+                    ldims = _type_dims(lhs.type_str)
+                    for d in mdim.group(1).split(","):
+                        if int(d) < len(ldims):
+                            k *= ldims[int(d)]
+                n = 1
+                for d in out_dims:
+                    n *= d
+                stats.dot_flops += mult * 2.0 * n * k
+            if op.kind in _COLLECTIVES:
+                g = _group_size(op.attrs, n_devices)
+                out_b = op.out_bytes
+                if op.kind == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * out_b
+                    operand = out_b
+                elif op.kind == "all-gather":
+                    wire = (g - 1) / g * out_b
+                    operand = out_b / max(g, 1)
+                elif op.kind == "reduce-scatter":
+                    wire = (g - 1) * out_b
+                    operand = out_b * g
+                elif op.kind == "all-to-all":
+                    wire = (g - 1) / g * out_b
+                    operand = out_b
+                else:                                  # collective-permute
+                    wire = out_b
+                    operand = out_b
+                stats.wire_bytes += mult * wire
+                stats.operand_bytes += mult * operand
+                cross = _crosses_pod(op.attrs, pod_size)
+                if cross:
+                    stats.cross_pod_bytes += mult * wire
+                key = op.kind + ("/xpod" if cross else "")
+                agg = stats.per_collective.setdefault(
+                    key, {"count": 0, "wire_bytes": 0.0})
+                agg["count"] += mult
+                agg["wire_bytes"] += mult * wire
+            # HBM traffic: fusion boundaries (top-level ops move data).
+            # Excluded: copy/bitcast/reshape/tuple (aliased or layout-only on
+            # TPU), iota/broadcast (generated on the fly), anything inside a
+            # fusion body (stays in registers/VMEM).
+            if not top_level:
+                continue
+            if op.kind in ("fusion", "dot", "custom-call", "scatter",
+                           "reduce", "sort", "convolution", "concatenate",
+                           "select", "add", "multiply", "subtract", "divide",
+                           "exponential", "convert", "transpose", "pad") or \
+                    op.kind in _COLLECTIVES:
+                in_b = 0
+                sliced_reads = (_fusion_slice_reads(op, parsed)
+                                if op.kind == "fusion" else {})
+                for i, o in enumerate(op.operands):
+                    src = ops.get(o)
+                    if src is None:
+                        continue
+                    b = _type_bytes(src.type_str)
+                    if i in sliced_reads:
+                        b = min(b, sliced_reads[i])
+                    in_b += b
+                stats.hbm_bytes += mult * (op.out_bytes + in_b)
+            elif op.kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region ~= output
+                stats.hbm_bytes += mult * 2 * op.out_bytes
+            elif op.kind == "dynamic-update-slice":
+                # with buffer aliasing: read-modify-write of the update region
+                upd = ops.get(op.operands[1]) if len(op.operands) > 1 else None
+                b = _type_bytes(upd.type_str) if upd is not None else op.out_bytes
+                stats.hbm_bytes += mult * 2 * b
+    return stats
+
+
+def _fusion_slice_reads(op: Op, parsed: dict[str, dict[str, Op]]) -> dict[int, float]:
+    """For a fusion op, map operand index -> read bytes when the called
+    computation only slices that parameter (dynamic-slice of stacked layer
+    weights reads one layer, not the whole stack)."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    if not m or m.group(1) not in parsed:
+        return {}
+    inner = parsed[m.group(1)]
+    param_idx: dict[str, int] = {}
+    for o in inner.values():
+        if o.kind == "parameter":
+            pm = re.match(r"\s*(\d+)", ",".join(o.operands) if o.operands else "")
+            if pm:
+                param_idx[o.name] = int(pm.group(1))
+    if not param_idx:
+        return {}
+    consumers: dict[str, list[Op]] = {}
+    for o in inner.values():
+        for name in o.operands:
+            consumers.setdefault(name, []).append(o)
+    out: dict[int, float] = {}
+    for pname, idx in param_idx.items():
+        cons = consumers.get(pname, [])
+        if cons and all(c.kind in ("dynamic-slice", "slice") for c in cons):
+            out[idx] = sum(c.out_bytes for c in cons)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    model_flops_per_step: float         # analytic (6·N·D etc.), global
+    stats: HLOStats
+    xla_flops: float                    # cost_analysis (loop-once), per chip
+    xla_bytes: float
+    memory_per_device: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.stats.dot_flops / hw.PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.stats.hbm_bytes / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        """Intra-island bytes at ICI speed + cross-island bytes at DCI speed
+        (serial upper bound; the overlap-aware step bound is max-of-terms)."""
+        intra = self.stats.wire_bytes - self.stats.cross_pod_bytes
+        return intra / hw.ICI_BW + self.stats.cross_pod_bytes / hw.DCI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap bound: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (per-chip HLO dot flops × chips)."""
+        total_hw = self.stats.dot_flops * self.n_devices
+        return self.model_flops_per_step / total_hw if total_hw else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flops / (chips × peak × step time)."""
+        denom = self.n_devices * hw.PEAK_FLOPS * self.step_s
+        return self.model_flops_per_step / denom if denom else float("nan")
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "devices": self.n_devices,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_per_step,
+            "hlo_dot_flops_per_chip": self.stats.dot_flops,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "wire_bytes_per_chip": self.stats.wire_bytes,
+            "cross_pod_bytes_per_chip": self.stats.cross_pod_bytes,
+            "operand_bytes_per_chip": self.stats.operand_bytes,
+            "hbm_bytes_per_chip": self.stats.hbm_bytes,
+            "per_collective": self.stats.per_collective,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+            "memory_per_device": self.memory_per_device,
+        }

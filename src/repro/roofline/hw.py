@@ -1,0 +1,9 @@
+"""Roofline hardware constants (TPU v5e target, from the task spec)."""
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+HBM_BYTES = 16e9           # capacity per chip
+DCI_BW = 10e9              # bytes/s per chip across the pod boundary
+                           # (inter-pod DCI ~ 1/5 of an ICI link; cross-island
+                           # wire is the scarce resource HetCCL economizes)

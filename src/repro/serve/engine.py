@@ -1,0 +1,157 @@
+"""Serving: pjit prefill/decode programs + a simple continuous batcher.
+
+Serving runs fully-auto pjit (no manual axes): decode has no cross-pod
+collectives when the request batch is sharded over ('pod','data') — each
+island serves its shard independently, which is exactly the deployment HetCCL
+targets for inference (islands meet only at the load-balancer).  TP
+collectives stay inside the pod ("vendor-local").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Ctx, Model
+from repro.models.common import make_rules, spec_tree, shape_tree
+from repro.models.transformer import cache_metas  # noqa: F401  (re-export)
+
+
+def serve_rules(cfg: ModelConfig, mesh, batch: int, seq_len: int) -> dict:
+    """make_rules + cache placement policy (DESIGN.md §4).
+
+    cbatch: DP axes when the batch divides them; cseq: DP axes for batch-1
+    long-context, else 'model' when the KV heads cannot shard over it.
+    """
+    rules = make_rules(cfg, mesh, zero_stage=1)
+    sizes = rules["_axis_sizes"]
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_n = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    model_n = sizes.get("model", 1)
+    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_n == 0
+    rules["cbatch"] = dp if (dp and batch % dp_n == 0 and batch >= dp_n) else None
+    cache_seq = min(seq_len, cfg.window) if cfg.window else seq_len
+    if rules["cbatch"] is None and dp and cache_seq % dp_n == 0:
+        rules["cseq"] = dp                  # batch-1 long context: shard time
+    elif not kv_ok and cache_seq % model_n == 0:
+        rules["cseq"] = "model"
+    else:
+        rules["cseq"] = None
+    rules["frames"] = None
+    return rules
+
+
+@dataclasses.dataclass
+class ServePrograms:
+    model: Model
+    mesh: Any
+    rules: dict
+    prefill_fn: Any
+    decode_fn: Any
+    param_shardings: Any
+    cache_shardings: Any
+    batch_shardings: Any
+
+    def init_cache(self, batch: int, max_len: int):
+        metas = self.model.cache_metas(batch, max_len)
+        zeros = jax.tree.map(
+            lambda m: jnp.zeros(m.shape, jnp.dtype(self.model.cfg.dtype)
+                                if len(m.shape) else jnp.int32),
+            metas, is_leaf=lambda x: hasattr(x, "axes"))
+        return jax.device_put(zeros, self.cache_shardings)
+
+
+def make_serve_programs(model: Model, mesh, batch: int, seq_len: int,
+                        max_len: int | None = None) -> ServePrograms:
+    cfg = model.cfg
+    max_len = max_len or seq_len
+    rules = serve_rules(cfg, mesh, batch, max_len)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ctx = Ctx(rules=rules, manual=False, dp_axes=dp or ("data",))
+
+    def named(t):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+
+    pspecs = named(model.param_specs(rules))
+    cmetas = model.cache_metas(batch, max_len)
+    cspecs = named(spec_tree(cmetas, rules))
+    bspec = rules["cbatch"]
+    batch_specs = {"tokens": NamedSharding(mesh, P(bspec, None))}
+    if cfg.family == "encdec":
+        batch_specs["frames"] = NamedSharding(mesh, P(bspec, None, None))
+    if cfg.family == "vlm":
+        batch_specs["mrope"] = NamedSharding(mesh, P(None, bspec, None))
+    logits_spec = NamedSharding(mesh, P(bspec, None, rules.get("vocab")))
+
+    prefill_fn = jax.jit(
+        lambda p, b: model.prefill(p, b, ctx, max_len=max_len),
+        in_shardings=(pspecs, batch_specs),
+        out_shardings=(logits_spec, cspecs))
+
+    decode_fn = jax.jit(
+        lambda p, c, t: model.decode(p, c, t, ctx),
+        in_shardings=(pspecs, cspecs, NamedSharding(mesh, P(bspec, None))),
+        out_shardings=(logits_spec, cspecs),
+        donate_argnums=(1,))
+
+    return ServePrograms(model=model, mesh=mesh, rules=rules,
+                         prefill_fn=prefill_fn, decode_fn=decode_fn,
+                         param_shardings=pspecs, cache_shardings=cspecs,
+                         batch_shardings=batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# A minimal continuous batcher (example-level serving driver)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+class Batcher:
+    """Fixed-slot batcher: pads prompts to a common length, prefillls the
+    batch, then decodes greedily until every request hits max_new."""
+
+    def __init__(self, progs: ServePrograms, params, batch_slots: int,
+                 prompt_len: int, max_len: int):
+        self.p = progs
+        self.params = params
+        self.slots = batch_slots
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        done: list[Request] = []
+        for i in range(0, len(requests), self.slots):
+            group = requests[i:i + self.slots]
+            while len(group) < self.slots:
+                group.append(Request(-1, np.zeros(1, np.int32), 1))
+            toks = np.zeros((self.slots, self.prompt_len), np.int32)
+            for j, r in enumerate(group):
+                s = min(len(r.prompt), self.prompt_len)
+                toks[j, -s:] = r.prompt[:s]
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.p.model.cfg.family == "vlm":
+                pos = jnp.broadcast_to(jnp.arange(self.prompt_len)[None, None],
+                                       (3, self.slots, self.prompt_len)).astype(jnp.int32)
+                batch["mrope"] = pos
+            logits, cache = self.p.prefill_fn(self.params, batch)
+            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            n_new = max(r.max_new for r in group)
+            for _ in range(n_new):
+                for j, r in enumerate(group):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(cur[j, 0]))
+                logits, cache = self.p.decode_fn(self.params, cache, cur)
+                cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            done.extend(r for r in group if r.uid >= 0)
+        return done

@@ -1,0 +1,105 @@
+"""Fault tolerance: supervised training loop with checkpoint/restart,
+failure injection, straggler detection, and elastic re-planning.
+
+At 1000+-node scale the failure model is: a pod (island) drops, the job is
+restarted by the cluster scheduler on the surviving/replacement pods, and
+training must resume bit-exact from the last checkpoint — possibly on a
+different mesh (elastic).  This module implements the control plane:
+
+  run_supervised(...)   — step loop with retry-on-failure + periodic async
+                          checkpoints + deterministic data resume;
+  StragglerMonitor      — per-step EMA timing; flags pods whose profiled
+                          throughput drifted (thermal throttling etc.), which
+                          triggers re-profiling -> new balance plan (the
+                          paper's "online re-profiling" future work, App. A);
+  replan(...)           — elastic re-balance when the pod set changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.balance import HetPlan, PodProfile, make_plan
+from repro.train import checkpoint as ckpt_mod
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EMA of step time; flags drift beyond ``tolerance`` (e.g. 20%)."""
+
+    alpha: float = 0.1
+    tolerance: float = 0.2
+    _ema: float | None = None
+
+    def observe(self, step_time: float) -> bool:
+        if self._ema is None:
+            self._ema = step_time
+            return False
+        drifted = step_time > self._ema * (1 + self.tolerance)
+        self._ema = (1 - self.alpha) * self._ema + self.alpha * step_time
+        return drifted
+
+
+def replan(old_plan: HetPlan, profiles: list[PodProfile]) -> HetPlan:
+    """Rebalance after pod-set or throughput change (elastic scaling)."""
+    total = old_plan.total_micro
+    return make_plan(profiles, total, old_plan.micro_batch)
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
+                   ckpt_every: int = 50, n_steps: int = 100,
+                   state_shardings=None, fail_at: int | None = None,
+                   max_restarts: int = 3, monitor: StragglerMonitor | None = None,
+                   log_every: int = 10, metrics_cb: Callable | None = None):
+    """Run ``n_steps`` with checkpointing and automatic restart.
+
+    ``batches``: callable step -> batch (deterministic, seekable).
+    ``fail_at``: inject one failure at that step (tests the recovery path).
+    Returns (final_state, history list of metric dicts).
+    """
+    history = []
+    start = ckpt_mod.latest_step(ckpt_dir)
+    step = 0
+    if start is not None:
+        state = ckpt_mod.restore(ckpt_dir, start, state, state_shardings)
+        step = start
+    restarts = 0
+    injected = {"done": False}
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            batch = batches(step)
+            if fail_at is not None and step == fail_at and not injected["done"]:
+                injected["done"] = True
+                raise InjectedFailure(f"injected failure at step {step}")
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            if monitor is not None and monitor.observe(dt):
+                metrics = {**metrics, "straggler_flag": True}
+            history.append({"step": step, **{k: float(np.asarray(v))
+                                             for k, v in metrics.items()
+                                             if not isinstance(v, bool)}})
+            if metrics_cb:
+                metrics_cb(step, history[-1])
+            step += 1
+            if step % ckpt_every == 0 or step == n_steps:
+                ckpt_mod.save(ckpt_dir, step, state)
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            last = ckpt_mod.latest_step(ckpt_dir)
+            if last is None:
+                step = 0            # restart from scratch (no ckpt yet)
+                continue
+            state = ckpt_mod.restore(ckpt_dir, last, state, state_shardings)
+            step = last
+    ckpt_mod.wait_pending()
+    return state, history

@@ -1,0 +1,61 @@
+"""Workload balancer properties (hypothesis) + paper-formula checks."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import (HetPlan, PodProfile, imbalance, make_plan,
+                                uniform_plan)
+
+speeds = st.lists(st.floats(min_value=0.05, max_value=100.0), min_size=1,
+                  max_size=8)
+
+
+@given(speeds=speeds, total=st.integers(2, 64))
+@settings(max_examples=200, deadline=None)
+def test_plan_conserves_total_micro(speeds, total):
+    profiles = [PodProfile(f"p{i}", s) for i, s in enumerate(speeds)]
+    total = max(total, len(speeds))
+    plan = make_plan(profiles, total, micro_batch=2)
+    assert sum(plan.micro_per_pod) == total
+    assert all(m >= 1 for m in plan.micro_per_pod)
+    assert plan.n_micro_max == max(plan.micro_per_pod)
+
+
+@given(speeds=speeds, total=st.integers(4, 64))
+@settings(max_examples=200, deadline=None)
+def test_plan_proportionality(speeds, total):
+    """b_i = B·s_i/Σs_j within rounding, up to the min-1-micro floor: pods
+    forced up to the minimum take their deficit from proportional pods."""
+    profiles = [PodProfile(f"p{i}", s) for i, s in enumerate(speeds)]
+    total = max(total, len(speeds))
+    plan = make_plan(profiles, total, micro_batch=1)
+    ideal = total * np.asarray(speeds) / np.sum(speeds)
+    n_floor = int(np.sum(ideal < 1.0))        # pods lifted to the minimum
+    for got, want in zip(plan.micro_per_pod, ideal):
+        assert got >= np.floor(want) - 1 - n_floor or got == 1
+        assert got <= np.ceil(want) + 1 + n_floor
+
+
+@given(ratio=st.floats(1.0, 8.0), total=st.integers(8, 64))
+@settings(max_examples=100, deadline=None)
+def test_balanced_beats_uniform_imbalance(ratio, total):
+    """The paper's claim (§4.5): proportional assignment equalizes b_i/s_i.
+    Balanced imbalance factor <= uniform's."""
+    total -= total % 2
+    profiles = [PodProfile("fast", ratio), PodProfile("slow", 1.0)]
+    bal = make_plan(profiles, total, 1)
+    uni = uniform_plan(2, total, 1)
+    assert imbalance(bal, profiles) <= imbalance(uni, profiles) + 1e-9
+
+
+def test_paper_ratio_two_to_one():
+    """Paper F.2: NVIDIA profiled ~2x AMD -> micro-batch ratio ~1:2."""
+    plan = make_plan([PodProfile("nvidia", 2.0), PodProfile("amd", 1.0)], 12, 1)
+    assert plan.micro_per_pod == (8, 4)
+
+
+def test_live_mask_shape_and_weights():
+    plan = HetPlan(("a", "b"), (3, 1), 3, 2)
+    m = plan.live_mask()
+    assert m.shape == (2, 3)
+    assert m.sum() == 4
+    np.testing.assert_allclose(plan.weights, (0.75, 0.25))

@@ -1,0 +1,148 @@
+"""HetCCL collective semantics: every hier op must equal its flat/native
+equivalent, and the differentiable FSDP gather must have the right adjoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as C
+from repro.core import hetccl
+
+rng = np.random.RandomState(0)
+
+
+def run(mesh, fn, x, in_spec, out_spec):
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                       axis_names={"pod", "data"}, check_vma=False)
+    return np.asarray(jax.jit(sm)(x))
+
+
+def test_ring_reduce_scatter_matches_psum_scatter(mesh3):
+    x = rng.randn(8, 6, 5).astype(np.float32)
+    got = run(mesh3, lambda v: C.ring_reduce_scatter(v, "pod"), x,
+              P(("pod", "data")), P(("pod", "data")))
+    want = run(mesh3, lambda v: jax.lax.psum_scatter(
+        v, "pod", scatter_dimension=0, tiled=True), x,
+        P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_ring_all_gather_matches_all_gather(mesh3):
+    x = rng.randn(8, 7).astype(np.float32)
+    got = run(mesh3, lambda v: C.ring_all_gather(v, "pod"), x,
+              P(("pod", "data")), P("data"))
+    want = run(mesh3, lambda v: jax.lax.all_gather(v, "pod", axis=0, tiled=True),
+               x, P(("pod", "data")), P("data"))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_ring_all_reduce_matches_psum(mesh3):
+    x = rng.randn(2 * 5, 3).astype(np.float32)
+    got = run(mesh3, lambda v: C.ring_all_reduce(v, "pod"), x, P("pod"), P("pod"))
+    want = run(mesh3, lambda v: jax.lax.psum(v, "pod"), x, P("pod"), P("pod"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(37, 3), (8,), (4, 4, 4)])
+def test_hier_all_reduce_matches_flat(mesh3, shape):
+    W = 4  # pod*data ranks
+    x = rng.randn(W, *shape).astype(np.float32)
+
+    def hier(v):
+        return C.hier_all_reduce(v[0], ("data",), "pod")[None]
+
+    def flat(v):
+        return jax.lax.psum(v[0], ("pod", "data"))[None]
+
+    got = run(mesh3, hier, x, P(("pod", "data")), P(("pod", "data")))
+    want = run(mesh3, flat, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hier_all_gather_pod_major_order(mesh3):
+    x = rng.randn(4 * 2, 3).astype(np.float32)
+    got = run(mesh3, lambda v: C.hier_all_gather(v, ("data",), "pod"), x,
+              P(("pod", "data")), P(None))
+    want = run(mesh3, lambda v: C.flat_all_gather(v, ("data",), "pod"), x,
+               P(("pod", "data")), P(None))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_hier_all_to_all_matches_flat(mesh3):
+    x = rng.randn(4, 4 * 3, 5).astype(np.float32)
+
+    def h(v):
+        return C.hier_all_to_all(v[0], ("data",), "pod")[None]
+
+    def f(v):
+        return C.flat_all_to_all(v[0], ("data",), "pod")[None]
+
+    got = run(mesh3, h, x, P(("pod", "data")), P(("pod", "data")))
+    want = run(mesh3, f, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_broadcast_and_reduce(mesh3):
+    x = rng.randn(4, 6).astype(np.float32)
+    got = run(mesh3, lambda v: C.hier_broadcast(v[0], ("data",), "pod", root=0)[None],
+              x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, np.broadcast_to(x[0], x.shape), atol=1e-6)
+    red = run(mesh3, lambda v: C.hier_reduce(v[0], ("data",), "pod", root=0)[None],
+              x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(red[0], x.sum(0), rtol=1e-5)
+    assert np.allclose(red[1:], 0)
+
+
+def test_fsdp_all_gather_adjoint(mesh3):
+    x = rng.randn(2 * 4, 3).astype(np.float32)
+
+    def grad_fn(v):
+        def loss(u):
+            y = C.fsdp_all_gather(u, "data", 0)
+            return jnp.sum(y ** 2) / jax.lax.axis_size("data")
+        return jax.grad(loss)(v)
+
+    got = run(mesh3, grad_fn, x, P("data"), P("data"))
+    np.testing.assert_allclose(got, 2 * x, rtol=1e-5)
+
+
+def test_tree_all_reduce_bucketing(mesh3):
+    tree = {"a": rng.randn(4, 11).astype(np.float32),
+            "b": rng.randn(4, 3, 5).astype(np.float32)}
+    cfg = hetccl.HetCCLConfig(mode="hier", local_axes=("data",),
+                              pod_axis="pod", bucket_bytes=64)
+
+    def f(a, b):
+        out = hetccl.tree_all_reduce({"a": a[0], "b": b[0]}, cfg)
+        return out["a"][None], out["b"][None]
+
+    sm = jax.shard_map(f, mesh=mesh3,
+                       in_specs=(P(("pod", "data")), P(("pod", "data"))),
+                       out_specs=(P(("pod", "data")), P(("pod", "data"))),
+                       axis_names={"pod", "data"}, check_vma=False)
+    ga, gb = jax.jit(sm)(tree["a"][:, None], tree["b"][:, None])
+    np.testing.assert_allclose(np.asarray(ga)[0, 0], tree["a"].sum(0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb)[0, 0], tree["b"].sum(0), rtol=1e-5)
+
+
+def test_cross_dtype_compression(mesh3):
+    """Cross-pod stage compressed to bf16: result close to exact sum."""
+    x = rng.randn(4, 64).astype(np.float32)
+
+    def f(v):
+        return C.hier_all_reduce(v[0], ("data",), "pod",
+                                 cross_dtype=jnp.bfloat16)[None]
+
+    got = run(mesh3, f, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got[0], x.sum(0), rtol=2e-2, atol=2e-2)
+
+
+def test_install_swaps_backend(mesh3):
+    """The LD_PRELOAD analogue: install() changes the default variant."""
+    from repro.core import tacc
+    prev = hetccl.install(hetccl.HetCCLConfig(mode="hier", pod_axis="pod"))
+    assert tacc.get_default("all_reduce") == "hier"
+    hetccl.install(hetccl.HetCCLConfig(mode="flat", pod_axis=None))
+    assert tacc.get_default("all_reduce") == "flat"
+    hetccl.install(prev)

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel bodies execute in Python on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+rng = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("bidir", 0),
+                                         ("causal", 64)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,d", [(2, 4, 2, 256, 64), (1, 3, 1, 128, 32)])
+def test_flash_attention_sweep(kind, window, dtype, B, Hq, Hkv, S, d):
+    q = (rng.randn(B, Hq, S, d) * 0.5).astype(np.float32)
+    k = (rng.randn(B, Hkv, S, d) * 0.5).astype(np.float32)
+    v = (rng.randn(B, Hkv, S, d) * 0.5).astype(np.float32)
+    qj, kj, vj = (jnp.asarray(t).astype(dtype) for t in (q, k, v))
+    got = flash_attention_fwd(qj, kj, vj, kind=kind, window=window,
+                              bq=128, bk=128, interpret=True)
+    want = ref.attention(qj, kj, vj, kind=kind, window=window)
+    atol = 3e-4 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_attention_k_len():
+    B, H, S, d = 1, 2, 256, 64
+    q, k, v = (jnp.asarray(rng.randn(B, H, S, d), jnp.float32) for _ in range(3))
+    got = flash_attention_fwd(q, k, v, kind="bidir", k_len=77, interpret=True)
+    want = ref.attention(q, k, v, kind="bidir", k_len=77)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+@pytest.mark.parametrize("G,M,K,N", [(4, 200, 96, 160), (1, 128, 128, 128),
+                                     (8, 64, 300, 48)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(G, M, K, N, dtype):
+    x = jnp.asarray(rng.randn(G, M, K), jnp.float32).astype(dtype)
+    w = jnp.asarray(rng.randn(G, K, N) * 0.1, jnp.float32).astype(dtype)
+    got = ops.grouped_matmul(x, w, interpret=True)
+    want = ref.grouped_matmul(x, w)
+    atol = 1e-3 if dtype == np.float32 else 1.5e-1
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=3e-2)
+
+
+@pytest.mark.parametrize("B,H,nc,Q,P,N", [(2, 3, 4, 64, 32, 16),
+                                          (1, 2, 8, 32, 16, 8)])
+def test_ssd_scan_sweep(B, H, nc, Q, P, N):
+    x = jnp.asarray(rng.randn(B, H, nc, Q, P) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(B, H, nc, Q)) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.randn(H)), jnp.float32)
+    a_cum = jnp.cumsum(dt * A[None, :, None, None], axis=3)
+    Bi = jnp.asarray(rng.randn(B, H, nc, Q, N) * 0.5, jnp.float32)
+    Ci = jnp.asarray(rng.randn(B, H, nc, Q, N) * 0.5, jnp.float32)
+    got = ssd_scan_pallas(x, dt, a_cum, Bi, Ci, interpret=True)
+    want = ref.ssd_scan(x, dt, a_cum, Bi, Ci)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunked_matches_sequential_recurrence():
+    """The chunked SSD algorithm == the plain O(S) recurrence."""
+    from repro.models import ssm as ssm_mod
+    B, S, H, P, N = 2, 96, 4, 16, 8
+    x = jnp.asarray(rng.randn(B, S, H, P) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(B, S, H)) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.randn(H)), jnp.float32)
+    Bi = jnp.asarray(rng.randn(B, S, 1, N) * 0.5, jnp.float32)   # G=1 groups
+    Ci = jnp.asarray(rng.randn(B, S, 1, N) * 0.5, jnp.float32)
+    D = jnp.asarray(rng.randn(H), jnp.float32)
+    y_c, s_c = ssm_mod.ssd_scan(x, dt, A, Bi, Ci, D, chunk=32)
+    y_s, s_s = ssm_mod.ssd_reference(x, dt, A, Bi, Ci, D)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_s), atol=2e-3)
+
+
+@pytest.mark.parametrize("n,dtype_in", [(1000, jnp.bfloat16), (4096, jnp.float32),
+                                        (257, jnp.bfloat16)])
+def test_collective_reduce_sweep(n, dtype_in):
+    a = jnp.asarray(rng.randn(n), jnp.float32)
+    b = jnp.asarray(rng.randn(n), jnp.float32).astype(dtype_in)
+    got = ops.collective_reduce(a, b, interpret=True)
+    want = ref.collective_reduce(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_attention_chunked_matches_dense():
+    """The model's chunked online-softmax path == dense oracle."""
+    from repro.models.attention import chunked_attention, dense_reference
+    B, S, Hq, Hkv, d = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.randn(B, S, Hq, d) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, Hkv, d) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Hkv, d) * 0.5, jnp.float32)
+    for kind, w in [("causal", 0), ("bidir", 0), ("causal", 17)]:
+        got = chunked_attention(q, k, v, kind=kind, window=w, chunk=48)
+        want = dense_reference(q, k, v, kind=kind, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+def test_window_decode_attention_matches_full():
+    """Rolling-window cache decode == full-cache SWA decode."""
+    from repro.models.attention import (chunked_attention, window_cache_update,
+                                        window_decode_attention)
+    B, Hkv, Hq, d, W = 1, 2, 4, 16, 8
+    S = 20
+    k_all = jnp.asarray(rng.randn(B, S, Hkv, d) * 0.5, jnp.float32)
+    v_all = jnp.asarray(rng.randn(B, S, Hkv, d) * 0.5, jnp.float32)
+    # build the rolling cache by replaying all steps
+    ck = jnp.zeros((B, W, Hkv, d))
+    cv = jnp.zeros((B, W, Hkv, d))
+    for t in range(S):
+        ck, cv = window_cache_update(ck, cv, k_all[:, t:t+1], v_all[:, t:t+1], t)
+    q = jnp.asarray(rng.randn(B, 1, Hq, d) * 0.5, jnp.float32)
+    got = window_decode_attention(q, ck, cv, S - 1, W)
+    want = chunked_attention(q, k_all, v_all, kind="causal", window=W,
+                             q_offset=S - 1, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)

@@ -1,0 +1,71 @@
+"""Roofline HLO analyzer calibration: known-FLOP programs must be counted
+exactly, loop multipliers applied, collective wire bytes matched."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.roofline.analysis import analyze_hlo
+
+
+def test_single_matmul_flops_exact():
+    M, K, N = 256, 512, 128
+
+    def f(a, b):
+        return a @ b
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                         jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text(), 1)
+    assert st.dot_flops == 2 * M * K * N
+
+
+def test_scan_loop_multiplier():
+    L, M, K = 5, 64, 64
+
+    def f(ws, x):
+        def body(h, w):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((L, K, K), jnp.float32),
+                         jax.ShapeDtypeStruct((M, K), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text(), 1)
+    assert st.dot_flops == L * 2 * M * K * K
+    assert st.n_while >= 1
+
+
+def test_collective_wire_bytes(mesh2):
+    D = 4096
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(x, P(None))
+
+    with jax.set_mesh(mesh2):
+        c = jax.jit(
+            f,
+            in_shardings=NamedSharding(mesh2, P("model")),
+            out_shardings=NamedSharding(mesh2, P(None)),
+        ).lower(jax.ShapeDtypeStruct((D,), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text(), 8)
+    # all-gather of D f32 over g=4: ring wire = (g-1)/g * D * 4 bytes
+    assert "all-gather" in st.per_collective
+    got = st.per_collective["all-gather"]["wire_bytes"]
+    assert abs(got - (3 / 4) * D * 4) / (D * 4) < 0.01
+
+
+def test_hbm_excludes_fusion_internals():
+    """Elementwise chains fuse; HBM bytes ~ inputs + outputs, not per-op."""
+    N = 1 << 16
+
+    def f(x):
+        y = x
+        for _ in range(10):
+            y = jnp.tanh(y) * 1.0001
+        return y
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((N,), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text(), 1)
+    assert st.hbm_bytes <= 4 * N * 4     # in + out (+ slack), not 20x

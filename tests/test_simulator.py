@@ -1,0 +1,135 @@
+"""The α-β simulator must reproduce the paper's qualitative + quantitative
+claims from its own hardware constants (Table 1)."""
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+from repro.core.balance import uniform_plan
+from repro.core.topology import (ClusterSpec, PodSpec, V100_PCIE, W7800,
+                                 H100_NVLINK, MI300X_XGMI, paper_cluster)
+
+
+def _workload(name="gpt-355m", zero=1, micro_batch=4):
+    from repro.configs import get_config
+    cfg = get_config(name)
+    n = cfg.n_params()
+    return sim.TrainWorkload(name=name, flops_per_token=6.0 * n,
+                             param_bytes=2.0 * n, seq_len=1024,
+                             micro_batch=micro_batch, zero_stage=zero)
+
+
+def test_het_bounded_by_slower_endpoint():
+    """Fig 8: HET p2p bandwidth ~= the slower homogeneous endpoint."""
+    nv = PodSpec("nvidia", V100_PCIE, 4)
+    amd = PodSpec("amd", W7800, 4)
+    nbytes = 1 << 30
+    bw_het = sim.p2p_bandwidth(nbytes, nv, amd, 25e9)
+    bw_nv = sim.p2p_bandwidth(nbytes, nv, nv, 25e9)
+    bw_amd = sim.p2p_bandwidth(nbytes, amd, amd, 25e9)
+    assert bw_het <= min(bw_nv, bw_amd) * 1.001
+    assert bw_het >= min(bw_nv, bw_amd) * 0.9
+
+
+def test_rdma_ablation_fig16():
+    """Fig 16: host-staged path is much slower than RDMA at large sizes."""
+    nv = PodSpec("nvidia", V100_PCIE, 4)
+    amd = PodSpec("amd", W7800, 4, rdma=False)
+    nbytes = 1 << 30
+    t_rdma = sim.p2p_time(nbytes, nv, PodSpec("amd", W7800, 4), 25e9)
+    t_host = sim.p2p_time(nbytes, nv, amd, 25e9, rdma=False)
+    assert t_host > 1.5 * t_rdma
+
+
+def test_collectives_scale_stably_fig7():
+    """Fig 7: HetCCL(HET) keeps stable bus bandwidth from 8 to 16 GPUs."""
+    nbytes = 1 << 30
+    bw8 = sim.collective_busbw("all_reduce", nbytes, paper_cluster(4, 4), "hier")
+    bw16 = sim.collective_busbw("all_reduce", nbytes, paper_cluster(8, 8), "hier")
+    assert bw16 > 0.5 * bw8          # stable, not collapsing
+
+
+def test_hier_beats_flat_in_heterogeneous():
+    """The core design point: delegating the local stage to the native
+    library beats a naive flat ring bound by the slowest endpoint.  On the
+    paper's PCIe testbed both are endpoint-bound (and flat is *infeasible*
+    cross-vendor — HetCCL's existence claim); the win is structural on
+    fast-local/slow-cross islands (TPU pods, NVLink nodes)."""
+    from repro.core.topology import tpu_multipod
+    c = tpu_multipod(2, 64)
+    nbytes = 1 << 30
+    t_hier = sim.collective_time("all_reduce", nbytes, c, "hier")
+    t_flat = sim.collective_time("all_reduce", nbytes, c, "flat")
+    assert t_hier < 0.5 * t_flat, (t_hier, t_flat)
+    # paper cluster: hier within ~10% of the (hypothetical) flat ring
+    cp = paper_cluster(8, 8)
+    th = sim.collective_time("all_reduce", 1 << 30, cp, "hier")
+    tf = sim.collective_time("all_reduce", 1 << 30, cp, "flat")
+    assert th < 1.2 * tf
+
+
+def test_mpi_crossover_fig13_14():
+    """Fig 13/14: MPI wins at small messages, HetCCL at large; HetCCL beats
+    MPI all-reduce at 1GB (host-staged reduction)."""
+    c = paper_cluster(8, 8)
+    small, large = 4 << 10, 1 << 30
+    assert sim.mpi_collective_time("all_reduce", small, c) < \
+        sim.collective_time("all_reduce", small, c, "hier")
+    assert sim.collective_time("all_reduce", large, c, "hier") < \
+        sim.mpi_collective_time("all_reduce", large, c)
+
+
+def test_training_speedups_fig9():
+    """Fig 9: het (8A+8N) speedup up to ~1.48x vs NVIDIA-only and ~2.97x vs
+    AMD-only; efficiency <= 100% and >= ~80% on the paper's models."""
+    w = _workload("gpt-355m", zero=1)
+    het = paper_cluster(8, 8)
+    nv = paper_cluster(8, 0)
+    amd = paper_cluster(0, 8)
+    total_micro = 16
+    tp_het = sim.throughput_tokens_per_s(
+        w, het, sim.balanced_plan(w, het, total_micro), "hier")
+    tp_nv = sim.throughput_tokens_per_s(w, nv, uniform_plan(1, 8, w.micro_batch), "flat")
+    tp_amd = sim.throughput_tokens_per_s(w, amd, uniform_plan(1, 8, w.micro_batch), "flat")
+    s_vs_nv = tp_het / tp_nv
+    s_vs_amd = tp_het / tp_amd
+    assert 1.1 < s_vs_nv < 1.55, s_vs_nv          # paper: up to 1.48x
+    assert 1.8 < s_vs_amd < 3.1, s_vs_amd         # paper: up to 2.97x
+    eff = sim.efficiency(w, het, [nv, amd], total_micro)
+    assert 0.75 <= eff <= 1.0, eff                # paper: ~90% avg, up to 97%
+
+
+def test_zero_stage_efficiency_gap_small():
+    """§5.3: ZeRO-1 vs ZeRO-3 efficiency difference is negligible."""
+    het = paper_cluster(8, 8)
+    nv, amd = paper_cluster(8, 0), paper_cluster(0, 8)
+    e1 = sim.efficiency(_workload(zero=1), het, [nv, amd], 16)
+    e3 = sim.efficiency(_workload(zero=3), het, [nv, amd], 16)
+    assert abs(e1 - e3) < 0.12
+
+
+def test_balancing_speedup_table4():
+    """Table 4: balanced vs uniform speedup in a 1.05-1.4x band, decreasing
+    with model size (max-feasible batch shrinks, comm fraction grows)."""
+    from benchmarks.paper_figs import table4_balancing
+    ups = [d for _, _, d in table4_balancing()]
+    assert all(1.0 <= u < 1.4 for u in ups), ups
+    assert ups[0] > ups[-1], ups                  # larger model -> smaller gain
+
+
+def test_highend_no_overhead_fig15():
+    """Fig 15: on NVLink/xGMI systems the hier path reduces to the native
+    single-island collective (no added cost)."""
+    h100 = ClusterSpec((PodSpec("h100", H100_NVLINK, 8),))
+    t_native = sim.collective_time("all_reduce", 1 << 30, h100, "flat")
+    t_het = sim.collective_time("all_reduce", 1 << 30, h100, "hier")
+    assert abs(t_native - t_het) / t_native < 1e-6
+
+
+def test_scales_to_1000_chips():
+    """Design target: hierarchical collectives stay near-flat in cost as
+    islands are added (cross stage operates on 1/n_local shards)."""
+    from repro.core.topology import TPU_V5E, tpu_multipod
+    nbytes = 1 << 30
+    t4 = sim.collective_time("all_reduce", nbytes, tpu_multipod(4, 256), "hier")
+    t16 = sim.collective_time("all_reduce", nbytes, tpu_multipod(16, 256), "hier")
+    assert t16 < 2.0 * t4

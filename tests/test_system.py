@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the system: the paper's headline claims
+exercised on real (reduced) training runs, plus TACC dispatch wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers kernel TACC entries)
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core import tacc
+from repro.core.balance import uniform_plan
+from repro.data.pipeline import DataPipeline, synthetic_batch
+from repro.models import build
+from repro.train.trainer import make_train_program
+
+CFG = get_config("smollm-135m").reduced()
+MODEL = build(CFG)
+SEQ = 64
+
+
+def _losses(mesh, mode, zero, steps=20, lr=1e-3, seed=7):
+    """Paper-like regime: fresh data every step, moderate lr (the paper's
+    Fig 12 is 1K steps on WikiText; chaotic memorization regimes amplify
+    benign reduction-order drift far beyond what real training sees)."""
+    rc = RunConfig(zero_stage=zero, collective_mode=mode, learning_rate=lr,
+                   param_dtype="float32")
+    prog = make_train_program(MODEL, mesh, rc, uniform_plan(2, 2, 1))
+    state = prog.init_fn(jax.random.PRNGKey(seed))
+    pipe = DataPipeline(seed=seed, plan=prog.plan, dp_world=prog.dp_world(),
+                        seq_len=SEQ, vocab=CFG.vocab)
+    out = []
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        state, m = prog.step_fn(state, b)
+        out.append(float(m["loss"]))
+    return out
+
+
+def test_convergence_identical_across_backends(mesh3):
+    """Paper §5.3 / Fig 12: swapping the collective backend (the LD_PRELOAD
+    trick) does not change convergence — relative final-loss error within
+    the bf16 tolerance the paper uses (7e-3)."""
+    flat = _losses(mesh3, "flat", 1, steps=10)
+    hier = _losses(mesh3, "hier", 1, steps=10)
+    rel = abs(flat[-1] - hier[-1]) / abs(flat[-1])
+    assert rel < 7e-3, (flat[-1], hier[-1])
+    assert flat[-1] < flat[0], "training must make progress"
+    # and the whole trajectories overlap closely (Fig 12)
+    np.testing.assert_allclose(flat, hier, rtol=7e-3)
+
+
+def test_zero3_convergence_matches_zero1(mesh3):
+    z1 = _losses(mesh3, "hier", 1, steps=10)
+    z3 = _losses(mesh3, "hier", 3, steps=10)
+    np.testing.assert_allclose(z1, z3, rtol=1e-2, atol=1e-2)
+
+
+def test_tacc_table_is_populated():
+    """Appendix C analogue: the function table lists all registered ops."""
+    t = tacc.table()
+    for op in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+               "broadcast", "reduce", "attention", "expert_ffn",
+               "collective_reduce", "ssd_chunk"):
+        assert op in t, op
+    assert {"flat", "hier"} <= set(t["all_reduce"])
+    assert {"cpu", "tpu", "interpret"} <= set(t["attention"])
+
+
+def test_tacc_platform_auto():
+    assert tacc.set_platform_auto() == "cpu"    # this container
+    # platform resolution picks the cpu impl for attention
+    fn = tacc.resolve("attention")
+    assert "chunked" in fn.__name__
+
+
+def test_data_pipeline_deterministic_and_seekable():
+    p1 = synthetic_batch(0, 5, 2, 4, 16, 100)
+    p2 = synthetic_batch(0, 5, 2, 4, 16, 100)
+    np.testing.assert_array_equal(p1["tokens"], p2["tokens"])
+    p3 = synthetic_batch(0, 6, 2, 4, 16, 100)
+    assert not np.array_equal(p1["tokens"], p3["tokens"])
+    # labels are next-token shifted
+    full = synthetic_batch(0, 5, 1, 1, 16, 100)
+    np.testing.assert_array_equal(full["tokens"][0, 0, 1:],
+                                  full["labels"][0, 0, :-1])
+
+
+def test_serve_engine_batched_requests(mesh2):
+    """Deliverable (b): serve a small model with batched requests."""
+    from repro.serve.engine import Batcher, Request, make_serve_programs
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    progs = make_serve_programs(model, mesh2, batch=2, seq_len=16, max_len=32)
+    with jax.set_mesh(mesh2):
+        params = jax.jit(
+            lambda k: model.init(k),
+            out_shardings=progs.param_shardings)(jax.random.PRNGKey(0))
+        b = Batcher(progs, params, batch_slots=2, prompt_len=16, max_len=32)
+        rng = np.random.RandomState(0)
+        reqs = [Request(i, rng.randint(0, cfg.vocab, 10).astype(np.int32), 5)
+                for i in range(3)]
+        done = b.run(reqs)
+    assert len(done) == 3
+    assert all(len(r.out) == 5 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)

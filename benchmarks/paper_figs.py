@@ -181,6 +181,38 @@ def scale_1000_chips():
     return rows
 
 
+def pipelined_vs_hier():
+    """Beyond-paper: multi-channel pipelined schedule vs serial hier.
+
+    derived = speedup of mode="pipelined" (chunked local/cross overlap +
+    bidirectional cross rings) over mode="hier", per op/size/cluster; plus a
+    channel-count sweep at 1 GiB showing the fill/drain-vs-α tradeoff.
+    """
+    rows = []
+    clusters = {"paper16": paper_cluster(8, 8), "tpu2x64": tpu_multipod(2, 64),
+                "tpu4x256": tpu_multipod(4, 256)}
+    for cname, c in clusters.items():
+        for op in ("all_reduce", "all_gather", "reduce_scatter"):
+            for size in (1 << 20, 1 << 25, 1 << 30):
+                t_h = sim.collective_time(op, size, c, "hier")
+                t_p = sim.collective_time(op, size, c, "pipelined")
+                rows.append((f"pipelined/{op}/{cname}/{size}B", t_p * 1e6,
+                             t_h / t_p))
+    c = tpu_multipod(2, 64)
+    for nch in (1, 2, 4, 8, 16, 64, 256):
+        t = sim.pipelined_channel_time("all_reduce", GB, c, nch)
+        rows.append((f"pipelined/channel_sweep/n{nch}", t * 1e6, GB / t / 1e9))
+    for w in ("zero1", "zero3"):
+        wl = _workload("llama-1b", zero=1 if w == "zero1" else 3)
+        het = paper_cluster(8, 8)
+        plan = sim.balanced_plan(wl, het, 8)
+        tp_h = sim.throughput_tokens_per_s(wl, het, plan, "hier")
+        tp_p = sim.throughput_tokens_per_s(wl, het, plan, "pipelined")
+        rows.append((f"pipelined/train/{w}/llama-1b", 0.0, tp_p / tp_h))
+    return rows
+
+
 ALL = (fig7_collectives, fig8_p2p, fig9_training_speedup,
        fig11_other_collectives, fig13_14_mpi, fig15_highend,
-       fig16_rdma_ablation, table4_balancing, scale_1000_chips)
+       fig16_rdma_ablation, table4_balancing, scale_1000_chips,
+       pipelined_vs_hier)

@@ -3,7 +3,8 @@ overrides and report the three roofline terms + top collective contributors.
 
     PYTHONPATH=src python -m benchmarks.perf_iterations --arch X --shape Y \
         [--mesh single|multi] [--zero 1|3] [--micro-tokens 8192] \
-        [--seq-shard-acts] [--cross-dtype bfloat16] [--mode flat|hier] [--top 8]
+        [--seq-shard-acts] [--cross-dtype bfloat16] \
+        [--mode flat|hier|pipelined] [--n-channels 4] [--top 8]
 
 Each invocation = one measurement of the hypothesis->change->measure loop;
 results are appended to results/perf_log.jsonl.
@@ -24,7 +25,8 @@ import numpy as np
 from repro.configs import SHAPES, get_config
 from repro.configs.base import RunConfig
 from repro.core.balance import uniform_plan
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
+                               pod_size_of)
 from repro.models import build
 from repro.roofline import analysis as A
 from repro.roofline.analysis import Roofline, analyze_hlo
@@ -60,14 +62,12 @@ def top_collectives(hlo: str, n_devices: int, top: int = 8):
 
     visit(entry, 1.0)
     for comp, mult in mult_of.items():
+        duplex = A.cp_duplex_discounts(parsed[comp])
         for op in parsed[comp].values():
             if op.kind in A._COLLECTIVES:
                 g = A._group_size(op.attrs, n_devices)
-                wire = {"all-reduce": 2 * (g - 1) / g,
-                        "all-gather": (g - 1) / g,
-                        "reduce-scatter": (g - 1) * 1.0,
-                        "all-to-all": (g - 1) / g,
-                        "collective-permute": 1.0}[op.kind] * op.out_bytes
+                wire, _ = A.wire_and_operand_bytes(
+                    op.kind, g, op.out_bytes, duplex.get(op.name, 1.0))
                 meta = re.search(r'op_name="([^"]+)"', op.attrs)
                 rows.append((mult * wire, op.kind, g, mult, op.type_str[:38],
                              (meta.group(1) if meta else "")[-72:]))
@@ -82,7 +82,11 @@ def main():
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--zero", type=int, default=3)
     ap.add_argument("--micro-tokens", type=int, default=8192)
-    ap.add_argument("--mode", default=None, help="flat|hier collective mode")
+    ap.add_argument("--mode", default=None,
+                    help="flat|hier|pipelined collective mode")
+    ap.add_argument("--n-channels", type=int, default=4,
+                    help="pipeline channels of --mode pipelined")
+    ap.add_argument("--pipeline-chunk-bytes", type=int, default=None)
     ap.add_argument("--cross-dtype", default=None)
     ap.add_argument("--seq-shard-acts", action="store_true",
                     help="shard the residual stream's seq dim over 'model'")
@@ -130,15 +134,17 @@ def main():
         import repro.train.trainer as tr
         tr.make_rules = patched
 
-    n_pods = 2 if multi else 1
-    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
-                      for a in ("pod", "data")]))
+    sizes = mesh_axis_sizes(mesh)
+    n_pods = sizes.get("pod", 1)
+    dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
     per_dev = shape.global_batch // dp
     mb = max(1, min(per_dev, args.micro_tokens // shape.seq_len))
     n_micro = per_dev // mb
     plan = uniform_plan(n_pods, n_micro * n_pods, mb)
     rc = RunConfig(zero_stage=args.zero,
                    collective_mode=args.mode or ("hier" if multi else "flat"),
+                   n_channels=args.n_channels,
+                   pipeline_chunk_bytes=args.pipeline_chunk_bytes,
                    cross_dtype=args.cross_dtype)
     batch_sds, extra = _train_batch_sds(cfg, shape, mesh, plan)
     prog = make_train_program(model, mesh, rc, plan, extra_batch_specs=extra)
@@ -147,7 +153,7 @@ def main():
     compiled = prog.step_fn.lower(state_sds, batch_sds).compile()
     t_compile = time.time() - t0
     hlo = compiled.as_text()
-    stats = analyze_hlo(hlo, n_dev, pod_size=256 if multi else 0)
+    stats = analyze_hlo(hlo, n_dev, pod_size=pod_size_of(mesh))
     roof = Roofline(arch=args.arch, shape=args.shape, mesh=args.mesh,
                     n_devices=n_dev,
                     model_flops_per_step=model_flops_spec(cfg, shape),
@@ -156,7 +162,8 @@ def main():
                         "temp_bytes": compiled.memory_analysis().temp_size_in_bytes})
     rec = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
            "mesh": args.mesh, "zero": args.zero, "n_micro": n_micro, "mb": mb,
-           "mode": rc.collective_mode, "cross_dtype": args.cross_dtype,
+           "mode": rc.collective_mode, "n_channels": args.n_channels,
+           "cross_dtype": args.cross_dtype,
            "seq_shard_acts": args.seq_shard_acts,
            "cross_pod_GB": stats.cross_pod_bytes / 1e9,
            "compute_s": roof.compute_s, "memory_s": roof.memory_s,

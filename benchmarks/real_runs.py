@@ -16,9 +16,8 @@ from jax.sharding import PartitionSpec as P
 
 
 def _mesh3():
-    from jax.sharding import AxisType
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    from repro.core import compat
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def _time(fn, *args, iters=5):
@@ -45,7 +44,8 @@ def collectives_microbench():
             return C.hier_all_reduce(v[0], ("data",), "pod")[None]
 
         for tag, fn in (("flat", flat), ("hier", hier)):
-            sm = jax.jit(jax.shard_map(
+            from repro.core import compat
+            sm = jax.jit(compat.shard_map(
                 fn, mesh=mesh, in_specs=P(("pod", "data")),
                 out_specs=P(("pod", "data")),
                 axis_names={"pod", "data"}, check_vma=False))

@@ -13,9 +13,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
-
 from repro.configs import get_config
+from repro.core import compat
 from repro.configs.base import RunConfig
 from repro.core.balance import uniform_plan
 from repro.data.pipeline import DataPipeline
@@ -24,8 +23,7 @@ from repro.train.trainer import make_train_program
 
 
 def main():
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config("smollm-135m").reduced()
     model = build(cfg)
     rc = RunConfig(zero_stage=1, collective_mode="hier",   # <- the backend knob

@@ -14,9 +14,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
-
 from repro.configs import get_config
+from repro.core import compat
 from repro.models import build
 from repro.serve.engine import Batcher, Request, make_serve_programs
 
@@ -29,14 +28,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config(args.arch).reduced()
     model = build(cfg)
     max_len = args.prompt_len + args.max_new
     progs = make_serve_programs(model, mesh, batch=4,
                                 seq_len=args.prompt_len, max_len=max_len)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = jax.jit(lambda k: model.init(k),
                          out_shardings=progs.param_shardings)(
             jax.random.PRNGKey(0))

@@ -17,9 +17,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
-
 from repro.configs import get_config
+from repro.core import compat
 from repro.configs.base import RunConfig
 from repro.core.balance import PodProfile, make_plan
 from repro.data.pipeline import DataPipeline
@@ -41,8 +40,7 @@ def main():
                     help="inject a failure at this step (recovery demo)")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = cfg.reduced()

@@ -157,7 +157,9 @@ class RunConfig:
     """Parallelism + training knobs for one run."""
 
     zero_stage: int = 1              # 1 or 3 (the paper evaluates both)
-    collective_mode: str = "auto"    # flat | hier | auto (HetCCL)
+    collective_mode: str = "auto"    # flat | hier | pipelined | auto (HetCCL)
+    n_channels: int = 4              # pipeline channels of "pipelined" mode
+    pipeline_chunk_bytes: int | None = None   # alternative channel sizing
     n_micro: int = 1                 # gradient-accumulation micro-steps
     remat: bool = True
     learning_rate: float = 3e-4

@@ -23,8 +23,10 @@ the axes being reduced over, created with ``check_vma=False`` (ring ppermutes
 produce values the VMA type system cannot prove invariant).
 
 All ops are registered in the TACC function table under variants ``"flat"``
-(single-stage native) and ``"hier"`` (two-stage HetCCL) so the whole backend
-can be swapped at runtime (paper §4.4).
+(single-stage native), ``"hier"`` (two-stage HetCCL), and — for the
+bandwidth-dominant ops — ``"pipelined"`` (multi-channel two-stage with the
+vendor-local stage overlapping the cross-island ring; DESIGN.md §2) so the
+whole backend can be swapped at runtime (paper §4.4).
 """
 from __future__ import annotations
 
@@ -35,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat  # noqa: F401  (provides lax.axis_size on 0.4.x)
 from repro.core import tacc
 
 Axis = str | Sequence[str]
@@ -55,10 +58,34 @@ def axis_world(axes: Axis) -> int:
 # Ring primitives over a single axis (the "RDMA" stage).
 # Wire traffic per rank: reduce_scatter / all_gather move (n-1)/n * bytes,
 # all_reduce 2(n-1)/n * bytes — bandwidth-optimal, like NCCL's ring.
+# Each takes a ``direction`` (+1 clockwise / -1 counterclockwise); the
+# ``*_bidir`` variants run both directions concurrently on half payloads,
+# halving the per-link byte-hops on full-duplex fabrics (H2 §4 / Holmes §5
+# style multi-channel rings).
 # ---------------------------------------------------------------------------
 
 def _fwd_perm(n: int) -> list[tuple[int, int]]:
     return [(j, (j + 1) % n) for j in range(n)]
+
+
+def _ring_perm(n: int, direction: int) -> list[tuple[int, int]]:
+    return [(j, (j + direction) % n) for j in range(n)]
+
+
+def _ring_rs_chunks(chunks: jax.Array, axis: str, direction: int = 1) -> jax.Array:
+    """chunks: (n, c, ...) -> this rank's reduced chunk (c, ...)."""
+    n = chunks.shape[0]
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n, direction)
+
+    def body(s, acc):
+        send_idx = (idx - direction * (s + 1)) % n
+        blk = jnp.take(acc, send_idx, axis=0)
+        rblk = lax.ppermute(blk, axis, perm)
+        return acc.at[(idx - direction * (s + 2)) % n].add(rblk)
+
+    acc = lax.fori_loop(0, n - 1, body, chunks)
+    return jnp.take(acc, idx, axis=0)
 
 
 def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
@@ -71,17 +98,41 @@ def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
         return x
     assert x.shape[0] % n == 0, (x.shape, n)
     chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return _ring_rs_chunks(chunks, axis, 1)
+
+
+def ring_reduce_scatter_bidir(x: jax.Array, axis: str) -> jax.Array:
+    """Bidirectional ring reduce-scatter: the payload's two halves travel
+    clockwise and counterclockwise simultaneously.
+
+    Same result as :func:`ring_reduce_scatter`; each direction's ring carries
+    half the bytes over its own full-duplex lane, so per-link wire time is
+    halved (step/latency count unchanged).  Both directions' ppermutes sit in
+    one loop body with no data dependence — the roofline analyzer and the
+    device scheduler both see the opposite-direction transfers as concurrent.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    assert x.shape[0] % n == 0, (x.shape, n)
+    chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    c = chunks.shape[1]
+    if c < 2:
+        return _ring_rs_chunks(chunks, axis, 1)
+    h = c // 2
     idx = lax.axis_index(axis)
-    perm = _fwd_perm(n)
+    perm_f, perm_b = _ring_perm(n, 1), _ring_perm(n, -1)
 
-    def body(s, acc):
-        send_idx = (idx - s - 1) % n
-        blk = jnp.take(acc, send_idx, axis=0)
-        rblk = lax.ppermute(blk, axis, perm)
-        return acc.at[(idx - s - 2) % n].add(rblk)
+    def body(s, carry):
+        af, ab = carry
+        rf = lax.ppermute(jnp.take(af, (idx - s - 1) % n, axis=0), axis, perm_f)
+        rb = lax.ppermute(jnp.take(ab, (idx + s + 1) % n, axis=0), axis, perm_b)
+        return (af.at[(idx - s - 2) % n].add(rf),
+                ab.at[(idx + s + 2) % n].add(rb))
 
-    acc = lax.fori_loop(0, n - 1, body, chunks)
-    return jnp.take(acc, idx, axis=0)
+    fwd, bwd = lax.fori_loop(0, n - 1, body, (chunks[:, :h], chunks[:, h:]))
+    return jnp.concatenate([jnp.take(fwd, idx, axis=0),
+                            jnp.take(bwd, idx, axis=0)], axis=0)
 
 
 def ring_reduce_scatter_mixed(x: jax.Array, axis: str,
@@ -113,6 +164,23 @@ def ring_reduce_scatter_mixed(x: jax.Array, axis: str,
     return jnp.take(acc, idx, axis=0)
 
 
+def _ring_ag_stack(x: jax.Array, axis: str, direction: int = 1) -> jax.Array:
+    """x: (c, ...) per-rank chunk -> (n, c, ...) rank-stacked."""
+    n = lax.axis_size(axis)
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n, direction)
+    out = jnp.zeros((n,) + x.shape, x.dtype).at[idx].set(x)
+
+    def body(s, state):
+        acc, cur = state
+        cur = lax.ppermute(cur, axis, perm)   # chunk of rank (idx - d*(s+1))
+        acc = acc.at[(idx - direction * (s + 1)) % n].set(cur)
+        return acc, cur
+
+    out, _ = lax.fori_loop(0, n - 1, body, (out, x))
+    return out
+
+
 def ring_all_gather(x: jax.Array, axis: str) -> jax.Array:
     """x: (c, ...) per-rank chunk -> (n*c, ...) rank-major, all ranks equal.
 
@@ -121,18 +189,42 @@ def ring_all_gather(x: jax.Array, axis: str) -> jax.Array:
     n = lax.axis_size(axis)
     if n == 1:
         return x
-    idx = lax.axis_index(axis)
-    perm = _fwd_perm(n)
-    out = jnp.zeros((n,) + x.shape, x.dtype).at[idx].set(x)
-
-    def body(s, state):
-        acc, cur = state
-        cur = lax.ppermute(cur, axis, perm)          # chunk of rank (idx - s - 1)
-        acc = acc.at[(idx - s - 1) % n].set(cur)
-        return acc, cur
-
-    out, _ = lax.fori_loop(0, n - 1, body, (out, x))
+    out = _ring_ag_stack(x, axis, 1)
     return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def ring_all_gather_bidir(x: jax.Array, axis: str) -> jax.Array:
+    """Bidirectional ring all-gather (halves per-link byte-hops).
+
+    Same result as :func:`ring_all_gather`: each half of every rank's chunk
+    circulates in its own direction, so a link carries (n-1)/n of *half* the
+    buffer per direction, concurrently (one fused loop body, like
+    :func:`ring_reduce_scatter_bidir`).
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    c = x.shape[0]
+    if c < 2:
+        return ring_all_gather(x, axis)
+    h = c // 2
+    idx = lax.axis_index(axis)
+    perm_f, perm_b = _ring_perm(n, 1), _ring_perm(n, -1)
+    xf, xb = x[:h], x[h:]
+    accf = jnp.zeros((n,) + xf.shape, x.dtype).at[idx].set(xf)
+    accb = jnp.zeros((n,) + xb.shape, x.dtype).at[idx].set(xb)
+
+    def body(s, carry):
+        accf, curf, accb, curb = carry
+        curf = lax.ppermute(curf, axis, perm_f)   # chunk of rank (idx - s - 1)
+        curb = lax.ppermute(curb, axis, perm_b)   # chunk of rank (idx + s + 1)
+        accf = accf.at[(idx - s - 1) % n].set(curf)
+        accb = accb.at[(idx + s + 1) % n].set(curb)
+        return accf, curf, accb, curb
+
+    accf, _, accb, _ = lax.fori_loop(0, n - 1, body, (accf, xf, accb, xb))
+    out = jnp.concatenate([accf, accb], axis=1)       # (n, c, ...)
+    return out.reshape((n * c,) + x.shape[1:])
 
 
 def ring_all_reduce(x: jax.Array, axis: str) -> jax.Array:
@@ -380,6 +472,178 @@ def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0, *
         flat_idx = flat_idx + lax.axis_index(a) * stride
         stride *= lax.axis_size(a)
     return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (multi-channel) hierarchical collectives.
+#
+# The hier_* ops above run their two stages serially over one monolithic
+# payload: the cross-pod link idles during the vendor-local stage and vice
+# versa.  The pipelined variants split the payload into ``n_channels`` chunks
+# and software-pipeline the schedule so chunk k's cross-pod ring overlaps
+# chunk k+1's local native stage (H2 / Holmes style).  The cross stage also
+# uses the bidirectional rings, halving per-link byte-hops.
+# ---------------------------------------------------------------------------
+
+def software_pipeline(chunks: list, stages: Sequence) -> list:
+    """Run every chunk through ``stages`` on a skewed wavefront schedule.
+
+    Wave t computes stage (t - k) of chunk k for every live chunk, and pins
+    each wave together with an ``optimization_barrier`` so XLA's scheduler
+    can overlap the wave's stage executions (chunk k's cross-pod ring runs
+    while chunk k+1 is in its local stage) but cannot re-serialize them
+    across waves.  Semantically the identity schedule.
+    """
+    C, S = len(chunks), len(stages)
+    vals = list(chunks)
+    for t in range(C + S - 1):
+        live = [k for k in range(C) if 0 <= t - k < S]
+        outs = [stages[t - k](vals[k]) for k in live]
+        if len(outs) > 1:
+            outs = list(lax.optimization_barrier(tuple(outs)))
+        for k, o in zip(live, outs):
+            vals[k] = o
+    return vals
+
+
+MAX_CHANNELS = 16    # schedule-unroll guard: each channel emits its own stages
+
+
+def resolve_channels(nbytes: int, n_channels: int,
+                     chunk_bytes: int | None, limit: int) -> int:
+    """Channel count for a payload: explicit chunk size wins, else
+    ``n_channels``; clamped to [1, min(limit, MAX_CHANNELS)] where ``limit``
+    is the payload granularity (can't split finer than one element/row) and
+    MAX_CHANNELS bounds the unrolled wavefront the schedule emits."""
+    c = -(-nbytes // chunk_bytes) if chunk_bytes else n_channels
+    return max(1, min(c, limit, MAX_CHANNELS))
+
+
+@tacc.register("all_reduce", "pipelined")
+def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
+                         cross_dtype=None, n_channels: int = 4,
+                         pipeline_chunk_bytes: int | None = None,
+                         bidir: bool = True, **_):
+    """AllReduce as a C-channel pipeline of (local RS -> cross ring -> local AG).
+
+    Equals :func:`hier_all_reduce` numerically; chunk k's cross-pod stage is
+    scheduled alongside chunk k+1's local reduce-scatter and chunk k-1's
+    local all-gather, so the slow cross link streams continuously.
+    """
+    local = _axes_tuple(axes)
+    if not pod_axis:
+        return lax.psum(x, local) if local else x
+    D = 1
+    for a in local:
+        D *= lax.axis_size(a)
+    P = lax.axis_size(pod_axis)
+    shape, dtype = x.shape, x.dtype
+    C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
+                         pipeline_chunk_bytes, max(x.size // (D * P), 1))
+    flat, pad = _flatten_pad(x, C * D * P)
+    n = flat.shape[0]
+    chunks = list(jnp.split(flat, C)) if C > 1 else [flat]
+    cross_ring_rs = ring_reduce_scatter_bidir if bidir else ring_reduce_scatter
+    cross_ring_ag = ring_all_gather_bidir if bidir else ring_all_gather
+
+    def local_rs(c):
+        if D == 1:
+            return c
+        return lax.psum_scatter(c.reshape(D, c.shape[0] // D), local,
+                                scatter_dimension=0, tiled=False)
+
+    def cross(c):
+        if cross_dtype is not None and cross_dtype != dtype:
+            c = c.astype(cross_dtype)
+        c = cross_ring_ag(cross_ring_rs(c, pod_axis), pod_axis)
+        if cross_dtype is not None and cross_dtype != dtype:
+            c = c.astype(dtype)
+        return c
+
+    def local_ag(c):
+        if D == 1:
+            return c
+        return lax.all_gather(c, local, axis=0, tiled=False).reshape(-1)
+
+    outs = software_pipeline(chunks, (local_rs, cross, local_ag))
+    flat = jnp.concatenate(outs) if C > 1 else outs[0]
+    if pad:
+        flat = flat[:n - pad]
+    return flat.reshape(shape)
+
+
+@tacc.register("all_gather", "pipelined")
+def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
+                         dim: int = 0, tiled: bool = True,
+                         n_channels: int = 4,
+                         pipeline_chunk_bytes: int | None = None,
+                         bidir: bool = True, **_):
+    """Two-stage gather, pipelined: chunk k's cross-pod ring gather overlaps
+    chunk k+1's local native gather.  Pod-major result order (same as hier)."""
+    if not pod_axis:
+        return flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
+    if not tiled:
+        # stacked (new-axis) layout: chunk re-interleaving doesn't apply —
+        # keep the serial hier schedule so the output matches flat/hier.
+        return hier_all_gather(x, axes, pod_axis, dim=dim, tiled=False)
+    xm = jnp.moveaxis(x, dim, 0) if dim != 0 else x
+    c0 = xm.shape[0]
+    C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
+                         pipeline_chunk_bytes, c0)
+    chunks = list(jnp.array_split(xm, C)) if C > 1 else [xm]
+    cross_ring_ag = ring_all_gather_bidir if bidir else ring_all_gather
+
+    def local_ag(c):
+        return flat_all_gather(c, axes, None, dim=0, tiled=True)
+
+    def cross(c):
+        return cross_ring_ag(c, pod_axis)
+
+    outs = software_pipeline(chunks, (local_ag, cross))
+    if C > 1:
+        # chunk j holds [rank0 chunk-j, rank1 chunk-j, ...]; re-interleave to
+        # rank-major: (W, cj, ...) stacked along the chunk dim.
+        W = axis_world(_axes_tuple(axes)) * lax.axis_size(pod_axis)
+        parts = [o.reshape((W, o.shape[0] // W) + o.shape[1:]) for o in outs]
+        out = jnp.concatenate(parts, axis=1)
+        out = out.reshape((W * c0,) + xm.shape[1:])
+    else:
+        out = outs[0]
+    return jnp.moveaxis(out, 0, dim) if dim != 0 else out
+
+
+@tacc.register("reduce_scatter", "pipelined")
+def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
+                             dim: int = 0, n_channels: int = 4,
+                             pipeline_chunk_bytes: int | None = None,
+                             bidir: bool = True, **_):
+    """Two-stage reduce-scatter, pipelined: chunk k's local native stage
+    overlaps chunk k+1's cross-pod ring."""
+    if not pod_axis:
+        return flat_reduce_scatter(x, axes, None, dim=dim)
+    xm = jnp.moveaxis(x, dim, 0) if dim != 0 else x
+    W = axis_world(_axes_tuple(axes)) * lax.axis_size(pod_axis)
+    n = xm.shape[0]
+    assert n % W == 0, (n, W)
+    s = n // W                                        # rows this rank keeps
+    C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
+                         pipeline_chunk_bytes, s)
+    # chunk j must carry rows [r*s + j*s/C, ...) for every rank r, so split
+    # the per-rank dim, not the raw leading dim.
+    grouped = xm.reshape((W, s) + xm.shape[1:])
+    chunks = [c.reshape((W * c.shape[1],) + xm.shape[1:])
+              for c in jnp.array_split(grouped, C, axis=1)] if C > 1 else [xm]
+    cross_ring_rs = ring_reduce_scatter_bidir if bidir else ring_reduce_scatter
+
+    def cross(c):
+        return cross_ring_rs(c, pod_axis)
+
+    def local_rs(c):
+        return flat_reduce_scatter(c, axes, None, dim=0)
+
+    outs = software_pipeline(chunks, (cross, local_rs))
+    out = jnp.concatenate(outs) if C > 1 else outs[0]
+    return jnp.moveaxis(out, 0, dim) if dim != 0 else out
 
 
 # ---------------------------------------------------------------------------

@@ -1,18 +1,21 @@
 """HetCCL public API — the drop-in collective layer (paper §4, Fig 2b).
 
 Applications (our trainer, serving engine, examples) call these functions; the
-TACC registry resolves them to the *flat* (single-stage native) or *hier*
-(vendor-local + cross-pod P2P) implementation at **runtime**.  Swapping the
-backend under an unmodified application — the paper's LD_PRELOAD trick — is
-:func:`install`.
+TACC registry resolves them to the *flat* (single-stage native), *hier*
+(vendor-local + cross-pod P2P), or *pipelined* (multi-channel hier with the
+local stage overlapping the cross-island ring) implementation at **runtime**.
+Swapping the backend under an unmodified application — the paper's LD_PRELOAD
+trick — is :func:`install`; :func:`uninstall` / :func:`use` restore it.
 
 Also provides :func:`tree_all_reduce`, a bucketed gradient all-reduce
-(flatten leaves -> fixed-size fusion buckets -> one collective per bucket),
-the classic DDP optimization NCCL users get from bucketing; plus optional
-``cross_dtype`` compression of the cross-island stage only.
+(flatten leaves -> fixed-size fusion buckets -> pipelined reduce-scatter ->
+all-gather schedule across buckets), the classic DDP optimization NCCL users
+get from bucketing; plus optional ``cross_dtype`` compression of the
+cross-island stage only.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Sequence
 
@@ -22,19 +25,31 @@ import jax.numpy as jnp
 from repro.core import tacc
 from repro.core import collectives as _coll  # noqa: F401  (registers impls)
 
+_SWAPPABLE_OPS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+                  "broadcast", "reduce")
+
 
 @dataclasses.dataclass(frozen=True)
 class HetCCLConfig:
     """Runtime configuration of the collective layer.
 
-    mode:        "flat" | "hier" | "auto".  "auto" picks "hier" iff a pod axis
-                 is present (i.e. the job spans islands) — mirroring HetCCL's
-                 transparent activation on heterogeneous clusters.
+    mode:        "flat" | "hier" | "pipelined" | "auto".  "auto" picks "hier"
+                 iff a pod axis is present (i.e. the job spans islands) —
+                 mirroring HetCCL's transparent activation on heterogeneous
+                 clusters.  "pipelined" is the multi-channel hier schedule
+                 (opt-in; see DESIGN.md §2).
     local_axes:  intra-island mesh axes carrying data parallelism.
     pod_axis:    the island boundary axis (None on single-island meshes).
     bucket_bytes: gradient fusion bucket size.
     cross_dtype: optional dtype for the cross-island stage (gradient
                  compression on the slow links; beyond-paper).
+    n_channels:  pipeline channel count of the "pipelined" mode (chunks per
+                 payload; the local stage of chunk k+1 overlaps the
+                 cross-island ring of chunk k).
+    pipeline_chunk_bytes: alternative channel sizing — split payloads into
+                 ~this many bytes per chunk instead of a fixed channel count.
+    Either sizing is clamped per payload to ``collectives.MAX_CHANNELS`` (16)
+    and to the payload's own granularity.
     """
 
     mode: str = "auto"
@@ -42,11 +57,17 @@ class HetCCLConfig:
     pod_axis: str | None = "pod"
     bucket_bytes: int = 64 * 1024 * 1024
     cross_dtype: Any = None
+    n_channels: int = 4
+    pipeline_chunk_bytes: int | None = None
 
     def resolved_mode(self) -> str:
-        if self.mode != "auto":
-            return self.mode
-        return "hier" if self.pod_axis else "flat"
+        if self.mode == "auto":
+            return "hier" if self.pod_axis else "flat"
+        if self.mode not in ("flat", "hier", "pipelined"):
+            raise ValueError(
+                f"unknown collective mode {self.mode!r}; "
+                "expected flat | hier | pipelined | auto")
+        return self.mode
 
     def dp_axes(self) -> tuple[str, ...]:
         """Pod-major: matches the gather order of both flat and hier
@@ -55,38 +76,103 @@ class HetCCLConfig:
 
 
 _CURRENT = HetCCLConfig(pod_axis=None)
+# (previous config, TACC defaults captured before each install) — LIFO so
+# nested installs unwind correctly.
+_INSTALL_STACK: list[tuple[HetCCLConfig, dict[str, str]]] = []
+
+
+def _variant_for(op: str, mode: str) -> str:
+    """Per-op variant with graceful degradation: ops without a ``pipelined``
+    registration (broadcast, reduce, all_to_all) fall back to ``hier``."""
+    avail = tacc.variants(op)
+    if mode in avail:
+        return mode
+    if mode == "pipelined" and "hier" in avail:
+        return "hier"
+    return "flat"
 
 
 def install(config: HetCCLConfig) -> HetCCLConfig:
     """Swap the active collective backend (the LD_PRELOAD analogue).
 
     Existing training code keeps calling the same functions; only the registry
-    default changes.  Returns the previous config so callers can restore it.
+    default changes.  Returns the previous config; :func:`uninstall` (or the
+    :func:`use` context manager) pops the install and restores the TACC
+    registry defaults it displaced.  Installing exactly the config the most
+    recent install displaced is recognized as that undo — the legacy
+    ``prev = install(cfg); ...; install(prev)`` restore pattern unwinds the
+    stack instead of growing it.
     """
+    return _install(config, allow_undo=True)
+
+
+def _install(config: HetCCLConfig, *, allow_undo: bool) -> HetCCLConfig:
     global _CURRENT
+    mode = config.resolved_mode()     # validate before mutating any state
     prev = _CURRENT
+    if allow_undo and _INSTALL_STACK and config == _INSTALL_STACK[-1][0]:
+        uninstall()
+        return prev
+    prev_defaults = {op: tacc.get_default(op) for op in _SWAPPABLE_OPS}
+    _INSTALL_STACK.append((prev, prev_defaults))
     _CURRENT = config
-    mode = config.resolved_mode()
-    for op in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
-               "broadcast", "reduce"):
-        if mode in tacc.variants(op):
-            tacc.set_default(op, mode)
+    for op in _SWAPPABLE_OPS:
+        tacc.set_default(op, _variant_for(op, mode))
     return prev
+
+
+def uninstall() -> HetCCLConfig:
+    """Undo the most recent :func:`install`: restore both the previous config
+    and the TACC registry defaults that install() mutated.  Returns the
+    config that was active before the uninstalled one."""
+    global _CURRENT
+    if not _INSTALL_STACK:
+        return _CURRENT
+    prev, prev_defaults = _INSTALL_STACK.pop()
+    _CURRENT = prev
+    for op, variant in prev_defaults.items():
+        tacc.set_default(op, variant)
+    return prev
+
+
+@contextlib.contextmanager
+def use(config: HetCCLConfig):
+    """Scoped backend swap: ``with hetccl.use(cfg): ...`` installs ``cfg`` and
+    restores the previous backend (config + registry defaults) on exit.
+
+    Always pushes a stack entry (no install()-style undo detection), so its
+    enter/exit pair stays balanced even when ``cfg`` equals a config an
+    enclosing scope displaced."""
+    _install(config, allow_undo=False)
+    try:
+        yield config
+    finally:
+        uninstall()
 
 
 def current() -> HetCCLConfig:
     return _CURRENT
 
 
+def _pipeline_kwargs(cfg: HetCCLConfig, kw: dict) -> dict:
+    if cfg.resolved_mode() == "pipelined":
+        kw.setdefault("n_channels", cfg.n_channels)
+        kw.setdefault("pipeline_chunk_bytes", cfg.pipeline_chunk_bytes)
+    return kw
+
+
 def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
     cfg = cfg or _CURRENT
+    variant = _variant_for(op, cfg.resolved_mode())
+    if variant == "pipelined":
+        kw = _pipeline_kwargs(cfg, kw)
     return tacc.dispatch(op, x, cfg.local_axes, cfg.pod_axis,
-                         variant=cfg.resolved_mode(), **kw)
+                         variant=variant, **kw)
 
 
 def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
     cfg = cfg or _CURRENT
-    if cfg.resolved_mode() == "hier" and cfg.cross_dtype is not None:
+    if cfg.resolved_mode() in ("hier", "pipelined") and cfg.cross_dtype is not None:
         kw.setdefault("cross_dtype", cfg.cross_dtype)
     return _call("all_reduce", x, cfg, **kw)
 
@@ -124,16 +210,10 @@ def world_size(cfg: HetCCLConfig | None = None) -> int:
 # Bucketed gradient reduction (DDP-style fusion).
 # ---------------------------------------------------------------------------
 
-def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
-    """All-reduce every leaf of ``tree``, fused into ~bucket_bytes buckets.
-
-    Leaves are flattened, grouped by dtype into buckets, reduced with one
-    collective per bucket, and unpacked.  ``mean_by``: optional scalar (e.g.
-    summed token count) every leaf is divided by after reduction.
-    """
-    cfg = cfg or _CURRENT
-    leaves, treedef = jax.tree.flatten(tree)
-    order = sorted(range(len(leaves)), key=lambda i: jnp.dtype(leaves[i].dtype).name)
+def _make_buckets(leaves, bucket_bytes: int) -> list[list[int]]:
+    """Group leaf indices into ~bucket_bytes fusion buckets of equal dtype."""
+    order = sorted(range(len(leaves)),
+                   key=lambda i: jnp.dtype(leaves[i].dtype).name)
     buckets: list[list[int]] = []
     cur: list[int] = []
     cur_bytes = 0
@@ -141,7 +221,7 @@ def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
     for i in order:
         lf = leaves[i]
         nbytes = lf.size * lf.dtype.itemsize
-        if cur and (lf.dtype != cur_dtype or cur_bytes + nbytes > cfg.bucket_bytes):
+        if cur and (lf.dtype != cur_dtype or cur_bytes + nbytes > bucket_bytes):
             buckets.append(cur)
             cur, cur_bytes = [], 0
         cur.append(i)
@@ -149,11 +229,54 @@ def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
         cur_bytes += nbytes
     if cur:
         buckets.append(cur)
+    return buckets
+
+
+def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
+    """All-reduce every leaf of ``tree``, fused into ~bucket_bytes buckets.
+
+    Leaves are flattened, grouped by dtype into buckets, and reduced with a
+    *pipelined reduce-scatter -> all-gather schedule*: each bucket's
+    all-reduce is decomposed into its bandwidth-optimal halves and the
+    buckets are run on a skewed wavefront, so bucket i's all-gather overlaps
+    bucket i+1's reduce-scatter (on top of whatever intra-op pipelining the
+    installed collective mode adds).  Numerically equal to one blocking
+    all-reduce per bucket.
+
+    ``mean_by``: optional scalar (e.g. summed token count) every *floating*
+    leaf is divided by after reduction (integer leaves stay summed).
+    """
+    cfg = cfg or _CURRENT
+    leaves, treedef = jax.tree.flatten(tree)
+    buckets = _make_buckets(leaves, cfg.bucket_bytes)
+    world = world_size(cfg)
+
+    flats, pads = [], []
+    for bucket in buckets:
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket]) \
+            if len(bucket) > 1 else leaves[bucket[0]].reshape(-1)
+        pad = (-flat.shape[0]) % max(world, 1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        flats.append(flat)
+        pads.append(pad)
+
+    if world > 1 and cfg.cross_dtype is None:
+        reduced = _coll.software_pipeline(
+            flats,
+            (lambda f: reduce_scatter(f, cfg, dim=0),
+             lambda s: all_gather(s, cfg, dim=0)))
+    elif world > 1:
+        # cross-stage compression only exists on the fused all_reduce path
+        reduced = _coll.software_pipeline(
+            flats, (lambda f: all_reduce(f, cfg),))
+    else:
+        reduced = flats
 
     out = list(leaves)
-    for bucket in buckets:
-        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
-        red = all_reduce(flat, cfg)
+    for bucket, red, pad in zip(buckets, reduced, pads):
+        if pad:
+            red = red[:red.shape[0] - pad]
         off = 0
         for i in bucket:
             sz = leaves[i].size

@@ -71,14 +71,91 @@ def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
     return alpha * steps + _RING_FACTORS[op](n_ranks) * nbytes / bw
 
 
+def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
+                           alpha: float, bidir: bool) -> list[float]:
+    """Per-chunk stage costs of the pipelined hierarchical schedule.
+
+    Stage list mirrors the hier decomposition (local native stage(s) + the
+    cross-island ring); ``bidir`` halves the cross ring's *bandwidth* term —
+    the bidirectional rings push half the payload per direction over the
+    full-duplex link — while the per-hop α count is unchanged.
+    """
+    pods = list(cluster.pods)
+    P = len(pods)
+    shard = chunk_bytes / max(min(p.n_chips for p in pods), 1)
+    cross_bw = cluster.slowest_endpoint_bw()
+    half = 0.5 if bidir else 1.0
+    if op == "all_reduce":
+        return [
+            max(_local_collective_time("reduce_scatter", chunk_bytes, p,
+                                       p.n_chips) for p in pods),
+            alpha * 2 * (P - 1) +
+            half * _RING_FACTORS["all_reduce"](P) * shard / cross_bw,
+            max(_local_collective_time("all_gather", chunk_bytes, p, p.n_chips)
+                for p in pods),
+        ]
+    if op in ("all_gather", "reduce_scatter", "broadcast", "reduce"):
+        ring_half = half if op in ("all_gather", "reduce_scatter") else 1.0
+        return [
+            max(_local_collective_time(op, chunk_bytes, p, p.n_chips)
+                for p in pods),
+            alpha * (P - 1) +
+            ring_half * _RING_FACTORS[op](P) * shard / cross_bw,
+        ]
+    if op == "all_to_all":
+        return [
+            max(_local_collective_time(op, chunk_bytes, p, p.n_chips)
+                for p in pods),
+            alpha * (P - 1) + chunk_bytes * (P - 1) / P / cross_bw,
+        ]
+    raise ValueError(op)
+
+
+def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
+                    alpha: float, n_channels: int, bidir: bool) -> float:
+    """Multi-channel software-pipelined time: with C chunks the slowest stage
+    is paid C times and the others once (classic pipeline fill/drain), i.e.
+
+        T(C) = Σ_s t_s(n/C) + (C-1) · max_s t_s(n/C).
+
+    The channel count is auto-tuned (min over 1..n_channels): more channels
+    amortize the serial stages but pay per-chunk α, so the optimum is
+    payload-dependent.  C=1 degenerates to the serial hier schedule, which
+    makes the pipelined mode never slower than hier in this model.
+    """
+    best = float("inf")
+    for c in range(1, max(int(n_channels), 1) + 1):
+        stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir)
+        best = min(best, sum(stages) + (c - 1) * max(stages))
+    return best
+
+
+def pipelined_channel_time(op: str, nbytes: float, cluster: ClusterSpec,
+                           n_channels: int, alpha: float | None = None,
+                           bidir: bool = True) -> float:
+    """T(C) at *exactly* C channels — no auto-tune.  For channel sweeps that
+    want to show the fill/drain-vs-α tradeoff (collective_time's pipelined
+    mode returns min over 1..n_channels and is monotone in n_channels)."""
+    alpha = cluster.inter_pod_alpha if alpha is None else alpha
+    c = max(int(n_channels), 1)
+    stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir)
+    return sum(stages) + (c - 1) * max(stages)
+
+
 def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
-                    mode: str = "auto", alpha: float | None = None) -> float:
+                    mode: str = "auto", alpha: float | None = None, *,
+                    n_channels: int = 4, bidir: bool = True) -> float:
     """Time of one collective over every chip in ``cluster``.
 
     mode "flat": one ring over all chips, every link bounded by the slowest
     endpoint in the group (what a naive single-stage heterogeneous ring pays).
     mode "hier": HetCCL — local stage per island at native bandwidth +
-    cross-island ring over per-island shards.
+    cross-island ring over per-island shards, the two stages *serial*.
+    mode "pipelined": hier with the payload split into up to ``n_channels``
+    chunks, chunk k's cross-island ring overlapping chunk k+1's local stage
+    (and bidirectional cross rings unless ``bidir=False``).  ``n_channels``
+    defaults to HetCCLConfig's default so model and execution describe the
+    same schedule.
     """
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     pods = list(cluster.pods)
@@ -87,10 +164,22 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
         return 0.0
     if mode == "auto":
         mode = "hier" if len(pods) > 1 else "flat"
+    if mode not in ("flat", "hier", "pipelined"):
+        raise ValueError(f"unknown mode {mode!r}; expected "
+                         "flat | hier | pipelined | auto")
     if len(pods) == 1 or mode == "flat":
         bw = cluster.slowest_endpoint_bw() if len(pods) > 1 else \
             pods[0].chip.local_link_bw * pods[0].chip.local_links
         return alpha * (n - 1) + _RING_FACTORS[op](n) * nbytes / bw
+    if mode == "pipelined":
+        # only the ops with a "pipelined" TACC registration run the
+        # multi-channel schedule; the backend falls back to hier for the
+        # rest (hetccl._variant_for) and the model must not credit them
+        # with overlap the runtime never achieves.
+        if op in ("all_reduce", "all_gather", "reduce_scatter"):
+            return _pipelined_time(op, nbytes, cluster, alpha, n_channels,
+                                   bidir)
+        mode = "hier"
     # hierarchical: local stage + cross-pod ring on 1/n_local shards.
     P = len(pods)
     if op == "all_reduce":

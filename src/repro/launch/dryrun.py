@@ -3,9 +3,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 This proves the distribution config is coherent without hardware: the 16x16
-single-pod mesh AND the 2x16x16 multi-pod mesh must compile for every
-applicable cell; memory_analysis() proves it fits, cost_analysis() + the HLO
-static analyzer feed §Roofline.
+single-pod mesh AND the 4x8x16 multi-pod mesh (4 islands x 128 chips) must
+compile for every applicable cell; memory_analysis() proves it fits,
+cost_analysis() + the HLO static analyzer feed §Roofline.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
@@ -24,7 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.balance import uniform_plan
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
+                               pod_size_of)
 from repro.models import build
 from repro.roofline.analysis import Roofline, analyze_hlo
 from repro.serve.engine import make_serve_programs
@@ -45,9 +46,9 @@ def model_flops_spec(cfg: ModelConfig, shape: ShapeConfig) -> float:
 
 
 def _train_batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh, plan):
-    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
-                      for a in dp_axes]))
+    sizes = mesh_axis_sizes(mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = int(np.prod([sizes[a] for a in dp_axes]))
     nm, gmb = plan.n_micro_max, plan.micro_batch * dp
     sds = {
         "tokens": jax.ShapeDtypeStruct((nm, gmb, shape.seq_len), jnp.int32),
@@ -94,9 +95,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
     t0 = time.time()
     try:
         if shape.kind == "train":
-            n_pods = 2 if multi else 1
-            dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
-                              for a in ("pod", "data")]))
+            sizes = mesh_axis_sizes(mesh)
+            n_pods = sizes.get("pod", 1)
+            dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
             assert shape.global_batch % dp == 0, (shape.global_batch, dp)
             # micro-batch so each device sees ~8k tokens per micro-step
             # (keeps the remat activation stash inside v5e HBM); gradient
@@ -143,12 +144,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
         t_compile = time.time() - t0
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):     # jax 0.4.x: list of one dict
+            ca = ca[0] if ca else {}
         if verbose:
             print(f"  memory_analysis: {ma}")
             print(f"  cost_analysis: flops={ca.get('flops')} "
                   f"bytes={ca.get('bytes accessed')}")
         hlo = compiled.as_text()
-        stats = analyze_hlo(hlo, n_dev, pod_size=256 if multi else 0)
+        stats = analyze_hlo(hlo, n_dev, pod_size=pod_size_of(mesh))
         roof = Roofline(
             arch=arch, shape=shape_name, mesh=mesh_kind, n_devices=n_dev,
             model_flops_per_step=model_flops_spec(cfg, shape),

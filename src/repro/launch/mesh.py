@@ -7,21 +7,38 @@ import and then calls these.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; multi-pod adds the 2-island 'pod' axis."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    """512 chips total; multi-pod spreads them over a 4-island 'pod' axis.
+
+    Four islands (not two) so the cross-island ring is a real ring: with two
+    pods every "ring" step is a single paired exchange and the bidirectional
+    / pipelined cross schedules have nothing to overlap.
+    """
+    shape = (4, 8, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def pod_size_of(mesh) -> int:
+    """Devices per island (0 when the mesh has no 'pod' axis)."""
+    sizes = mesh_axis_sizes(mesh)
+    if "pod" not in sizes:
+        return 0
+    total = 1
+    for s in mesh.devices.shape:
+        total *= s
+    return total // sizes["pod"]
 
 
 def make_smoke_mesh(n_pods: int = 1, data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (device count must already be forced)."""
     if n_pods > 1:
-        return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -29,14 +29,14 @@ def main():
 
     import jax
     import numpy as np
-    from jax.sharding import AxisType
 
     from repro.configs import get_config
+    from repro.core import compat
     from repro.models import build
     from repro.serve.engine import Batcher, Request, make_serve_programs
 
     axes = ("pod", "data", "model")[-len(shape):]
-    mesh = jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    mesh = compat.make_mesh(shape, axes)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -44,7 +44,7 @@ def main():
     max_len = args.prompt_len + args.max_new
     progs = make_serve_programs(model, mesh, batch=args.batch,
                                 seq_len=args.prompt_len, max_len=max_len)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = jax.jit(lambda k: model.init(k),
                          out_shardings=progs.param_shardings)(
             jax.random.PRNGKey(0))

@@ -41,7 +41,6 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
 
     from repro.configs import get_config
     from repro.configs.base import RunConfig
@@ -52,8 +51,9 @@ def main():
     from repro.train import ft
     from repro.train.trainer import make_train_program
 
+    from repro.core import compat
     axes = ("pod", "data", "model")[-len(shape):]
-    mesh = jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    mesh = compat.make_mesh(shape, axes)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

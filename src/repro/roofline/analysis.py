@@ -19,7 +19,10 @@ loops.  So this module is a small static analyzer over ``compiled.as_text()``:
     fusion-boundary model of TPU HBM traffic,
   * wire bytes = ring-algorithm bytes per collective op
     (all-reduce 2(g-1)/g * n, all-gather/reduce-scatter/all-to-all (g-1)/g * n
-    on the *full* logical buffer, collective-permute n).
+    on the *full* logical buffer, collective-permute n) — with a full-duplex
+    discount for mutually-inverse collective-permute pairs in one loop body
+    (the bidirectional ring steps of ``ring_*_bidir``): opposite directions
+    of a full-duplex link run concurrently, so the pair costs max, not sum.
 
 `cost_analysis()` numbers are also reported for reference.
 """
@@ -156,7 +159,10 @@ def _parse_ops(lines: list[str]) -> dict[str, Op]:
                     break
         args = rem[start + 1:end]
         attrs = rem[end + 1:]
-        operands = [a.strip().lstrip("%") for a in _strip_args(args)]
+        # an operand prints as "%name" (new XLA) or "type %name" (older XLA);
+        # the name is always the last whitespace-separated token.
+        operands = [a.strip().split()[-1].lstrip("%")
+                    for a in _strip_args(args) if a.strip()]
         ops[name] = Op(name, type_str, kind, operands, attrs)
     return ops
 
@@ -233,6 +239,65 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def wire_and_operand_bytes(kind: str, g: int, out_bytes: float,
+                           duplex_mult: float = 1.0) -> tuple[float, float]:
+    """Ring-model (wire, operand) bytes of one collective HLO op.
+
+    The single source of the per-op wire convention (used by analyze_hlo and
+    benchmarks' top_collectives): factors apply to the *full logical buffer*;
+    an HLO reduce-scatter's out_bytes is the 1/g shard, so its full buffer is
+    g * out_bytes.  ``duplex_mult`` is the full-duplex discount for paired
+    bidirectional collective-permutes (see :func:`cp_duplex_discounts`).
+    """
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * out_bytes, out_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * out_bytes, out_bytes / max(g, 1)
+    if kind == "reduce-scatter":
+        return (g - 1) / g * (g * out_bytes), out_bytes * g
+    if kind == "all-to-all":
+        return (g - 1) / g * out_bytes, out_bytes
+    return out_bytes * duplex_mult, out_bytes      # collective-permute
+
+
+def _cp_pairs(attrs: str) -> frozenset | None:
+    m = re.search(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}", attrs)
+    if not m:
+        return None
+    return frozenset((int(p.group(1)), int(p.group(2)))
+                     for p in re.finditer(r"\{(\d+),(\d+)\}", m.group(1)))
+
+
+def cp_duplex_discounts(ops: dict[str, "Op"]) -> dict[str, float]:
+    """Full-duplex wire discount for bidirectional ring steps.
+
+    Two collective-permutes in the same computation whose source-target
+    pairs are mutual inverses (a clockwise and a counterclockwise ring step,
+    as emitted by ``ring_*_bidir``) travel opposite directions of full-duplex
+    links concurrently: the pair's wire time is max(a, b), not a + b.
+    Returns per-op multipliers distributing max(a, b) over the pair.
+    """
+    cps = [(name, op, _cp_pairs(op.attrs)) for name, op in ops.items()
+           if op.kind == "collective-permute"]
+    out: dict[str, float] = {}
+    used: set[str] = set()
+    for i, (name_a, op_a, pairs_a) in enumerate(cps):
+        if name_a in used or not pairs_a:
+            continue
+        inv = frozenset((t, s) for s, t in pairs_a)
+        if inv == pairs_a:          # self-inverse (n=2 ring): no partner
+            continue
+        for name_b, op_b, pairs_b in cps[i + 1:]:
+            if name_b in used or pairs_b != inv:
+                continue
+            a, b = op_a.out_bytes, op_b.out_bytes
+            if a + b:
+                out[name_a] = out[name_b] = max(a, b) / (a + b)
+            used.update((name_a, name_b))
+            break
+    return out
+
+
 @dataclasses.dataclass
 class HLOStats:
     dot_flops: float = 0.0
@@ -298,6 +363,7 @@ def analyze_hlo(hlo: str, n_devices: int, pod_size: int = 0) -> HLOStats:
     for comp, mult in mult_of.items():
         ops = parsed[comp]
         top_level = comp not in fusion_bodies
+        duplex = cp_duplex_discounts(ops)
         for op in ops.values():
             if op.kind == "dot":
                 out_dims = _type_dims(op.type_str)
@@ -315,22 +381,8 @@ def analyze_hlo(hlo: str, n_devices: int, pod_size: int = 0) -> HLOStats:
                 stats.dot_flops += mult * 2.0 * n * k
             if op.kind in _COLLECTIVES:
                 g = _group_size(op.attrs, n_devices)
-                out_b = op.out_bytes
-                if op.kind == "all-reduce":
-                    wire = 2.0 * (g - 1) / g * out_b
-                    operand = out_b
-                elif op.kind == "all-gather":
-                    wire = (g - 1) / g * out_b
-                    operand = out_b / max(g, 1)
-                elif op.kind == "reduce-scatter":
-                    wire = (g - 1) * out_b
-                    operand = out_b * g
-                elif op.kind == "all-to-all":
-                    wire = (g - 1) / g * out_b
-                    operand = out_b
-                else:                                  # collective-permute
-                    wire = out_b
-                    operand = out_b
+                wire, operand = wire_and_operand_bytes(
+                    op.kind, g, op.out_bytes, duplex.get(op.name, 1.0))
                 stats.wire_bytes += mult * wire
                 stats.operand_bytes += mult * operand
                 cross = _crosses_pod(op.attrs, pod_size)

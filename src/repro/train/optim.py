@@ -5,7 +5,9 @@ by hand, with every data-parallel collective issued through the HetCCL layer:
 
   ZeRO-1: params replicated across DP; f32 master + m + v are *flat shards* —
           each DP rank owns 1/W of every tensor.  Per step:
-          grads -> HetCCL AllReduce (bucketed, hierarchical across pods) ->
+          grads -> HetCCL tree_all_reduce (bucketed; pipelined
+          reduce-scatter -> all-gather across buckets, hierarchical or
+          multi-channel-pipelined across pods per the installed mode) ->
           local shard update -> HetCCL AllGather of updated params.
           (Table 3: "All-Gather (OS), All-Reduce (G)")
   ZeRO-3: params themselves sharded over 'data' (gathered per layer inside

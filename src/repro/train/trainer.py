@@ -25,7 +25,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import hetccl
+from repro.core import compat, hetccl
 from repro.core.balance import HetPlan
 from repro.models import Ctx, Model
 from repro.models.common import make_rules, manual_only, spec_tree
@@ -80,7 +80,10 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
     local_axes, pod_axis = _dp_axes_of(mesh)
     hcfg = hetccl.HetCCLConfig(
         mode=rc.collective_mode, local_axes=local_axes, pod_axis=pod_axis,
-        cross_dtype=jnp.dtype(rc.cross_dtype) if rc.cross_dtype else None)
+        cross_dtype=jnp.dtype(rc.cross_dtype) if rc.cross_dtype else None,
+        n_channels=rc.n_channels,
+        pipeline_chunk_bytes=rc.pipeline_chunk_bytes)
+    hcfg.resolved_mode()        # eager mode validation (typos fail at build)
     manual_axes = _manual_axes(local_axes, pod_axis)
     rules = make_rules(cfg, mesh, rc.zero_stage)
     ctx = Ctx(rules=rules, manual=True, dp_axes=manual_axes)
@@ -144,7 +147,7 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
                        **extra_batch_specs}
     metric_specs = {"loss": P(), "grad_norm": P(), "tokens": P()}
 
-    sm_step = jax.shard_map(
+    sm_step = compat.shard_map(
         step_body, mesh=mesh,
         in_specs=(state_manual_specs, batch_spec_tree),
         out_specs=(state_manual_specs, metric_specs),
@@ -183,9 +186,9 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
             opt["master"] = optim.zero1_master_from_params(params, manual_axes)
         return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
 
-    sm_init = jax.shard_map(init_body, mesh=mesh, in_specs=P(),
-                            out_specs=state_manual_specs,
-                            axis_names=set(manual_axes), check_vma=False)
+    sm_init = compat.shard_map(init_body, mesh=mesh, in_specs=P(),
+                               out_specs=state_manual_specs,
+                               axis_names=set(manual_axes), check_vma=False)
     init_jit = jax.jit(sm_init, out_shardings=state_shardings)
 
     return TrainProgram(model=model, mesh=mesh, rc=rc, plan=plan, hcfg=hcfg,

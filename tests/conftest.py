@@ -4,20 +4,18 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
 import pytest  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+
+from repro.core import compat  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh3():
     """(pod=2, data=2, model=2) mesh."""
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh2():
     """(data=2, model=4) single-pod mesh."""
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))

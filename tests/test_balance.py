@@ -1,5 +1,8 @@
 """Workload balancer properties (hypothesis) + paper-formula checks."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.balance import (HetPlan, PodProfile, imbalance, make_plan,

@@ -7,14 +7,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as C
-from repro.core import hetccl
+from repro.core import compat, hetccl
 
 rng = np.random.RandomState(0)
 
 
 def run(mesh, fn, x, in_spec, out_spec):
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
-                       axis_names={"pod", "data"}, check_vma=False)
+    sm = compat.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                          axis_names={"pod", "data"}, check_vma=False)
     return np.asarray(jax.jit(sm)(x))
 
 
@@ -117,10 +117,10 @@ def test_tree_all_reduce_bucketing(mesh3):
         out = hetccl.tree_all_reduce({"a": a[0], "b": b[0]}, cfg)
         return out["a"][None], out["b"][None]
 
-    sm = jax.shard_map(f, mesh=mesh3,
-                       in_specs=(P(("pod", "data")), P(("pod", "data"))),
-                       out_specs=(P(("pod", "data")), P(("pod", "data"))),
-                       axis_names={"pod", "data"}, check_vma=False)
+    sm = compat.shard_map(f, mesh=mesh3,
+                          in_specs=(P(("pod", "data")), P(("pod", "data"))),
+                          out_specs=(P(("pod", "data")), P(("pod", "data"))),
+                          axis_names={"pod", "data"}, check_vma=False)
     ga, gb = jax.jit(sm)(tree["a"][:, None], tree["b"][:, None])
     np.testing.assert_allclose(np.asarray(ga)[0, 0], tree["a"].sum(0), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(gb)[0, 0], tree["b"].sum(0), rtol=1e-5)
@@ -146,3 +146,243 @@ def test_install_swaps_backend(mesh3):
     hetccl.install(hetccl.HetCCLConfig(mode="flat", pod_axis=None))
     assert tacc.get_default("all_reduce") == "flat"
     hetccl.install(prev)
+    hetccl.uninstall()
+    hetccl.uninstall()
+    hetccl.uninstall()
+
+
+def test_uninstall_restores_registry_defaults():
+    """install() mutates the TACC defaults; uninstall() must restore them —
+    nested/test-scoped backend swaps may not leak state (regression)."""
+    from repro.core import tacc
+    before_cfg = hetccl.current()
+    before = {op: tacc.get_default(op)
+              for op in ("all_reduce", "all_gather", "reduce_scatter",
+                         "broadcast", "reduce", "all_to_all")}
+    hetccl.install(hetccl.HetCCLConfig(mode="hier", pod_axis="pod"))
+    hetccl.install(hetccl.HetCCLConfig(mode="pipelined", pod_axis="pod"))
+    assert tacc.get_default("all_reduce") == "pipelined"
+    assert tacc.get_default("broadcast") == "hier"   # graceful fallback
+    hetccl.uninstall()
+    assert tacc.get_default("all_reduce") == "hier"
+    hetccl.uninstall()
+    assert {op: tacc.get_default(op) for op in before} == before
+    assert hetccl.current() == before_cfg
+    # idempotent on an empty stack
+    hetccl.uninstall()
+    assert {op: tacc.get_default(op) for op in before} == before
+
+
+def test_use_context_manager_scopes_backend():
+    from repro.core import tacc
+    before = tacc.get_default("all_reduce")
+    with pytest.raises(RuntimeError):
+        with hetccl.use(hetccl.HetCCLConfig(mode="hier", pod_axis="pod")):
+            assert tacc.get_default("all_reduce") == "hier"
+            raise RuntimeError("boom")                # exits still restore
+    assert tacc.get_default("all_reduce") == before
+
+
+def test_nested_use_with_repeated_config():
+    """use() must stay LIFO-balanced even when the inner config equals the
+    config the outer install displaced (no install()-undo shortcut)."""
+    from repro.core import tacc
+    cfg0 = hetccl.current()
+    a = hetccl.HetCCLConfig(mode="hier", pod_axis="pod")
+    with hetccl.use(a):
+        with hetccl.use(cfg0):
+            assert hetccl.current() == cfg0
+        assert hetccl.current() == a                  # outer scope intact
+        assert tacc.get_default("all_reduce") == "hier"
+    assert hetccl.current() == cfg0
+
+
+def test_install_invalid_mode_leaves_state_untouched():
+    from repro.core import tacc
+    before = tacc.get_default("all_reduce")
+    cfg0 = hetccl.current()
+    depth = len(hetccl._INSTALL_STACK)
+    with pytest.raises(ValueError):
+        hetccl.install(hetccl.HetCCLConfig(mode="heir", pod_axis="pod"))
+    assert hetccl.current() == cfg0
+    assert len(hetccl._INSTALL_STACK) == depth
+    assert tacc.get_default("all_reduce") == before
+
+
+# ---------------------------------------------------------------------------
+# Pipelined multi-channel variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_channels", [1, 2, 4, 7])
+@pytest.mark.parametrize("shape", [(37, 3), (8,), (4, 4, 4), (3,)])
+def test_pipelined_all_reduce_matches_flat(mesh3, shape, n_channels):
+    x = rng.randn(4, *shape).astype(np.float32)
+
+    def pipe(v):
+        return C.pipelined_all_reduce(v[0], ("data",), "pod",
+                                      n_channels=n_channels)[None]
+
+    def flat(v):
+        return jax.lax.psum(v[0], ("pod", "data"))[None]
+
+    got = run(mesh3, pipe, x, P(("pod", "data")), P(("pod", "data")))
+    want = run(mesh3, flat, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_channels", [1, 2, 3])
+def test_pipelined_all_gather_matches_flat(mesh3, n_channels):
+    x = rng.randn(4 * 5, 3).astype(np.float32)
+    got = run(mesh3, lambda v: C.pipelined_all_gather(
+        v, ("data",), "pod", n_channels=n_channels), x,
+        P(("pod", "data")), P(None))
+    want = run(mesh3, lambda v: C.flat_all_gather(v, ("data",), "pod"), x,
+               P(("pod", "data")), P(None))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("n_channels", [1, 2, 5])
+def test_pipelined_reduce_scatter_matches_flat(mesh3, n_channels):
+    x = rng.randn(4 * 4 * 3, 2).astype(np.float32)
+    got = run(mesh3, lambda v: C.pipelined_reduce_scatter(
+        v, ("data",), "pod", n_channels=n_channels), x, P(None),
+        P(("pod", "data")))
+    want = run(mesh3, lambda v: C.flat_reduce_scatter(v, ("data",), "pod"), x,
+               P(None), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_pipelined_chunk_bytes_sizing(mesh3):
+    """pipeline_chunk_bytes is an alternative to n_channels: ~chunk-sized
+    splits, same numerics."""
+    x = rng.randn(4, 64).astype(np.float32)
+
+    def pipe(v):
+        return C.pipelined_all_reduce(v[0], ("data",), "pod",
+                                      pipeline_chunk_bytes=64)[None]
+
+    got = run(mesh3, pipe, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got[0], x.sum(0), rtol=1e-5)
+
+
+def test_pipelined_variant_registered():
+    from repro.core import tacc
+    for op in ("all_reduce", "all_gather", "reduce_scatter"):
+        assert "pipelined" in tacc.variants(op), op
+
+
+def test_pipelined_cross_dtype_compression(mesh3):
+    x = rng.randn(4, 64).astype(np.float32)
+
+    def f(v):
+        return C.pipelined_all_reduce(v[0], ("data",), "pod", n_channels=2,
+                                      cross_dtype=jnp.bfloat16)[None]
+
+    got = run(mesh3, f, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got[0], x.sum(0), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional rings + broadcast root
+# ---------------------------------------------------------------------------
+
+def _ring_mesh(n):
+    """1-axis mesh of n devices (odd sizes included; mesh3 only has even)."""
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:n]), ("pod",))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 8])
+def test_bidir_rings_match_unidirectional(n):
+    mesh = _ring_mesh(n)
+    # per-rank tile (n*3, 5): ring reduce-scatter needs n | local rows
+    x = rng.randn(n * n * 3, 5).astype(np.float32)
+
+    def go(fn, v, ins, outs):
+        sm = compat.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=outs,
+                              axis_names={"pod"}, check_vma=False)
+        return np.asarray(jax.jit(sm)(v))
+
+    got = go(lambda v: C.ring_reduce_scatter_bidir(v, "pod"), x, P("pod"), P("pod"))
+    want = go(lambda v: C.ring_reduce_scatter(v, "pod"), x, P("pod"), P("pod"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+    y = rng.randn(n * 4, 3).astype(np.float32)
+    got = go(lambda v: C.ring_all_gather_bidir(v, "pod"), y, P("pod"), P(None))
+    want = go(lambda v: C.ring_all_gather(v, "pod"), y, P("pod"), P(None))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [3, 4])
+@pytest.mark.parametrize("root", [0, 1, 2])
+def test_ring_broadcast_nonzero_root(n, root):
+    mesh = _ring_mesh(n)
+    x = rng.randn(n, 6).astype(np.float32)
+
+    def f(v):
+        return C.ring_broadcast(v[0], "pod", root=root)[None]
+
+    sm = compat.shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                          axis_names={"pod"}, check_vma=False)
+    got = np.asarray(jax.jit(sm)(x))
+    np.testing.assert_allclose(got, np.broadcast_to(x[root], x.shape),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tree_all_reduce bucketing edge cases + pipelined schedule equivalence
+# ---------------------------------------------------------------------------
+
+def _tree_reduce_on_mesh(mesh, tree, cfg, mean_by=None):
+    leaves, treedef = jax.tree.flatten(tree)
+
+    def f(*ls):
+        out = hetccl.tree_all_reduce(
+            jax.tree.unflatten(treedef, [l[0] for l in ls]), cfg,
+            mean_by=mean_by)
+        return tuple(o[None] for o in jax.tree.leaves(out))
+
+    sm = compat.shard_map(f, mesh=mesh,
+                          in_specs=(P(("pod", "data")),) * len(leaves),
+                          out_specs=(P(("pod", "data")),) * len(leaves),
+                          axis_names={"pod", "data"}, check_vma=False)
+    outs = jax.jit(sm)(*[l[:, None] for l in leaves])
+    return jax.tree.unflatten(treedef, [np.asarray(o)[0, 0] for o in outs])
+
+
+@pytest.mark.parametrize("mode", ["flat", "hier", "pipelined"])
+def test_tree_all_reduce_single_leaf_larger_than_bucket(mesh3, mode):
+    big = rng.randn(4, 777).astype(np.float32)        # 3108 B >> 64 B buckets
+    cfg = hetccl.HetCCLConfig(mode=mode, local_axes=("data",), pod_axis="pod",
+                              bucket_bytes=64, n_channels=2)
+    out = _tree_reduce_on_mesh(mesh3, {"w": big}, cfg)
+    np.testing.assert_allclose(out["w"], big.sum(0), rtol=1e-5, atol=1e-5)
+
+
+def test_tree_all_reduce_mixed_dtypes_and_int_mean(mesh3):
+    """Mixed f32/bf16/int32 leaves: dtype-pure buckets; integer leaves are
+    summed exactly and NOT divided by mean_by."""
+    tree = {"f": rng.randn(4, 33).astype(np.float32),
+            "h": rng.randn(4, 17).astype(np.float32),
+            "n": (rng.rand(4, 9) * 10).astype(np.int32)}
+    cfg = hetccl.HetCCLConfig(mode="hier", local_axes=("data",),
+                              pod_axis="pod", bucket_bytes=64)
+    mean = jnp.asarray(4.0, jnp.float32)
+    out = _tree_reduce_on_mesh(mesh3, tree, cfg, mean_by=mean)
+    np.testing.assert_allclose(out["f"], tree["f"].sum(0) / 4.0, rtol=1e-5)
+    np.testing.assert_allclose(out["h"], tree["h"].sum(0) / 4.0, rtol=1e-5)
+    np.testing.assert_array_equal(out["n"], tree["n"].sum(0))
+
+
+@pytest.mark.parametrize("mode", ["flat", "hier", "pipelined"])
+def test_tree_all_reduce_equals_per_leaf_psum(mesh3, mode):
+    """The pipelined RS->AG schedule across buckets == per-leaf lax.psum."""
+    tree = {"a": rng.randn(4, 11).astype(np.float32),
+            "b": rng.randn(4, 3, 5).astype(np.float32),
+            "c": rng.randn(4, 2).astype(np.float32)}
+    cfg = hetccl.HetCCLConfig(mode=mode, local_axes=("data",), pod_axis="pod",
+                              bucket_bytes=48, n_channels=2)
+    out = _tree_reduce_on_mesh(mesh3, tree, cfg)
+    for k in tree:
+        np.testing.assert_allclose(out[k], tree[k].sum(0), rtol=1e-5,
+                                   atol=1e-5, err_msg=f"{mode}/{k}")

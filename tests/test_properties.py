@@ -3,16 +3,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as C
+from repro.core import compat
 from repro.data.pipeline import synthetic_batch
 
 
 def _run(mesh, fn, x, in_spec, out_spec):
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
-                       axis_names={"pod", "data"}, check_vma=False)
+    sm = compat.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                          axis_names={"pod", "data"}, check_vma=False)
     return np.asarray(jax.jit(sm)(x))
 
 

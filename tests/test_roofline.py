@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.roofline.analysis import analyze_hlo
 
 
@@ -43,7 +44,7 @@ def test_collective_wire_bytes(mesh2):
     def f(x):
         return jax.lax.with_sharding_constraint(x, P(None))
 
-    with jax.set_mesh(mesh2):
+    with compat.set_mesh(mesh2):
         c = jax.jit(
             f,
             in_shardings=NamedSharding(mesh2, P("model")),

@@ -8,7 +8,7 @@ import pytest
 import repro.kernels  # noqa: F401  (registers kernel TACC entries)
 from repro.configs import get_config
 from repro.configs.base import RunConfig
-from repro.core import tacc
+from repro.core import compat, tacc
 from repro.core.balance import uniform_plan
 from repro.data.pipeline import DataPipeline, synthetic_batch
 from repro.models import build
@@ -92,7 +92,7 @@ def test_serve_engine_batched_requests(mesh2):
     cfg = get_config("smollm-135m").reduced()
     model = build(cfg)
     progs = make_serve_programs(model, mesh2, batch=2, seq_len=16, max_len=32)
-    with jax.set_mesh(mesh2):
+    with compat.set_mesh(mesh2):
         params = jax.jit(
             lambda k: model.init(k),
             out_shardings=progs.param_shardings)(jax.random.PRNGKey(0))

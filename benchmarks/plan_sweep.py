@@ -1,0 +1,96 @@
+"""Dump the plan autotuner's candidate frontier (DESIGN.md §9).
+
+    PYTHONPATH=src python -m benchmarks.plan_sweep [--arch smollm-135m]
+        [--global-batch 256] [--seq 4096] [--out results/plan_sweep.json]
+
+For each scenario cluster the full ranked frontier is written to JSON (one
+row per candidate: mode, channels, bucket, ZeRO stage, shares, modeled
+compute/comm/step seconds, HBM feasibility) and the headline rows are
+printed in the paper-figs CSV convention (``name,us_per_call,derived`` where
+derived = speedup of the chosen plan over the flat baseline), so the
+paper-figs pipeline can plot planner frontiers next to the measured-mode
+figures.  Pure simulator/numpy — no JAX, runs anywhere in milliseconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import plan as plan_mod
+from repro.configs import get_config
+from repro.core.balance import PodProfile
+from repro.core.topology import paper_cluster, tpu_mixed_fleet, tpu_multipod
+
+
+def scenarios():
+    """(name, cluster, data_axis) triples the sweep prices."""
+    return (
+        ("tpu_multi_4x128", tpu_multipod(4, 128), 8),
+        ("tpu_mixed_2v5e_2v4", tpu_mixed_fleet(2, 2, 128), 8),
+        ("paper_8nv_8amd", paper_cluster(8, 8), 8),
+    )
+
+
+def sweep(arch: str, global_batch: int, seq_len: int,
+          zero: int | None = None) -> dict:
+    """Rank the full space per scenario; returns the JSON-ready record."""
+    cfg = get_config(arch)
+    out = {"arch": arch, "global_batch": global_batch, "seq_len": seq_len,
+           "scenarios": {}}
+    for name, cluster, data_axis in scenarios():
+        req = plan_mod.plan_request(cluster, cfg, global_batch, seq_len,
+                                    data_axis=data_axis, zero_stage=zero)
+        frontier = plan_mod.rank(req)
+        # measured-drift refinement frontier: slow one island to 60% and
+        # re-rank — the what-if the elastic control plane runs (DESIGN.md §9)
+        drifted = [PodProfile(p.name, p.effective_flops *
+                              (0.6 if i == 0 else 1.0), p.n_chips)
+                   for i, p in enumerate(cluster.pods)]
+        refined = plan_mod.refined_frontier(frontier[0], drifted)
+        out["scenarios"][name] = {
+            "frontier": [t.summary() for t in frontier],
+            "refined_frontier_drift0.6": [t.summary() for t in refined],
+        }
+    return out
+
+
+def csv_rows(record: dict):
+    """Headline rows, paper-figs style: chosen plan vs the flat baseline."""
+    rows = []
+    for name, sc in record["scenarios"].items():
+        frontier = sc["frontier"]
+        best = frontier[0]
+        flat = min((c for c in frontier if c["mode"] == "flat"),
+                   key=lambda c: c["modeled_step_s"])
+        rows.append((f"plan_sweep/{name}/{record['arch']}/best_"
+                     f"{best['mode']}_c{best['n_channels']}",
+                     best["modeled_step_s"] * 1e6,
+                     flat["modeled_step_s"] / best["modeled_step_s"]))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--zero", type=int, default=None,
+                    help="pin the ZeRO stage (default: search over 1 and 3)")
+    ap.add_argument("--out", default="results/plan_sweep.json")
+    args = ap.parse_args()
+
+    record = sweep(args.arch, args.global_batch, args.seq, args.zero)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows(record):
+        print(f"{name},{us:.3f},{derived:.6g}")
+    n = sum(len(s["frontier"]) for s in record["scenarios"].values())
+    print(f"# wrote {n} candidates across {len(record['scenarios'])} "
+          f"scenarios to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
+from repro import plan as plan_mod
 from repro.configs import get_config
 from repro.core import compat
 from repro.configs.base import RunConfig
@@ -52,13 +53,19 @@ def main():
           f"(paper Table 4: 1.19x for GPT-355M)")
 
     # --- real training with the het plan on the SPMD simulator mesh --------
+    # Shares (and mode/channels/bucket) come from the plan autotuner pricing
+    # the paper cluster's own constants — not hard-coded speed numbers, so
+    # the example stays honest as the Table-1 constants drift (DESIGN.md §9).
     mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     rcfg = get_config("gpt-355m").reduced()
     model = build(rcfg)
-    rc = RunConfig(zero_stage=3, collective_mode="hier",
-                   learning_rate=1e-3, param_dtype="float32")
-    train_plan = make_plan([PodProfile("fast", 2.0), PodProfile("slow", 1.0)],
-                           6, 1)
+    req = plan_mod.plan_request(cluster, rcfg, global_batch=12, seq_len=64,
+                                data_axis=2, micro_tokens=64, zero_stage=3)
+    tp = plan_mod.autotune(req)
+    rc = tp.run_config(RunConfig(learning_rate=1e-3, param_dtype="float32"))
+    train_plan = tp.plan
+    print(f"autotuned train plan: mode={tp.mode} C={tp.n_channels} "
+          f"bucket={tp.bucket_bytes >> 20}MiB shares={train_plan.micro_per_pod}")
     prog = make_train_program(model, mesh, rc, train_plan)
     state = prog.init_fn(jax.random.PRNGKey(0))
     pipe = DataPipeline(seed=0, plan=train_plan, dp_world=prog.dp_world(),
@@ -74,6 +81,13 @@ def main():
     new_plan = ft.replan(plan, drifted)
     print(f"after thermal throttling of the fast island: "
           f"replan {plan.micro_per_pod} -> {new_plan.micro_per_pod}")
+    # ... and the full-plan version: measured profiles + observed step time
+    # re-rank the whole (shares, mode, channels, bucket) configuration
+    tp_ref = ft.replan_auto(tp, drifted,
+                            observed_step_s=tp.modeled_step_s * 1.4)
+    print(f"replan_auto: shares {tp.plan.micro_per_pod} -> "
+          f"{tp_ref.plan.micro_per_pod}, mode={tp_ref.mode}, "
+          f"compute recalibrated x{tp_ref.compute_scale:.2f}")
 
     # --- 5. pipelined multi-channel collectives (beyond-paper) --------------
     from repro.core.topology import tpu_multipod

@@ -1,34 +1,57 @@
 """Quickstart: train a tiny model with HetCCL collectives in ~30 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--plan auto|manual]
 
-Builds a 2-island mesh (8 forced host devices), installs the hierarchical
-HetCCL backend, and trains a reduced llama for 20 steps — the 'drop-in
-backend' usage the paper targets: the training code below never names a
-collective implementation.
+Builds a 2-island mesh (8 forced host devices) and trains a reduced llama
+for 20 steps — the 'drop-in backend' usage the paper targets: the training
+code below never names a collective implementation.
+
+``--plan auto`` (the default) lets the plan autotuner (``repro.plan``,
+DESIGN.md §9) pick the collective mode, channel count, bucket size and
+per-pod shares jointly by pricing the candidate space with the α-β
+simulator; ``--plan manual`` shows the hand-set equivalent.
 """
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
+from repro import plan as plan_mod
 from repro.configs import get_config
 from repro.core import compat
 from repro.configs.base import RunConfig
 from repro.core.balance import uniform_plan
 from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import cluster_for_mesh
 from repro.models import build
 from repro.train.trainer import make_train_program
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", default="auto", choices=["auto", "manual"])
+    args = ap.parse_args()
+
     mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_config("smollm-135m").reduced()
     model = build(cfg)
-    rc = RunConfig(zero_stage=1, collective_mode="hier",   # <- the backend knob
-                   learning_rate=3e-3, param_dtype="float32")
-    prog = make_train_program(model, mesh, rc, uniform_plan(2, 4, 1))
+    rc = RunConfig(zero_stage=1, learning_rate=3e-3, param_dtype="float32")
+    if args.plan == "auto":
+        # the planner picks mode/channels/bucket/shares jointly (DESIGN.md §9)
+        req = plan_mod.plan_request(cluster_for_mesh(mesh), cfg,
+                                    global_batch=8, seq_len=64, data_axis=2,
+                                    micro_tokens=64, zero_stage=1)
+        tp = plan_mod.autotune(req)
+        plan, rc = tp.plan, tp.run_config(rc)
+        print(f"autotuned plan: mode={tp.mode} C={tp.n_channels} "
+              f"bucket={tp.bucket_bytes >> 20}MiB shares={plan.micro_per_pod}")
+    else:
+        import dataclasses
+        rc = dataclasses.replace(rc, collective_mode="hier")  # <- the knob
+        plan = uniform_plan(2, 4, 1)
+    prog = make_train_program(model, mesh, rc, plan)
     state = prog.init_fn(jax.random.PRNGKey(0))
     pipe = DataPipeline(seed=0, plan=prog.plan, dp_world=prog.dp_world(),
                         seq_len=64, vocab=cfg.vocab)
@@ -39,7 +62,7 @@ def main():
             print(f"step {step:3d}  loss {float(metrics['loss']):.4f}  "
                   f"grad_norm {float(metrics['grad_norm']):.3f}  "
                   f"tokens {int(metrics['tokens'])}")
-    print("done — collectives ran through the HetCCL hierarchical backend "
+    print("done — collectives ran through the HetCCL backend "
           f"(mode={prog.hcfg.resolved_mode()}).")
 
 

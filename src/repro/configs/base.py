@@ -154,12 +154,20 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
-    """Parallelism + training knobs for one run."""
+    """Parallelism + training knobs for one run.
+
+    The collective-layer fields (``zero_stage``, ``collective_mode``,
+    ``n_channels``, ``bucket_bytes``, ``n_micro``) can be set by hand or
+    materialized jointly by the autotuner — ``repro.plan.TrainPlan
+    .run_config()`` (DESIGN.md §9), the ``--plan auto`` path of the
+    launchers.
+    """
 
     zero_stage: int = 1              # 1 or 3 (the paper evaluates both)
     collective_mode: str = "auto"    # flat | hier | pipelined | auto (HetCCL)
     n_channels: int = 4              # pipeline channels of "pipelined" mode
     pipeline_chunk_bytes: int | None = None   # alternative channel sizing
+    bucket_bytes: int = 64 * 1024 * 1024      # gradient fusion bucket size
     n_micro: int = 1                 # gradient-accumulation micro-steps
     remat: bool = True
     learning_rate: float = 3e-4

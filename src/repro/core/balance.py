@@ -29,7 +29,14 @@ from repro.core.topology import ClusterSpec
 
 @dataclasses.dataclass(frozen=True)
 class PodProfile:
-    """Measured throughput of one island (paper: the short profiling run)."""
+    """Measured throughput of one island (paper: the short profiling run).
+
+    name:         island label (matches ``PodSpec.name`` / mesh pod index).
+    tokens_per_s: profiled training throughput of the whole island; only
+                  *ratios* between pods matter to the balancer, so any
+                  proportional stand-in (e.g. effective FLOP/s) is valid.
+    n_devices:    chips in the island (informational).
+    """
 
     name: str
     tokens_per_s: float
@@ -69,8 +76,28 @@ class HetPlan:
 
 def make_plan(profiles: Sequence[PodProfile], total_micro: int,
               micro_batch: int, min_per_pod: int = 1) -> HetPlan:
-    """b_i = B * s_i / sum_j s_j  with largest-remainder rounding to whole
-    micro-batches (the paper rounds to whole per-GPU micro-batches)."""
+    """Proportional micro-batch split:  b_i = B · s_i / Σ_j s_j  with
+    largest-remainder rounding to whole micro-batches (the paper rounds to
+    whole per-GPU micro-batches).
+
+    Args:
+        profiles: one :class:`PodProfile` per island, in pod order; speeds
+            may be measured (:func:`profile_throughput`) or hardware
+            constants (``plan_from_cluster``).
+        total_micro: live micro-steps to distribute (B).
+        micro_batch: per-device sequences per micro-step (uniform; shape
+            heterogeneity becomes count heterogeneity, see module docstring).
+        min_per_pod: floor so no island is planned fully idle.
+    Returns:
+        A :class:`HetPlan`; ``sum(micro_per_pod) == total_micro`` whenever
+        ``total_micro >= n_pods * min_per_pod``.
+    Example::
+
+        plan = make_plan([PodProfile("nvidia", 2.0),
+                          PodProfile("amd", 1.0)], total_micro=12,
+                         micro_batch=1)
+        plan.micro_per_pod    # (8, 4) — the paper's ~2:1 F.2 split
+    """
     speeds = np.array([p.tokens_per_s for p in profiles], np.float64)
     if speeds.sum() <= 0:
         raise ValueError("profiles must have positive throughput")
@@ -99,7 +126,9 @@ def make_plan(profiles: Sequence[PodProfile], total_micro: int,
 
 def uniform_plan(n_pods: int, total_micro: int, micro_batch: int,
                  names: Sequence[str] | None = None) -> HetPlan:
-    """The unbalanced baseline (same micro-batch count everywhere)."""
+    """The unbalanced baseline: ``total_micro`` split evenly over ``n_pods``
+    (requires divisibility).  What a homogeneity-assuming launcher would do,
+    and the comparison point for every balancing figure (paper Table 4)."""
     assert total_micro % n_pods == 0
     k = total_micro // n_pods
     return HetPlan(
@@ -112,6 +141,10 @@ def uniform_plan(n_pods: int, total_micro: int, micro_batch: int,
 
 def plan_from_cluster(cluster: ClusterSpec, total_micro: int,
                       micro_batch: int) -> HetPlan:
+    """:func:`make_plan` seeded from hardware constants instead of a
+    measured profile: each island's speed is its modeled effective FLOP/s
+    (``topology.PodSpec.effective_flops``).  The pre-profiling default the
+    plan autotuner also starts from (``repro.plan``, DESIGN.md §9)."""
     profiles = [PodProfile(p.name, p.effective_flops, p.n_chips)
                 for p in cluster.pods]
     return make_plan(profiles, total_micro, micro_batch)
@@ -120,8 +153,20 @@ def plan_from_cluster(cluster: ClusterSpec, total_micro: int,
 def profile_throughput(step_fn: Callable[[], object], tokens_per_step: int,
                        warmup: int = 1, iters: int = 3) -> tuple[float, float]:
     """The paper's short profiling run: a few warm-up steps, then measure
-    tokens/s.  Returns (tokens_per_s, profiling_seconds) — the overhead column
-    of Table 4."""
+    tokens/s.
+
+    Args:
+        step_fn: zero-arg callable running one training step on this island
+            (must block until the step completes, e.g. via
+            ``jax.block_until_ready``).
+        tokens_per_step: live tokens one step processes here.
+        warmup: steps discarded (compile + cache warming).
+        iters: measured steps averaged over.
+    Returns:
+        ``(tokens_per_s, profiling_seconds)`` — the speed that seeds
+        :func:`make_plan` (or the refinement loop, ``repro.plan.refine``)
+        and the overhead column of Table 4.
+    """
     t_start = time.perf_counter()
     for _ in range(warmup):
         step_fn()
@@ -133,7 +178,11 @@ def profile_throughput(step_fn: Callable[[], object], tokens_per_step: int,
 
 
 def imbalance(plan: HetPlan, profiles: Sequence[PodProfile]) -> float:
-    """max_i(b_i/s_i) / mean_i(b_i/s_i) — 1.0 means perfectly balanced."""
+    """Straggler factor of a plan:  max_i(b_i/s_i) / mean_i(b_i/s_i).
+
+    1.0 means every island finishes its micro-steps simultaneously (the
+    collective never waits); the uniform plan on a 2:1 fleet scores ~1.33.
+    """
     t = np.array([m / p.tokens_per_s
                   for m, p in zip(plan.micro_per_pod, profiles)])
     return float(t.max() / t.mean())

@@ -96,12 +96,24 @@ def install(config: HetCCLConfig) -> HetCCLConfig:
     """Swap the active collective backend (the LD_PRELOAD analogue).
 
     Existing training code keeps calling the same functions; only the registry
-    default changes.  Returns the previous config; :func:`uninstall` (or the
-    :func:`use` context manager) pops the install and restores the TACC
-    registry defaults it displaced.  Installing exactly the config the most
-    recent install displaced is recognized as that undo — the legacy
+    default changes.  Installing exactly the config the most recent install
+    displaced is recognized as that undo — the legacy
     ``prev = install(cfg); ...; install(prev)`` restore pattern unwinds the
     stack instead of growing it.
+
+    Args:
+        config: the :class:`HetCCLConfig` to activate.  A planner-produced
+            config (``repro.plan.TrainPlan.hetccl_config()``, DESIGN.md §9)
+            plugs in here unchanged.
+    Returns:
+        The previously active config; :func:`uninstall` (or the :func:`use`
+        context manager) pops the install and restores the TACC registry
+        defaults it displaced.
+    Example::
+
+        prev = hetccl.install(HetCCLConfig(mode="pipelined", n_channels=4))
+        ...   # unmodified application code now runs pipelined collectives
+        hetccl.uninstall()
     """
     return _install(config, allow_undo=True)
 
@@ -123,8 +135,12 @@ def _install(config: HetCCLConfig, *, allow_undo: bool) -> HetCCLConfig:
 
 def uninstall() -> HetCCLConfig:
     """Undo the most recent :func:`install`: restore both the previous config
-    and the TACC registry defaults that install() mutated.  Returns the
-    config that was active before the uninstalled one."""
+    and the TACC registry defaults that install() mutated.
+
+    Returns:
+        The config that was active before the uninstalled one.  Calling with
+        no install outstanding is a no-op that returns the current config.
+    """
     global _CURRENT
     if not _INSTALL_STACK:
         return _CURRENT
@@ -142,7 +158,18 @@ def use(config: HetCCLConfig):
 
     Always pushes a stack entry (no install()-style undo detection), so its
     enter/exit pair stays balanced even when ``cfg`` equals a config an
-    enclosing scope displaced."""
+    enclosing scope displaced.
+
+    Args:
+        config: the :class:`HetCCLConfig` to activate inside the scope.
+    Yields:
+        The installed config.
+    Example::
+
+        with hetccl.use(HetCCLConfig(mode="hier")):
+            loss = train_step(state, batch)   # hier collectives
+        # previous backend restored here, even on exception
+    """
     _install(config, allow_undo=False)
     try:
         yield config
@@ -151,6 +178,8 @@ def use(config: HetCCLConfig):
 
 
 def current() -> HetCCLConfig:
+    """Return the active :class:`HetCCLConfig` (the install-stack top, or the
+    module default — flat, no pod axis — when nothing is installed)."""
     return _CURRENT
 
 
@@ -171,6 +200,22 @@ def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
 
 
 def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
+    """Sum ``x`` across the DP world (pod-major flat group, DESIGN.md §3).
+
+    Must run inside the train step's shard_map whose manual axes include the
+    config's DP axes — like every op below.
+
+    Args:
+        x: array shard to reduce.
+        cfg: optional config override; defaults to the installed one.
+        **kw: implementation extras (e.g. ``cross_dtype`` to compress the
+            cross-island stage).
+    Returns:
+        The summed array, identical on every DP rank.
+    Example::
+
+        grads = hetccl.all_reduce(grads)      # mode picked by install()
+    """
     cfg = cfg or _CURRENT
     if cfg.resolved_mode() in ("hier", "pipelined") and cfg.cross_dtype is not None:
         kw.setdefault("cross_dtype", cfg.cross_dtype)
@@ -178,30 +223,46 @@ def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
 
 
 def all_gather(x, cfg: HetCCLConfig | None = None, **kw):
+    """Concatenate every DP rank's ``x`` along ``dim`` (kw, default 0),
+    pod-major.  Returns an array ``world_size()`` times larger on that dim."""
     return _call("all_gather", x, cfg, **kw)
 
 
 def reduce_scatter(x, cfg: HetCCLConfig | None = None, **kw):
+    """Sum across the DP world, then keep this rank's 1/world shard of dim
+    ``dim`` (kw, default 0).  The bandwidth-optimal half of an all-reduce;
+    ZeRO-3's gradient op.  Returns the reduced shard."""
     return _call("reduce_scatter", x, cfg, **kw)
 
 
 def all_to_all(x, cfg: HetCCLConfig | None = None, **kw):
+    """Transpose shard ownership: split ``split_axis`` world-ways, every rank
+    keeps chunk j of rank i concatenated on ``concat_axis`` (kwargs).  MoE's
+    dispatch/return op.  No pipelined variant — degrades to hier."""
     return _call("all_to_all", x, cfg, **kw)
 
 
 def broadcast(x, cfg: HetCCLConfig | None = None, **kw):
+    """Every rank receives root's ``x`` (kw ``root``, default 0).  Returns
+    the root value everywhere.  No pipelined variant — degrades to hier."""
     return _call("broadcast", x, cfg, **kw)
 
 
 def reduce(x, cfg: HetCCLConfig | None = None, **kw):
+    """Sum across the DP world; only ``root`` (kw, default 0) keeps the
+    result, other ranks get zeros.  No pipelined variant — degrades to hier."""
     return _call("reduce", x, cfg, **kw)
 
 
 def p2p(x, axis: str, perm: Sequence[tuple[int, int]]):
+    """Raw point-to-point permute over ``axis`` (the paper's RDMA verbs):
+    ``perm`` lists (src, dst) rank pairs; ranks not named receive zeros."""
     return tacc.dispatch("p2p", x, axis, perm)
 
 
 def world_size(cfg: HetCCLConfig | None = None) -> int:
+    """Total DP ranks of ``cfg``'s axes (pod × local) inside the current
+    shard_map; 1 outside any mesh context."""
     cfg = cfg or _CURRENT
     return _coll.axis_world(cfg.dp_axes())
 

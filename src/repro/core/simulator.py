@@ -12,7 +12,9 @@ performance bounded by the slower of the two vendor libraries").
 
 Used by the figure-level benchmarks (Figs 7, 8, 9, 11, 13-16; Table 4) to
 reproduce the paper's claims from its own hardware constants (Table 1),
-and by the scale studies (1000+ chips).
+by the scale studies (1000+ chips), and by the ``repro.plan`` autotuner,
+which prices every candidate configuration with :func:`planned_step_time`
+(cost model: DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -269,6 +271,94 @@ def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
     else:
         comm = collective_time("all_reduce", workload.param_bytes, cluster, mode)
     return comp + (1.0 - overlap) * comm_scale * comm
+
+
+def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
+                             mode: str = "auto", *,
+                             bucket_bytes: float = 64 * 1024 * 1024,
+                             n_channels: int = 4) -> float:
+    """Gradient-reduction time as ``hetccl.tree_all_reduce`` executes it.
+
+    The runtime fuses leaves into ~``bucket_bytes`` buckets and reduces each
+    as a reduce-scatter -> all-gather pair on a skewed wavefront (bucket i's
+    all-gather overlaps bucket i+1's reduce-scatter, DESIGN.md §7), so with
+    ``B`` buckets the model is the same fill/drain pipeline as the
+    multi-channel collectives (DESIGN.md §9):
+
+        T(B) = t_rs(b) + t_ag(b) + (B-1) · max(t_rs(b), t_ag(b)),  b = n/B.
+
+    Small buckets amortize nothing and pay per-bucket α; one huge bucket
+    loses the cross-bucket overlap — ``bucket_bytes`` is therefore a real
+    planner dimension, not a cosmetic knob.
+
+    Args:
+        param_bytes: total gradient volume (bytes).
+        cluster: the cluster being priced.
+        mode: collective mode each bucket's RS/AG runs under.
+        bucket_bytes: fusion bucket size (``HetCCLConfig.bucket_bytes``).
+        n_channels: channel budget of the ``pipelined`` mode.
+    Returns:
+        Modeled seconds for the whole gradient reduction.
+    """
+    n_buckets = max(int(math.ceil(param_bytes / max(bucket_bytes, 1))), 1)
+    b = param_bytes / n_buckets
+    t_rs = collective_time("reduce_scatter", b, cluster, mode,
+                           n_channels=n_channels)
+    t_ag = collective_time("all_gather", b, cluster, mode,
+                           n_channels=n_channels)
+    return t_rs + t_ag + (n_buckets - 1) * max(t_rs, t_ag)
+
+
+def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
+                    mode: str = "auto", *, n_channels: int = 4) -> float:
+    """ZeRO-3 traffic at per-layer granularity (DESIGN.md §9).
+
+    The trainer gathers each layer's params inside the scan (fwd + bwd = 2×
+    param volume of all-gather) and reduce-scatters each layer's grads, so
+    the α cost scales with ``n_layers`` — which is exactly why small models
+    on α-heavy fabrics prefer ZeRO-1 and the planner must see that.
+    """
+    layers = max(int(n_layers), 1)
+    per = param_bytes / layers
+    t_ag = collective_time("all_gather", per, cluster, mode,
+                           n_channels=n_channels)
+    t_rs = collective_time("reduce_scatter", per, cluster, mode,
+                           n_channels=n_channels)
+    return layers * (2.0 * t_ag + t_rs)
+
+
+def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
+                      plan: HetPlan, mode: str = "auto", *,
+                      n_channels: int = 4,
+                      bucket_bytes: float = 64 * 1024 * 1024,
+                      n_layers: int = 1, overlap: float = 0.0,
+                      comm_scale: float = 1.0,
+                      compute_scale: float = 1.0) -> float:
+    """Step time of one fully-specified plan candidate (DESIGN.md §9).
+
+    Same compute model as :func:`step_time` (max over pods of each pod's
+    micro-step count at its effective FLOP/s), but communication is priced at
+    the granularity the runtime actually emits: ZeRO-1 through the bucketed
+    wavefront (:func:`bucketed_all_reduce_time`), ZeRO-3 per layer
+    (:func:`zero3_comm_time`).  ``compute_scale`` is the profile-refinement
+    calibration factor (observed/modeled; ``repro.plan.refine``).
+
+    Returns:
+        Modeled seconds per optimizer step for this candidate.
+    """
+    comp = 0.0
+    for pod, n_micro in zip(cluster.pods, plan.micro_per_pod):
+        per_micro = (workload.tokens_per_micro * pod.n_chips *
+                     workload.flops_per_token) / pod.effective_flops
+        comp = max(comp, n_micro * per_micro)
+    if workload.zero_stage >= 3:
+        comm = zero3_comm_time(workload.param_bytes, n_layers, cluster, mode,
+                               n_channels=n_channels)
+    else:
+        comm = bucketed_all_reduce_time(workload.param_bytes, cluster, mode,
+                                        bucket_bytes=bucket_bytes,
+                                        n_channels=n_channels)
+    return compute_scale * comp + (1.0 - overlap) * comm_scale * comm
 
 
 def throughput_tokens_per_s(workload: TrainWorkload, cluster: ClusterSpec,

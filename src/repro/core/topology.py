@@ -171,3 +171,13 @@ def tpu_multipod(n_pods: int = 2, chips_per_pod: int = 256,
     chips = chips or [TPU_V5E] * n_pods
     pods = tuple(PodSpec(f"pod{i}", c, chips_per_pod) for i, c in enumerate(chips))
     return ClusterSpec(pods, inter_pod_bw=IB_HDR_BW)
+
+
+def tpu_mixed_fleet(n_v5e: int = 2, n_v4: int = 2,
+                    chips_per_pod: int = 128) -> ClusterSpec:
+    """A mixed-generation TPU fleet: current-gen v5e islands plus
+    previous-gen v4 islands — the TPU analogue of the paper's NVIDIA+AMD
+    testbed, and the heterogeneous target the plan autotuner
+    (``repro.plan``, DESIGN.md §9) balances shares across."""
+    chips = [TPU_V5E] * n_v5e + [TPU_V4] * n_v4
+    return tpu_multipod(n_v5e + n_v4, chips_per_pod, chips)

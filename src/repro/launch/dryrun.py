@@ -10,6 +10,12 @@ cost_analysis() + the HLO static analyzer feed §Roofline.
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --plan auto   # autotuned config
+
+``--plan auto`` replaces the hand-set collective flags for train cells: the
+plan autotuner (``repro.plan``, DESIGN.md §9) picks mode / channel count /
+bucket size / per-pod shares jointly by pricing the candidate space with the
+α-β simulator on the mesh's modeled topology (``mesh.cluster_for_mesh``).
 """
 import argparse
 import json
@@ -21,11 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import plan as plan_mod
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.balance import uniform_plan
-from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
-                               pod_size_of)
+from repro.launch.mesh import (cluster_for_mesh, make_production_mesh,
+                               mesh_axis_sizes, pod_size_of)
 from repro.models import build
 from repro.roofline.analysis import Roofline, analyze_hlo
 from repro.serve.engine import make_serve_programs
@@ -80,7 +87,7 @@ def _serve_batch_sds(cfg: ModelConfig, shape: ShapeConfig, kind: str):
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
-             verbose: bool = True) -> dict:
+             verbose: bool = True, plan_mode: str = "manual") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero}
@@ -99,15 +106,32 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
             n_pods = sizes.get("pod", 1)
             dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
             assert shape.global_batch % dp == 0, (shape.global_batch, dp)
-            # micro-batch so each device sees ~8k tokens per micro-step
-            # (keeps the remat activation stash inside v5e HBM); gradient
-            # accumulation covers the rest of the global batch.
-            per_dev = shape.global_batch // dp
-            mb = max(1, min(per_dev, 8192 // shape.seq_len))
-            n_micro = per_dev // mb
-            plan = uniform_plan(n_pods, n_micro * n_pods, mb)
+            if plan_mode == "auto":
+                # joint (shares, mode, channels, bucket) selection priced by
+                # the simulator on the mesh's modeled topology (DESIGN.md §9)
+                req = plan_mod.plan_request(
+                    cluster_for_mesh(mesh), cfg, shape.global_batch,
+                    shape.seq_len, data_axis=sizes.get("data", 1),
+                    zero_stage=zero)
+                tp = plan_mod.autotune(req)
+                plan, rc = tp.plan, tp.run_config()
+                rec["plan"] = tp.summary()
+                if verbose:
+                    print(f"  plan auto: mode={tp.mode} C={tp.n_channels} "
+                          f"bucket={tp.bucket_bytes >> 20}MiB "
+                          f"shares={tp.plan.micro_per_pod} "
+                          f"modeled_step={tp.modeled_step_s:.4f}s")
+            else:
+                # micro-batch so each device sees ~8k tokens per micro-step
+                # (keeps the remat activation stash inside v5e HBM); gradient
+                # accumulation covers the rest of the global batch.
+                per_dev = shape.global_batch // dp
+                mb = max(1, min(per_dev, 8192 // shape.seq_len))
+                n_micro = per_dev // mb
+                plan = uniform_plan(n_pods, n_micro * n_pods, mb)
+                rc = RunConfig(zero_stage=zero,
+                               collective_mode="hier" if multi else "flat")
             batch_sds, extra_specs = _train_batch_sds(cfg, shape, mesh, plan)
-            rc = RunConfig(zero_stage=zero, collective_mode="hier" if multi else "flat")
             prog = make_train_program(model, mesh, rc, plan,
                                       extra_batch_specs=extra_specs)
             key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
@@ -193,6 +217,9 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--zero", type=int, default=3)
+    ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
+                    help="auto: the repro.plan autotuner picks collective "
+                         "mode/channels/bucket/shares (train cells)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -207,7 +234,8 @@ def main():
             for mesh_kind in meshes:
                 tag = f"{arch}__{shape}__{mesh_kind}"
                 print(f"=== {tag} ===", flush=True)
-                rec = run_cell(arch, shape, mesh_kind, args.zero)
+                rec = run_cell(arch, shape, mesh_kind, args.zero,
+                               plan_mode=args.plan)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
                 print(f"  -> {rec['status']} "

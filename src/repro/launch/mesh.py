@@ -37,6 +37,36 @@ def pod_size_of(mesh) -> int:
     return total // sizes["pod"]
 
 
+def cluster_for_mesh(mesh, chips=None, inter_pod_bw: float | None = None):
+    """Map a JAX mesh onto the topology model the planner prices
+    (``repro.plan``, DESIGN.md §9).
+
+    Islands come from the mesh's 'pod' axis (one island when absent); each
+    island gets ``total_devices / n_pods`` chips.  ``chips`` is the hardware
+    each island runs on — a single ``ChipSpec`` for homogeneous fleets or a
+    per-pod sequence for mixed generations; defaults to v5e, matching the
+    production dry-run target.
+
+    Returns:
+        A ``topology.ClusterSpec`` whose pod count and sizes mirror the mesh.
+    """
+    from repro.core.topology import (ChipSpec, ClusterSpec, IB_HDR_BW,
+                                     PodSpec, TPU_V5E)
+    sizes = mesh_axis_sizes(mesh)
+    n_pods = sizes.get("pod", 1)
+    total = 1
+    for s in mesh.devices.shape:
+        total *= s
+    per_pod = total // n_pods
+    if chips is None:
+        chips = [TPU_V5E] * n_pods
+    elif isinstance(chips, ChipSpec):
+        chips = [chips] * n_pods
+    pods = tuple(PodSpec(f"pod{i}", c, per_pod) for i, c in enumerate(chips))
+    return ClusterSpec(
+        pods, inter_pod_bw=IB_HDR_BW if inter_pod_bw is None else inter_pod_bw)
+
+
 def make_smoke_mesh(n_pods: int = 1, data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (device count must already be forced)."""
     if n_pods > 1:

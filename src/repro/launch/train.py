@@ -2,12 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
         [--steps 50] [--zero 1|3] [--mode flat|hier|auto] [--seq 128] \
-        [--reduced] [--mesh-shape 2,2,2] [--ckpt-dir DIR] [--resume]
+        [--plan manual|auto] [--reduced] [--mesh-shape 2,2,2] \
+        [--ckpt-dir DIR] [--resume]
 
 Defaults run the reduced config on an 8-host-device (2,2,2) mesh so the
 launcher is exercisable on CPU; on a real fleet pass the production mesh and
 drop --reduced.  Cluster launchers (SLURM/GKE) invoke exactly this module on
 every host (JAX multi-controller picks up the process set).
+
+``--plan auto`` hands the collective configuration (mode, channels, bucket,
+ZeRO stage kept as given, per-pod shares) to the plan autotuner
+(``repro.plan``, DESIGN.md §9) instead of ``--mode``/``--zero`` hand-tuning;
+the batch contract (micro-batch size × micro-steps) is preserved.
 """
 import argparse
 import os
@@ -19,6 +25,8 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--zero", type=int, default=1)
     ap.add_argument("--mode", default="hier")
+    ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
+                    help="auto: repro.plan picks mode/channels/bucket/shares")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--micro-batch", type=int, default=1)
     ap.add_argument("--n-micro", type=int, default=2)
@@ -58,13 +66,29 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     model = build(cfg)
-    n_pods = dict(zip(axes, shape)).get("pod", 1)
-    plan = uniform_plan(n_pods, args.n_micro * n_pods, args.micro_batch)
+    sizes = dict(zip(axes, shape))
+    n_pods = sizes.get("pod", 1)
     rc = RunConfig(zero_stage=args.zero, collective_mode=args.mode,
                    learning_rate=args.lr,
                    param_dtype="float32" if args.reduced else "bfloat16")
+    if args.plan == "auto":
+        from repro import plan as plan_mod
+        from repro.launch.mesh import cluster_for_mesh
+        data_axis = sizes.get("data", 1)
+        req = plan_mod.plan_request(
+            cluster_for_mesh(mesh), cfg,
+            global_batch=args.n_micro * n_pods * args.micro_batch * data_axis,
+            seq_len=args.seq, data_axis=data_axis, zero_stage=args.zero,
+            micro_tokens=args.micro_batch * args.seq)
+        tp = plan_mod.autotune(req)
+        plan, rc = tp.plan, tp.run_config(rc)
+        print(f"plan auto: mode={tp.mode} C={tp.n_channels} "
+              f"bucket={tp.bucket_bytes >> 20}MiB shares={plan.micro_per_pod} "
+              f"modeled_step={tp.modeled_step_s:.4f}s")
+    else:
+        plan = uniform_plan(n_pods, args.n_micro * n_pods, args.micro_batch)
     prog = make_train_program(model, mesh, rc, plan)
-    print(f"arch={cfg.name} params={model.n_params():,} mesh={dict(zip(axes, shape))} "
+    print(f"arch={cfg.name} params={model.n_params():,} mesh={sizes} "
           f"zero={args.zero} mode={prog.hcfg.resolved_mode()}")
     state = prog.init_fn(jax.random.PRNGKey(args.seed))
     pipe = DataPipeline(seed=args.seed, plan=plan, dp_world=prog.dp_world(),

@@ -1,0 +1,26 @@
+"""``repro.plan`` — end-to-end heterogeneous plan autotuner (DESIGN.md §9).
+
+One call replaces the hand-set flag soup (collective mode, channel count,
+bucket size, ZeRO stage, per-pod micro-batch shares):
+
+    from repro import plan
+    req = plan.plan_request(cluster, model_cfg, global_batch=256,
+                            seq_len=4096, data_axis=8)
+    tp  = plan.autotune(req)        # best TrainPlan, priced by the simulator
+    rc  = tp.run_config()           # -> RunConfig for make_train_program
+
+See ``autotuner`` for the search, ``refine`` for the measured-profile
+feedback loop, and DESIGN.md §9 for the cost model and re-plan contract.
+"""
+from repro.plan.autotuner import (DEFAULT_BUCKET, DEFAULT_SPACE, MiB,
+                                  PlanRequest, SearchSpace, TrainPlan,
+                                  autotune, estimate_hbm_bytes, plan_request,
+                                  pod_profiles, rank, workload_for)
+from repro.plan.refine import calibrate, refine, refined_frontier
+
+__all__ = [
+    "DEFAULT_BUCKET", "DEFAULT_SPACE", "MiB", "PlanRequest", "SearchSpace",
+    "TrainPlan", "autotune", "calibrate", "estimate_hbm_bytes",
+    "plan_request", "pod_profiles", "rank", "refine", "refined_frontier",
+    "workload_for",
+]

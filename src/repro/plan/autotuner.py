@@ -1,0 +1,400 @@
+"""The heterogeneity-aware plan autotuner (DESIGN.md §9).
+
+HetCCL's knobs — per-pod micro-batch shares (paper §4.5), collective mode
+(flat | hier | pipelined), pipeline channel count, gradient fusion bucket
+size, ZeRO stage — each exist as a separate flag the user must hand-tune.
+The paper's value proposition ("practical training on mixed fleets without
+changes to existing applications") implies a planner that picks them
+*jointly*.  This module is that planner:
+
+    request    = plan_request(cluster, model_cfg, global_batch, seq_len,
+                              data_axis=8)
+    trainplan  = autotune(request)            # or rank(request) for the
+    rc         = trainplan.run_config()       # full candidate frontier
+
+Every candidate in the search space (DESIGN.md §9) is priced with the
+calibrated α-β simulator (``simulator.planned_step_time``: roofline compute
+per pod + collective traffic at the granularity the runtime actually emits),
+checked against a coarse HBM feasibility model, and ranked deterministically.
+The winning :class:`TrainPlan` materializes directly into the existing
+``RunConfig``/``HetCCLConfig`` pair, so ``launch.train``/``launch.dryrun``
+gain a ``--plan auto`` path that replaces today's hand-set collective flags.
+
+The planner is pure numpy — it never imports JAX — so it can run on a login
+node before any accelerator is touched, and re-run cheaply inside the
+elastic-restart path (``repro.plan.refine`` / ``train.ft.replan_auto``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import simulator as sim
+from repro.core.balance import HetPlan, PodProfile, make_plan
+from repro.core.topology import ClusterSpec
+
+MiB = 1024 * 1024
+
+# Deterministic tie-break order: on equal modeled time prefer the simpler
+# schedule (fewer moving parts to debug on a real fleet).
+_MODE_ORDER = {"flat": 0, "hier": 1, "pipelined": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """The joint space ``autotune`` searches (DESIGN.md §9).
+
+    modes:        collective modes to consider.  ``flat`` is always priced as
+                  a baseline even when absent, so the returned plan can never
+                  be one the simulator prices slower than flat.
+    n_channels:   channel counts tried for the ``pipelined`` mode (flat/hier
+                  have no channels; they are enumerated once with C=1).
+    bucket_bytes: gradient fusion bucket sizes (ZeRO-1 only; ZeRO-3 traffic
+                  is per-layer and takes the default bucket).
+    zero_stages:  ZeRO stages to consider (pinned by ``PlanRequest.zero_stage``
+                  when the caller has already chosen).
+    """
+
+    modes: tuple[str, ...] = ("flat", "hier", "pipelined")
+    n_channels: tuple[int, ...] = (2, 4, 8)
+    bucket_bytes: tuple[int, ...] = (16 * MiB, 64 * MiB, 256 * MiB)
+    zero_stages: tuple[int, ...] = (1, 3)
+
+
+DEFAULT_SPACE = SearchSpace()
+DEFAULT_BUCKET = 64 * MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """Everything the planner needs to price candidates — kept on the
+    resulting :class:`TrainPlan` so the profile-refinement loop can re-plan
+    without the caller re-assembling context (DESIGN.md §9 re-plan contract).
+
+    cluster:      island/fabric description (``repro.core.topology``).
+    model:        the architecture being trained.
+    global_batch: sequences per optimizer step (the training contract the
+                  planner must preserve across re-plans).
+    seq_len:      sequence length.
+    data_axis:    DP devices *per island* (the mesh's 'data' axis size) —
+                  uniform across islands, per the SPMD contract
+                  (DESIGN.md §3).
+    micro_tokens: target tokens per device per micro-step (bounds the remat
+                  activation stash, same heuristic as the dry-run).
+    zero_stage:   pin the ZeRO stage instead of searching over it.
+    comm_scale:   sync-granularity/contention multiplier passed through to
+                  the simulator (see ``simulator.step_time``).
+    overlap:      fraction of communication hidden under compute.
+    """
+
+    cluster: ClusterSpec
+    model: ModelConfig
+    global_batch: int
+    seq_len: int
+    data_axis: int = 1
+    micro_tokens: int = 8192
+    zero_stage: int | None = None
+    comm_scale: float = 1.0
+    overlap: float = 0.0
+
+    def micro_batch(self) -> int:
+        """Per-device micro-batch: fill ``micro_tokens`` but never exceed the
+        per-device share of the global batch (dry-run heuristic)."""
+        dp_world = self.data_axis * len(self.cluster.pods)
+        per_dev = max(self.global_batch // max(dp_world, 1), 1)
+        return max(1, min(per_dev, self.micro_tokens // max(self.seq_len, 1)))
+
+    def total_micro(self) -> int:
+        """Live micro-steps summed over pods: global_batch sequences split
+        into (micro_batch × data_axis)-sequence micro-steps.
+
+        Raises:
+            ValueError: when ``global_batch`` cannot be realized exactly —
+                not divisible by ``micro_batch() × data_axis``, or too small
+                to give every island its minimum one micro-step.  The batch
+                size is a training contract; the planner never silently
+                trains a different one.
+        """
+        mb = self.micro_batch()
+        total, rem = divmod(self.global_batch, mb * self.data_axis)
+        if rem or total < len(self.cluster.pods):
+            raise ValueError(
+                f"global_batch={self.global_batch} is not realizable as "
+                f"micro-steps of micro_batch={mb} x data_axis="
+                f"{self.data_axis} over {len(self.cluster.pods)} pods "
+                f"(needs a multiple of {mb * self.data_axis}, at least "
+                f"{len(self.cluster.pods)} of them)")
+        return total
+
+    def tensor_parallel(self) -> int:
+        """Model-parallel degree per DP lane (chips per pod / data_axis)."""
+        min_chips = min(p.n_chips for p in self.cluster.pods)
+        return max(min_chips // max(self.data_axis, 1), 1)
+
+    def comm_cluster(self) -> ClusterSpec:
+        """The DP projection of the cluster: the group DP collectives really
+        run over is ``data_axis`` devices per island (the TP dimension holds
+        different shards and never joins a DP ring, DESIGN.md §3), so
+        communication must be priced on islands of ``data_axis`` chips — not
+        all chips — or it is overpriced by the TP degree (DESIGN.md §9)."""
+        pods = tuple(dataclasses.replace(p, n_chips=self.data_axis)
+                     for p in self.cluster.pods)
+        return ClusterSpec(pods, inter_pod_bw=self.cluster.inter_pod_bw,
+                           inter_pod_alpha=self.cluster.inter_pod_alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """One fully-specified, priced configuration (DESIGN.md §9).
+
+    The tentpole contract: a TrainPlan materializes directly into the
+    existing config objects — :meth:`run_config` for the trainer,
+    :meth:`hetccl_config` for a bare collective-layer install — so adopting
+    the planner requires no changes to application code.
+    """
+
+    request: PlanRequest
+    space: SearchSpace
+    plan: HetPlan                 # per-pod micro-batch shares
+    mode: str                     # flat | hier | pipelined
+    n_channels: int               # 1 for non-pipelined modes (serial)
+    bucket_bytes: int
+    zero_stage: int
+    modeled_step_s: float
+    modeled_compute_s: float
+    modeled_comm_s: float
+    modeled_tokens_per_s: float
+    fits_hbm: bool
+    hbm_bytes_per_device: float
+    compute_scale: float = 1.0    # profile-refinement calibration (refine())
+    # the per-pod speeds the shares were computed from (measured profiles or
+    # the hardware-constant fallback) — carried so refine() re-plans on the
+    # same evidence instead of silently reverting to datasheet speeds
+    profiles: tuple[PodProfile, ...] | None = None
+
+    def run_config(self, base: RunConfig | None = None) -> RunConfig:
+        """Materialize into the trainer's :class:`RunConfig`.
+
+        Args:
+            base: optional RunConfig whose non-planned knobs (learning rate,
+                dtypes, remat, ...) are preserved; defaults to ``RunConfig()``.
+        Returns:
+            ``base`` with the planner-owned fields (``zero_stage``,
+            ``collective_mode``, ``n_channels``, ``bucket_bytes``,
+            ``n_micro``) replaced.
+
+        Example::
+
+            rc = autotune(req).run_config(RunConfig(learning_rate=1e-3))
+            prog = make_train_program(model, mesh, rc, autotune(req).plan)
+        """
+        base = base or RunConfig()
+        return dataclasses.replace(
+            base, zero_stage=self.zero_stage, collective_mode=self.mode,
+            n_channels=self.n_channels, bucket_bytes=self.bucket_bytes,
+            n_micro=self.plan.n_micro_max)
+
+    def hetccl_config(self, local_axes: tuple[str, ...] = ("data",),
+                      pod_axis: str | None = "pod"):
+        """Materialize into a bare :class:`repro.core.hetccl.HetCCLConfig`
+        (for ``hetccl.install``/``use`` outside the trainer)."""
+        from repro.core import hetccl   # lazy: keeps the planner jax-free
+        return hetccl.HetCCLConfig(
+            mode=self.mode, local_axes=local_axes,
+            pod_axis=pod_axis if len(self.request.cluster.pods) > 1 else None,
+            bucket_bytes=self.bucket_bytes, n_channels=self.n_channels)
+
+    def summary(self) -> dict:
+        """JSON-friendly digest (the dry-run record / plan_sweep row)."""
+        return {
+            "mode": self.mode, "n_channels": self.n_channels,
+            "bucket_MiB": self.bucket_bytes // MiB,
+            "zero_stage": self.zero_stage,
+            "micro_per_pod": list(self.plan.micro_per_pod),
+            "micro_batch": self.plan.micro_batch,
+            "modeled_step_s": self.modeled_step_s,
+            "modeled_compute_s": self.modeled_compute_s,
+            "modeled_comm_s": self.modeled_comm_s,
+            "modeled_tokens_per_s": self.modeled_tokens_per_s,
+            "fits_hbm": self.fits_hbm,
+            "hbm_GB_per_device": self.hbm_bytes_per_device / 1e9,
+            "compute_scale": self.compute_scale,
+        }
+
+
+def workload_for(cfg: ModelConfig, seq_len: int, micro_batch: int,
+                 zero_stage: int, tensor_parallel: int = 1) -> sim.TrainWorkload:
+    """Build the simulator workload for one model config.
+
+    FLOPs follow the dry-run spec formula (6·N_active·D, embedding lookup
+    excluded).  Both ``flops_per_token`` and ``param_bytes`` are divided by
+    the tensor-parallel degree: each device computes only its TP shard of
+    every token and holds (hence DP-reduces) only its TP shard of the
+    gradients — price the result against the DP projection of the cluster
+    (``PlanRequest.comm_cluster``), never the full chip count.
+    """
+    n_active = cfg.n_active_params() - cfg.vocab * cfg.d_model
+    tp = max(tensor_parallel, 1)
+    return sim.TrainWorkload(
+        name=cfg.name,
+        flops_per_token=6.0 * n_active / tp,
+        param_bytes=2.0 * cfg.n_params() / tp,
+        seq_len=seq_len, micro_batch=micro_batch, zero_stage=zero_stage)
+
+
+def estimate_hbm_bytes(request: PlanRequest, zero_stage: int,
+                       micro_batch: int) -> float:
+    """Coarse per-device HBM estimate used only for feasibility pruning.
+
+    Counts (per TP shard of N params): bf16 params + f32 grad accumulators,
+    with optimizer state (m, v, f32 master = 12 B/param) sharded over the DP
+    world under either stage; ZeRO-3 additionally shards params+grads and
+    holds one layer's gathered params as working set.  Activations are the
+    remat residual stash: one bf16 residual per layer plus a small working
+    multiple.  Deliberately rough — the authoritative check remains the
+    dry-run's ``memory_analysis`` — but enough to stop the planner selecting
+    ZeRO-1 for a 33B model on 16 GB chips.
+    """
+    cfg = request.model
+    n = cfg.n_params() / request.tensor_parallel()
+    dp_world = max(request.data_axis * len(request.cluster.pods), 1)
+    opt = 12.0 * n / dp_world
+    if zero_stage >= 3:
+        state = (2.0 + 4.0) * n / dp_world + opt
+        state += 2.0 * 2.0 * n / max(cfg.n_layers, 1)   # gathered layer (fwd+bwd)
+    else:
+        state = (2.0 + 4.0) * n + opt
+    act = micro_batch * request.seq_len * cfg.d_model * 2.0 * (cfg.n_layers + 4)
+    return state + act
+
+
+def pod_profiles(cluster: ClusterSpec) -> tuple[PodProfile, ...]:
+    """Default (un-profiled) speeds: each island's effective FLOP/s, the same
+    constants the balancer's examples use before a measured profile exists."""
+    return tuple(PodProfile(p.name, p.effective_flops, p.n_chips)
+                 for p in cluster.pods)
+
+
+def plan_request(cluster: ClusterSpec, model: ModelConfig, global_batch: int,
+                 seq_len: int, **kw) -> PlanRequest:
+    """Convenience constructor mirroring :class:`PlanRequest`'s fields."""
+    return PlanRequest(cluster=cluster, model=model,
+                       global_batch=global_batch, seq_len=seq_len, **kw)
+
+
+def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
+    """Deterministic candidate enumeration with dimension pruning: channel
+    counts only vary the pipelined mode, bucket sizes only ZeRO-1; the flat
+    baseline is always included.  Yields (mode, n_channels, bucket, zero)."""
+    seen = set()
+    modes = tuple(space.modes)
+    if "flat" not in modes:
+        modes = ("flat",) + modes
+    for zero in zero_stages:
+        for mode in modes:
+            channels = space.n_channels if mode == "pipelined" else (1,)
+            buckets = space.bucket_bytes if zero < 3 else (DEFAULT_BUCKET,)
+            for c in channels:
+                for b in buckets:
+                    key = (mode, c, b, zero)
+                    if key not in seen:
+                        seen.add(key)
+                        yield key
+
+
+def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
+         profiles: Sequence[PodProfile] | None = None,
+         compute_scale: float = 1.0) -> list[TrainPlan]:
+    """Price every candidate and return the full frontier, best first.
+
+    Args:
+        request: the planning problem (cluster, model, batch contract).
+        space: the joint search space; ``DEFAULT_SPACE`` covers the modes,
+            channel counts and bucket sizes the runtime supports.
+        profiles: measured per-pod throughputs from a profiling run; when
+            absent the balancer falls back to the cluster's hardware
+            constants (``pod_profiles``) — exactly the paper's
+            profile-then-plan split (§4.5).
+        compute_scale: calibration factor from the refinement loop
+            (``repro.plan.refine``); 1.0 before any measurement.
+    Returns:
+        Candidates sorted by (feasibility, modeled step time, simplicity).
+        Deterministic: equal-cost candidates break ties toward the simpler
+        schedule (flat < hier < pipelined, then fewer channels, smaller
+        buckets, lower ZeRO stage).
+    """
+    cluster = request.cluster
+    profiles = tuple(profiles) if profiles else pod_profiles(cluster)
+    if len(profiles) != len(cluster.pods):
+        raise ValueError(
+            f"{len(profiles)} profiles for {len(cluster.pods)} pods")
+    mb = request.micro_batch()
+    hetplan = make_plan(profiles, request.total_micro(), mb)
+    zero_stages = ((request.zero_stage,) if request.zero_stage is not None
+                   else tuple(space.zero_stages))
+    comm_cluster = request.comm_cluster()
+    w = workload_for(request.model, request.seq_len, mb, 1,
+                     request.tensor_parallel())
+    live_tokens = hetplan.total_micro * mb * request.data_axis * request.seq_len
+    # compute is candidate-invariant (shares and micro schedule are fixed
+    # per request; mode/channels/bucket/stage only change communication):
+    # price it once — max over pods of that pod's micro-step count at its
+    # per-chip effective FLOP/s, as in simulator.planned_step_time.
+    comp = compute_scale * max(
+        n_micro * w.tokens_per_micro * w.flops_per_token
+        / p.chip.effective_flops
+        for p, n_micro in zip(cluster.pods, hetplan.micro_per_pod))
+
+    out = []
+    for mode, n_channels, bucket, zero in _candidates(space, zero_stages):
+        if zero >= 3:
+            comm = sim.zero3_comm_time(w.param_bytes, request.model.n_layers,
+                                       comm_cluster, mode,
+                                       n_channels=n_channels)
+        else:
+            comm = sim.bucketed_all_reduce_time(w.param_bytes, comm_cluster,
+                                                mode, bucket_bytes=bucket,
+                                                n_channels=n_channels)
+        comm = (1.0 - request.overlap) * request.comm_scale * comm
+        step_s = comp + comm
+        hbm = estimate_hbm_bytes(request, zero, mb)
+        out.append(TrainPlan(
+            request=request, space=space, plan=hetplan, mode=mode,
+            n_channels=n_channels, bucket_bytes=bucket, zero_stage=zero,
+            modeled_step_s=step_s, modeled_compute_s=comp,
+            modeled_comm_s=comm,
+            modeled_tokens_per_s=live_tokens / step_s if step_s > 0 else 0.0,
+            fits_hbm=hbm <= min(p.chip.hbm_bytes for p in cluster.pods),
+            hbm_bytes_per_device=hbm, compute_scale=compute_scale,
+            profiles=profiles))
+    out.sort(key=lambda t: (not t.fits_hbm, t.modeled_step_s,
+                            _MODE_ORDER[t.mode], t.n_channels,
+                            t.bucket_bytes, t.zero_stage))
+    return out
+
+
+def autotune(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
+             profiles: Sequence[PodProfile] | None = None,
+             compute_scale: float = 1.0) -> TrainPlan:
+    """Pick the best plan for ``request`` (the ``--plan auto`` entry point).
+
+    Equivalent to ``rank(...)[0]``.  Because the flat baseline is always in
+    the candidate set and ranking is by modeled step time, the returned plan
+    is never one the simulator prices slower than ``flat`` *among
+    memory-feasible candidates* (feasibility outranks speed: when flat
+    itself fails the HBM gate a slower-but-fitting plan legitimately wins) —
+    and on a homogeneous single island it degenerates to exactly the flat,
+    uniform hand-tuned configuration (DESIGN.md §9).
+
+    Example::
+
+        from repro import plan
+        from repro.core.topology import tpu_multipod
+        req = plan.plan_request(tpu_multipod(4, 128), cfg,
+                                global_batch=256, seq_len=4096, data_axis=8)
+        tp = plan.autotune(req)
+        rc = tp.run_config()            # feed straight into make_train_program
+    """
+    return rank(request, space, profiles=profiles,
+                compute_scale=compute_scale)[0]

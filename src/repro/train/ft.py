@@ -12,7 +12,11 @@ different mesh (elastic).  This module implements the control plane:
                           throughput drifted (thermal throttling etc.), which
                           triggers re-profiling -> new balance plan (the
                           paper's "online re-profiling" future work, App. A);
-  replan(...)           — elastic re-balance when the pod set changes.
+  replan(...)           — elastic re-balance when the pod set changes;
+  replan_auto(...)      — same, but through the plan autotuner: measured
+                          profiles + observed step time re-rank the whole
+                          (shares, mode, channels, bucket) configuration
+                          (repro.plan.refine, DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -28,7 +32,13 @@ from repro.train import checkpoint as ckpt_mod
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    """EMA of step time; flags drift beyond ``tolerance`` (e.g. 20%)."""
+    """EMA of step time; flags drift beyond ``tolerance`` (e.g. 20%).
+
+    The smoothed estimate (:attr:`ema`) is the measured step time the plan
+    autotuner's refinement loop consumes (``repro.plan.refine`` /
+    :func:`replan_auto`, DESIGN.md §9): a drift flag triggers re-profiling,
+    the EMA calibrates the planner's compute model.
+    """
 
     alpha: float = 0.1
     tolerance: float = 0.2
@@ -42,11 +52,49 @@ class StragglerMonitor:
         self._ema = (1 - self.alpha) * self._ema + self.alpha * step_time
         return drifted
 
+    @property
+    def ema(self) -> float | None:
+        """Smoothed step seconds (None until the first observation)."""
+        return self._ema
+
 
 def replan(old_plan: HetPlan, profiles: list[PodProfile]) -> HetPlan:
-    """Rebalance after pod-set or throughput change (elastic scaling)."""
+    """Rebalance after pod-set or throughput change (elastic scaling).
+
+    Shares-only: keeps the old plan's total micro-steps and micro-batch and
+    redistributes them over ``profiles``.  When the run was planned by the
+    autotuner, prefer :func:`replan_auto`, which re-ranks the *whole*
+    configuration (mode/channels/bucket too) under the same contract.
+    """
     total = old_plan.total_micro
     return make_plan(profiles, total, old_plan.micro_batch)
+
+
+def replan_auto(train_plan, profiles: list[PodProfile] | None = None,
+                observed_step_s: float | None = None, cluster=None):
+    """Elastic re-plan through the autotuner (DESIGN.md §9 re-plan contract).
+
+    Args:
+        train_plan: the incumbent ``repro.plan.TrainPlan`` (carries the
+            original request: global batch, micro granularity, cluster).
+        profiles: measured per-pod throughputs (e.g. from
+            ``balance.profile_throughput`` after a drift flag).
+        observed_step_s: measured step seconds (``StragglerMonitor.ema``);
+            recalibrates the planner's compute model before re-ranking.
+        cluster: pass the new ``ClusterSpec`` when the pod *set* changed
+            (island lost/replaced); the batch contract is preserved.
+    Returns:
+        A fresh best ``TrainPlan`` — materialize with ``.run_config()`` and
+        restart from the last checkpoint on the new plan.
+    """
+    from repro import plan as plan_mod
+    if cluster is not None:
+        req = dataclasses.replace(train_plan.request, cluster=cluster)
+        train_plan = dataclasses.replace(train_plan, request=req)
+        if profiles is None:
+            profiles = list(plan_mod.pod_profiles(cluster))
+    return plan_mod.refine(train_plan, profiles,
+                           observed_step_s=observed_step_s)
 
 
 class InjectedFailure(RuntimeError):
@@ -57,11 +105,16 @@ def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
                    ckpt_every: int = 50, n_steps: int = 100,
                    state_shardings=None, fail_at: int | None = None,
                    max_restarts: int = 3, monitor: StragglerMonitor | None = None,
-                   log_every: int = 10, metrics_cb: Callable | None = None):
+                   log_every: int = 10, metrics_cb: Callable | None = None,
+                   drift_cb: Callable | None = None):
     """Run ``n_steps`` with checkpointing and automatic restart.
 
     ``batches``: callable step -> batch (deterministic, seekable).
     ``fail_at``: inject one failure at that step (tests the recovery path).
+    ``drift_cb``: called as ``drift_cb(step, step_seconds)`` whenever the
+    straggler monitor flags drift — the hook the re-planning control plane
+    hangs off (kick a profiling run, then :func:`replan_auto` and restart on
+    the refined plan; DESIGN.md §9).
     Returns (final_state, history list of metric dicts).
     """
     history = []
@@ -83,6 +136,8 @@ def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
             dt = time.perf_counter() - t0
             if monitor is not None and monitor.observe(dt):
                 metrics = {**metrics, "straggler_flag": True}
+                if drift_cb is not None:
+                    drift_cb(step, dt)
             history.append({"step": step, **{k: float(np.asarray(v))
                                              for k, v in metrics.items()
                                              if not isinstance(v, bool)}})

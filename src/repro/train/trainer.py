@@ -81,6 +81,7 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
     hcfg = hetccl.HetCCLConfig(
         mode=rc.collective_mode, local_axes=local_axes, pod_axis=pod_axis,
         cross_dtype=jnp.dtype(rc.cross_dtype) if rc.cross_dtype else None,
+        bucket_bytes=rc.bucket_bytes,
         n_channels=rc.n_channels,
         pipeline_chunk_bytes=rc.pipeline_chunk_bytes)
     hcfg.resolved_mode()        # eager mode validation (typos fail at build)

@@ -212,7 +212,41 @@ def pipelined_vs_hier():
     return rows
 
 
+def pallas_vs_xla():
+    """Beyond-paper: DMA-ring backend vs ppermute-ring backend (DESIGN.md
+    §10), mirroring :func:`pipelined_vs_hier`.
+
+    derived = speedup of backend="pallas" (async remote copies with the
+    double-buffered in-kernel reduction: per-step critical path
+    max(wire, reduce)) over backend="xla" (wire + reduce serialized at the
+    XLA level), per op/size/cluster/mode; plus ZeRO-1/3 training throughput
+    on the paper testbed.  All-gather rows show ~1.0 by design — there is no
+    reduction to hide, which is exactly the model's claim.
+    """
+    rows = []
+    clusters = {"paper16": paper_cluster(8, 8), "tpu2x64": tpu_multipod(2, 64),
+                "tpu4x256": tpu_multipod(4, 256)}
+    for cname, c in clusters.items():
+        for op in ("all_reduce", "reduce_scatter", "all_gather"):
+            for size in (1 << 20, 1 << 25, 1 << 30):
+                for mode in ("hier", "pipelined"):
+                    t_x = sim.collective_time(op, size, c, mode, backend="xla")
+                    t_p = sim.collective_time(op, size, c, mode,
+                                              backend="pallas")
+                    rows.append((f"pallas/{op}/{mode}/{cname}/{size}B",
+                                 t_p * 1e6, t_x / t_p))
+    for w in ("zero1", "zero3"):
+        wl = _workload("llama-1b", zero=1 if w == "zero1" else 3)
+        het = paper_cluster(8, 8)
+        plan = sim.balanced_plan(wl, het, 8)
+        tp_x = sim.throughput_tokens_per_s(wl, het, plan, "pipelined")
+        tp_p = sim.throughput_tokens_per_s(wl, het, plan, "pipelined",
+                                           backend="pallas")
+        rows.append((f"pallas/train/{w}/llama-1b", 0.0, tp_p / tp_x))
+    return rows
+
+
 ALL = (fig7_collectives, fig8_p2p, fig9_training_speedup,
        fig11_other_collectives, fig13_14_mpi, fig15_highend,
        fig16_rdma_ablation, table4_balancing, scale_1000_chips,
-       pipelined_vs_hier)
+       pipelined_vs_hier, pallas_vs_xla)

@@ -84,6 +84,9 @@ def main():
     ap.add_argument("--micro-tokens", type=int, default=8192)
     ap.add_argument("--mode", default=None,
                     help="flat|hier|pipelined collective mode")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
+                    help="collective ring backend: xla ppermute rings or "
+                         "pallas DMA rings (DESIGN.md §10)")
     ap.add_argument("--n-channels", type=int, default=4,
                     help="pipeline channels of --mode pipelined")
     ap.add_argument("--pipeline-chunk-bytes", type=int, default=None)
@@ -143,6 +146,7 @@ def main():
     plan = uniform_plan(n_pods, n_micro * n_pods, mb)
     rc = RunConfig(zero_stage=args.zero,
                    collective_mode=args.mode or ("hier" if multi else "flat"),
+                   backend=args.backend,
                    n_channels=args.n_channels,
                    pipeline_chunk_bytes=args.pipeline_chunk_bytes,
                    cross_dtype=args.cross_dtype)
@@ -162,7 +166,8 @@ def main():
                         "temp_bytes": compiled.memory_analysis().temp_size_in_bytes})
     rec = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
            "mesh": args.mesh, "zero": args.zero, "n_micro": n_micro, "mb": mb,
-           "mode": rc.collective_mode, "n_channels": args.n_channels,
+           "mode": rc.collective_mode, "backend": rc.backend,
+           "n_channels": args.n_channels,
            "cross_dtype": args.cross_dtype,
            "seq_shard_acts": args.seq_shard_acts,
            "cross_pod_GB": stats.cross_pod_bytes / 1e9,

@@ -165,6 +165,8 @@ class RunConfig:
 
     zero_stage: int = 1              # 1 or 3 (the paper evaluates both)
     collective_mode: str = "auto"    # flat | hier | pipelined | auto (HetCCL)
+    backend: str = "xla"             # collective ring backend: xla | pallas
+                                     # (DMA rings, DESIGN.md §10)
     n_channels: int = 4              # pipeline channels of "pipelined" mode
     pipeline_chunk_bytes: int | None = None   # alternative channel sizing
     bucket_bytes: int = 64 * 1024 * 1024      # gradient fusion bucket size

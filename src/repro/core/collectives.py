@@ -27,6 +27,13 @@ All ops are registered in the TACC function table under variants ``"flat"``
 bandwidth-dominant ops — ``"pipelined"`` (multi-channel two-stage with the
 vendor-local stage overlapping the cross-island ring; DESIGN.md §2) so the
 whole backend can be swapped at runtime (paper §4.4).
+
+Orthogonally to the mode, the *ring implementation* is selectable via the
+``backend`` keyword (``HetCCLConfig.backend``): ``"xla"`` is the ppermute
+rings below, ``"pallas"`` swaps in the async remote-copy rings of
+``repro.kernels.ring_dma`` (double-buffered in-kernel reduction; DESIGN.md
+§10) for the cross-island stage — and for the whole ring in ``flat`` mode.
+The vendor-local stage always stays native XLA (it *is* the vendor library).
 """
 from __future__ import annotations
 
@@ -52,6 +59,32 @@ def axis_world(axes: Axis) -> int:
     for a in _axes_tuple(axes):
         n *= lax.axis_size(a)
     return n
+
+
+RING_BACKENDS = ("xla", "pallas")
+
+
+def resolve_ring_backend(backend: str, *, bidir: bool = False):
+    """(reduce_scatter, all_gather) ring primitives for ``backend``.
+
+    ``"xla"``: the ``lax.ppermute`` rings in this module.  ``"pallas"``: the
+    DMA-style rings of :mod:`repro.kernels.ring_dma` — async remote copies
+    with double-buffered in-kernel f32 reduction on TPU, the same schedule
+    emulated with ppermute + the ``collective_reduce`` kernel elsewhere
+    (DESIGN.md §10).  Imported lazily so the default path never touches
+    Pallas.
+    """
+    if backend == "pallas":
+        from repro.kernels import ring_dma
+        return ((ring_dma.ring_reduce_scatter_bidir if bidir
+                 else ring_dma.ring_reduce_scatter),
+                (ring_dma.ring_all_gather_bidir if bidir
+                 else ring_dma.ring_all_gather))
+    if backend != "xla":
+        raise ValueError(f"unknown collective backend {backend!r}; "
+                         f"expected one of {RING_BACKENDS}")
+    return ((ring_reduce_scatter_bidir if bidir else ring_reduce_scatter),
+            (ring_all_gather_bidir if bidir else ring_all_gather))
 
 
 # ---------------------------------------------------------------------------
@@ -286,25 +319,46 @@ def ring_broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @tacc.register("all_reduce", "flat", default=True)
-def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, **_):
+def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
+                    backend: str = "xla", **_):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    if backend == "pallas":
+        # the naive single-stage ring, but with the DMA kernels: one explicit
+        # ring per axis (sum is associative, so per-axis rings == one psum)
+        from repro.kernels import ring_dma
+        out = x
+        for a in all_axes:
+            out = ring_dma.ring_all_reduce(out, a)
+        return out
     return lax.psum(x, all_axes)
 
 
 @tacc.register("all_gather", "flat", default=True)
 def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
-                    tiled: bool = True, **_):
+                    tiled: bool = True, backend: str = "xla", **_):
+    gather_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
+    if backend == "pallas" and tiled:
+        from repro.kernels import ring_dma
+        out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
+        for a in gather_axes:
+            out = ring_dma.ring_all_gather(out, a)
+        return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
-    for a in _axes_tuple(axes):
+    for a in gather_axes:
         out = lax.all_gather(out, a, axis=dim, tiled=tiled)
-    if pod_axis:
-        out = lax.all_gather(out, pod_axis, axis=dim, tiled=tiled)
     return out
 
 
 @tacc.register("reduce_scatter", "flat", default=True)
-def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0, **_):
+def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *,
+                        dim: int = 0, backend: str = "xla", **_):
     all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
+    if backend == "pallas":
+        from repro.kernels import ring_dma
+        out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
+        for a in all_axes:
+            out = ring_dma.ring_reduce_scatter(out, a)
+        return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
     for a in all_axes:
         out = lax.psum_scatter(out, a, scatter_dimension=dim, tiled=True)
@@ -363,16 +417,19 @@ def _flatten_pad(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
 
 @tacc.register("all_reduce", "hier")
 def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
-                    cross_dtype=None, **_):
+                    cross_dtype=None, backend: str = "xla", **_):
     """AllReduce = local ReduceScatter -> cross-pod ring AllReduce -> local AllGather.
 
     ``cross_dtype`` optionally compresses the cross-island stage (the slow
     links), a beyond-paper knob: gradients cast to e.g. bf16 only while they
-    transit the pod boundary.
+    transit the pod boundary.  ``backend="pallas"`` swaps the cross-pod rings
+    for the DMA rings (which additionally keep an f32 accumulator under the
+    narrow wire — the fused decompression of DESIGN.md §10).
     """
     local = _axes_tuple(axes)
     if not pod_axis:
         return lax.psum(x, local)
+    cross_rs, cross_ag = resolve_ring_backend(backend)
     D = 1
     for a in local:
         D *= lax.axis_size(a)
@@ -387,7 +444,7 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
         shard = flat
     if cross_dtype is not None and cross_dtype != dtype:
         shard = shard.astype(cross_dtype)
-    shard = ring_all_gather(ring_reduce_scatter(shard, pod_axis), pod_axis)
+    shard = cross_ag(cross_rs(shard, pod_axis), pod_axis)
     if cross_dtype is not None and cross_dtype != dtype:
         shard = shard.astype(dtype)
     if D > 1:
@@ -401,13 +458,14 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 @tacc.register("all_gather", "hier")
 def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0,
-                    tiled: bool = True, **_):
+                    tiled: bool = True, backend: str = "xla", **_):
     """Local native gather, then cross-pod ring gather (pod-major order)."""
     out = flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
     if pod_axis:
+        _, cross_ag = resolve_ring_backend(backend)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
-        out = ring_all_gather(out, pod_axis)
+        out = cross_ag(out, pod_axis)
         if dim != 0:
             out = jnp.moveaxis(out, 0, dim)
     return out
@@ -415,13 +473,14 @@ def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0
 
 @tacc.register("reduce_scatter", "hier")
 def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
-                        dim: int = 0, **_):
+                        dim: int = 0, backend: str = "xla", **_):
     """Cross-pod ring reduce-scatter first (P2P), then local native stage."""
     out = x
     if pod_axis:
+        cross_rs, _ = resolve_ring_backend(backend)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
-        out = ring_reduce_scatter(out, pod_axis)
+        out = cross_rs(out, pod_axis)
         if dim != 0:
             out = jnp.moveaxis(out, 0, dim)
     return flat_reduce_scatter(out, axes, None, dim=dim)
@@ -463,8 +522,9 @@ def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0
 
 
 @tacc.register("reduce", "hier")
-def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0, **_):
-    s = hier_all_reduce(x, axes, pod_axis)
+def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0,
+                backend: str = "xla", **_):
+    s = hier_all_reduce(x, axes, pod_axis, backend=backend)
     flat_idx = jnp.zeros((), jnp.int32)
     stride = 1
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
@@ -523,7 +583,7 @@ def resolve_channels(nbytes: int, n_channels: int,
 def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                          cross_dtype=None, n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
-                         bidir: bool = True, **_):
+                         bidir: bool = True, backend: str = "xla", **_):
     """AllReduce as a C-channel pipeline of (local RS -> cross ring -> local AG).
 
     Equals :func:`hier_all_reduce` numerically; chunk k's cross-pod stage is
@@ -543,8 +603,7 @@ def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     flat, pad = _flatten_pad(x, C * D * P)
     n = flat.shape[0]
     chunks = list(jnp.split(flat, C)) if C > 1 else [flat]
-    cross_ring_rs = ring_reduce_scatter_bidir if bidir else ring_reduce_scatter
-    cross_ring_ag = ring_all_gather_bidir if bidir else ring_all_gather
+    cross_ring_rs, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir)
 
     def local_rs(c):
         if D == 1:
@@ -577,7 +636,7 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
                          dim: int = 0, tiled: bool = True,
                          n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
-                         bidir: bool = True, **_):
+                         bidir: bool = True, backend: str = "xla", **_):
     """Two-stage gather, pipelined: chunk k's cross-pod ring gather overlaps
     chunk k+1's local native gather.  Pod-major result order (same as hier)."""
     if not pod_axis:
@@ -591,7 +650,7 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
     C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
                          pipeline_chunk_bytes, c0)
     chunks = list(jnp.array_split(xm, C)) if C > 1 else [xm]
-    cross_ring_ag = ring_all_gather_bidir if bidir else ring_all_gather
+    _, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir)
 
     def local_ag(c):
         return flat_all_gather(c, axes, None, dim=0, tiled=True)
@@ -616,7 +675,7 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
 def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                              dim: int = 0, n_channels: int = 4,
                              pipeline_chunk_bytes: int | None = None,
-                             bidir: bool = True, **_):
+                             bidir: bool = True, backend: str = "xla", **_):
     """Two-stage reduce-scatter, pipelined: chunk k's local native stage
     overlaps chunk k+1's cross-pod ring."""
     if not pod_axis:
@@ -633,7 +692,7 @@ def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
     grouped = xm.reshape((W, s) + xm.shape[1:])
     chunks = [c.reshape((W * c.shape[1],) + xm.shape[1:])
               for c in jnp.array_split(grouped, C, axis=1)] if C > 1 else [xm]
-    cross_ring_rs = ring_reduce_scatter_bidir if bidir else ring_reduce_scatter
+    cross_ring_rs, _ = resolve_ring_backend(backend, bidir=bidir)
 
     def cross(c):
         return cross_ring_rs(c, pod_axis)
@@ -670,9 +729,16 @@ def _fsdp_ag_bwd(axis, dim, _, g):
     # Gradient reduce-scatter with the narrow wire (g.dtype) and f32
     # accumulation — the collective_reduce kernel semantics.  Also dodges an
     # XLA:CPU miscompile of bf16 psum_scatter inside partially-manual
-    # shard_map (see DESIGN.md §8).
+    # shard_map (see DESIGN.md §8).  Routed through the installed backend:
+    # under backend="pallas" the DMA ring keeps the same narrow-wire / f32
+    # contract inside the kernel (DESIGN.md §10).
+    from repro.core import hetccl   # lazy: hetccl imports this module
     gm = jnp.moveaxis(g, dim, 0) if dim else g
-    out = ring_reduce_scatter_mixed(gm, axis)
+    if hetccl.current().backend == "pallas":
+        from repro.kernels import ring_dma
+        out = ring_dma.ring_reduce_scatter(gm, axis, wire_dtype=g.dtype)
+    else:
+        out = ring_reduce_scatter_mixed(gm, axis)
     out = jnp.moveaxis(out, 0, dim) if dim else out
     return (out.astype(g.dtype),)
 

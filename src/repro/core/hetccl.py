@@ -50,6 +50,12 @@ class HetCCLConfig:
                  ~this many bytes per chunk instead of a fixed channel count.
     Either sizing is clamped per payload to ``collectives.MAX_CHANNELS`` (16)
     and to the payload's own granularity.
+    backend:     "xla" | "pallas" ring implementation (orthogonal to mode).
+                 "pallas" swaps the cross-island rings for the async
+                 remote-copy kernels of ``repro.kernels.ring_dma`` with
+                 double-buffered in-kernel reduction (DESIGN.md §10); on
+                 non-TPU platforms they fall back to an interpret-mode-
+                 equivalent ppermute schedule with the same numerics.
     """
 
     mode: str = "auto"
@@ -59,6 +65,7 @@ class HetCCLConfig:
     cross_dtype: Any = None
     n_channels: int = 4
     pipeline_chunk_bytes: int | None = None
+    backend: str = "xla"
 
     def resolved_mode(self) -> str:
         if self.mode == "auto":
@@ -68,6 +75,13 @@ class HetCCLConfig:
                 f"unknown collective mode {self.mode!r}; "
                 "expected flat | hier | pipelined | auto")
         return self.mode
+
+    def resolved_backend(self) -> str:
+        if self.backend not in _coll.RING_BACKENDS:
+            raise ValueError(
+                f"unknown collective backend {self.backend!r}; "
+                f"expected one of {_coll.RING_BACKENDS}")
+        return self.backend
 
     def dp_axes(self) -> tuple[str, ...]:
         """Pod-major: matches the gather order of both flat and hier
@@ -121,6 +135,7 @@ def install(config: HetCCLConfig) -> HetCCLConfig:
 def _install(config: HetCCLConfig, *, allow_undo: bool) -> HetCCLConfig:
     global _CURRENT
     mode = config.resolved_mode()     # validate before mutating any state
+    config.resolved_backend()
     prev = _CURRENT
     if allow_undo and _INSTALL_STACK and config == _INSTALL_STACK[-1][0]:
         uninstall()
@@ -195,6 +210,7 @@ def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
     variant = _variant_for(op, cfg.resolved_mode())
     if variant == "pipelined":
         kw = _pipeline_kwargs(cfg, kw)
+    kw.setdefault("backend", cfg.resolved_backend())
     return tacc.dispatch(op, x, cfg.local_axes, cfg.pod_axis,
                          variant=variant, **kw)
 

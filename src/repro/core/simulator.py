@@ -62,10 +62,60 @@ _RING_FACTORS = {
     "all_to_all": lambda n: (n - 1) / n,
 }
 
+# Ops whose explicit (ppermute / DMA) rings accumulate chunks on-device.
+_REDUCING_OPS = frozenset({"all_reduce", "reduce_scatter", "reduce"})
+# Chunk accumulate = read acc + read incoming + write acc per reduced byte.
+REDUCE_RW_FACTOR = 3.0
+# Double-buffer streams of the DMA ring kernel; MUST equal
+# kernels.ring_dma.NUM_BUFFERS (cross-layer contract, tested in
+# tests/test_ring_dma.py).  Kept as a literal so this module stays jax-free.
+DMA_STREAMS = 2
+
+RING_BACKENDS = ("xla", "pallas")
+
+
+def _reduce_bw(cluster: ClusterSpec) -> float:
+    """On-device accumulate throughput of the slowest island (HBM-bound)."""
+    return min(p.chip.hbm_bw for p in cluster.pods) / REDUCE_RW_FACTOR
+
+
+def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
+                        alpha: float, reduce_bw: float, *,
+                        half: float = 1.0, backend: str = "xla") -> float:
+    """One explicit ring (ppermute or DMA) over ``n`` ranks (DESIGN.md §10).
+
+    backend "xla": XLA schedules each ring step's wire transfer and its chunk
+    accumulate serially, so reducing ops pay ``W + R`` on top of the per-hop
+    α.  backend "pallas": the DMA kernel double-buffers ``DMA_STREAMS``
+    sub-chunks — while chunk k reduces, chunk k+1's remote copy is in flight —
+    so the stage pays ``Σ_k max(wire_k, reduce_k)`` plus the fill/drain of
+    the pipeline: ``(W+R)/S + (S-1)/S · max(W, R)``.  ``half`` is the
+    bidirectional-ring wire discount (reduction volume is unaffected).
+    """
+    if n <= 1:
+        return 0.0
+    if backend not in RING_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"one of {RING_BACKENDS}")
+    steps = (2 if op == "all_reduce" else 1) * (n - 1)
+    W = half * _RING_FACTORS[op](n) * nbytes / bw
+    R = 0.0
+    if op in _REDUCING_OPS:
+        # reduction happens in the reduce-scatter half: (n-1)/n of the buffer
+        R = _RING_FACTORS["reduce_scatter"](n) * nbytes / reduce_bw
+    if backend == "pallas" and R:
+        S = DMA_STREAMS
+        body = (W + R) / S + (S - 1) / S * max(W, R)
+    else:
+        body = W + R
+    return alpha * steps + body
+
 
 def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
                            n_ranks: int, alpha: float = RDMA_ALPHA) -> float:
-    """Vendor-local stage: the island's native library over its interconnect."""
+    """Vendor-local stage: the island's native library over its interconnect.
+    Always priced as the native (fused-reduction) library — the backend knob
+    only swaps the explicit cross-island rings (DESIGN.md §10)."""
     if n_ranks <= 1:
         return 0.0
     bw = pod.chip.local_link_bw * pod.chip.local_links
@@ -74,25 +124,28 @@ def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
 
 
 def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
-                           alpha: float, bidir: bool) -> list[float]:
+                           alpha: float, bidir: bool,
+                           backend: str = "xla") -> list[float]:
     """Per-chunk stage costs of the pipelined hierarchical schedule.
 
     Stage list mirrors the hier decomposition (local native stage(s) + the
     cross-island ring); ``bidir`` halves the cross ring's *bandwidth* term —
     the bidirectional rings push half the payload per direction over the
-    full-duplex link — while the per-hop α count is unchanged.
+    full-duplex link — while the per-hop α count is unchanged.  ``backend``
+    selects the cross ring's wire/reduce schedule (DESIGN.md §10).
     """
     pods = list(cluster.pods)
     P = len(pods)
     shard = chunk_bytes / max(min(p.n_chips for p in pods), 1)
     cross_bw = cluster.slowest_endpoint_bw()
+    red_bw = _reduce_bw(cluster)
     half = 0.5 if bidir else 1.0
     if op == "all_reduce":
         return [
             max(_local_collective_time("reduce_scatter", chunk_bytes, p,
                                        p.n_chips) for p in pods),
-            alpha * 2 * (P - 1) +
-            half * _RING_FACTORS["all_reduce"](P) * shard / cross_bw,
+            _explicit_ring_time("all_reduce", shard, P, cross_bw, alpha,
+                                red_bw, half=half, backend=backend),
             max(_local_collective_time("all_gather", chunk_bytes, p, p.n_chips)
                 for p in pods),
         ]
@@ -101,8 +154,8 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
         return [
             max(_local_collective_time(op, chunk_bytes, p, p.n_chips)
                 for p in pods),
-            alpha * (P - 1) +
-            ring_half * _RING_FACTORS[op](P) * shard / cross_bw,
+            _explicit_ring_time(op, shard, P, cross_bw, alpha, red_bw,
+                                half=ring_half, backend=backend),
         ]
     if op == "all_to_all":
         return [
@@ -114,7 +167,8 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
 
 
 def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
-                    alpha: float, n_channels: int, bidir: bool) -> float:
+                    alpha: float, n_channels: int, bidir: bool,
+                    backend: str = "xla") -> float:
     """Multi-channel software-pipelined time: with C chunks the slowest stage
     is paid C times and the others once (classic pipeline fill/drain), i.e.
 
@@ -127,26 +181,29 @@ def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
     """
     best = float("inf")
     for c in range(1, max(int(n_channels), 1) + 1):
-        stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir)
+        stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
+                                        backend)
         best = min(best, sum(stages) + (c - 1) * max(stages))
     return best
 
 
 def pipelined_channel_time(op: str, nbytes: float, cluster: ClusterSpec,
                            n_channels: int, alpha: float | None = None,
-                           bidir: bool = True) -> float:
+                           bidir: bool = True, backend: str = "xla") -> float:
     """T(C) at *exactly* C channels — no auto-tune.  For channel sweeps that
     want to show the fill/drain-vs-α tradeoff (collective_time's pipelined
     mode returns min over 1..n_channels and is monotone in n_channels)."""
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     c = max(int(n_channels), 1)
-    stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir)
+    stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
+                                    backend)
     return sum(stages) + (c - 1) * max(stages)
 
 
 def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
                     mode: str = "auto", alpha: float | None = None, *,
-                    n_channels: int = 4, bidir: bool = True) -> float:
+                    n_channels: int = 4, bidir: bool = True,
+                    backend: str = "xla") -> float:
     """Time of one collective over every chip in ``cluster``.
 
     mode "flat": one ring over all chips, every link bounded by the slowest
@@ -158,10 +215,21 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     (and bidirectional cross rings unless ``bidir=False``).  ``n_channels``
     defaults to HetCCLConfig's default so model and execution describe the
     same schedule.
+
+    backend "xla" | "pallas" picks the explicit-ring schedule (DESIGN.md
+    §10): the ppermute rings serialize each step's wire and reduce, the DMA
+    rings double-buffer them to ``Σ_k max(wire_k, reduce_k)``.  Native
+    single-island collectives ("flat" on one island, and every vendor-local
+    stage) are backend-invariant — the vendor library already fuses its
+    reduction, which is exactly why the pallas rings only ever pay off on the
+    cross-island stage.
     """
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     pods = list(cluster.pods)
     n = cluster.n_chips
+    if backend not in RING_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"one of {RING_BACKENDS}")
     if n <= 1:
         return 0.0
     if mode == "auto":
@@ -172,6 +240,12 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     if len(pods) == 1 or mode == "flat":
         bw = cluster.slowest_endpoint_bw() if len(pods) > 1 else \
             pods[0].chip.local_link_bw * pods[0].chip.local_links
+        if backend == "pallas":
+            # explicit DMA ring over every chip: same wire as the native
+            # ring plus the (overlapped) on-device reduction — never cheaper
+            # than the vendor library on its own island.
+            return _explicit_ring_time(op, nbytes, n, bw, alpha,
+                                       _reduce_bw(cluster), backend="pallas")
         return alpha * (n - 1) + _RING_FACTORS[op](n) * nbytes / bw
     if mode == "pipelined":
         # only the ops with a "pipelined" TACC registration run the
@@ -180,37 +254,18 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
         # with overlap the runtime never achieves.
         if op in ("all_reduce", "all_gather", "reduce_scatter"):
             return _pipelined_time(op, nbytes, cluster, alpha, n_channels,
-                                   bidir)
+                                   bidir, backend)
         mode = "hier"
-    # hierarchical: local stage + cross-pod ring on 1/n_local shards.
-    P = len(pods)
-    if op == "all_reduce":
-        local_rs = max(_local_collective_time("reduce_scatter", nbytes, p, p.n_chips)
-                       for p in pods)
-        shard = nbytes / max(min(p.n_chips for p in pods), 1)
-        cross_bw = cluster.slowest_endpoint_bw()
-        cross = alpha * 2 * (P - 1) + _RING_FACTORS["all_reduce"](P) * shard / cross_bw
-        local_ag = max(_local_collective_time("all_gather", nbytes, p, p.n_chips)
-                       for p in pods)
-        return local_rs + cross + local_ag
-    if op in ("all_gather", "reduce_scatter", "broadcast", "reduce"):
-        local = max(_local_collective_time(op, nbytes, p, p.n_chips) for p in pods)
-        shard = nbytes / max(min(p.n_chips for p in pods), 1)
-        cross_bw = cluster.slowest_endpoint_bw()
-        cross = alpha * (P - 1) + _RING_FACTORS[op](P) * shard / cross_bw
-        return local + cross
-    if op == "all_to_all":
-        local = max(_local_collective_time(op, nbytes, p, p.n_chips) for p in pods)
-        cross_bytes = nbytes * (P - 1) / P
-        cross = alpha * (P - 1) + cross_bytes / cluster.slowest_endpoint_bw()
-        return local + cross
-    raise ValueError(op)
+    # hierarchical: local stage + cross-pod ring on 1/n_local shards —
+    # the serial (C=1, unidirectional) case of the pipelined stage model.
+    stages = _pipelined_stage_times(op, nbytes, cluster, alpha, False, backend)
+    return sum(stages)
 
 
 def collective_busbw(op: str, nbytes: float, cluster: ClusterSpec,
-                     mode: str = "auto") -> float:
+                     mode: str = "auto", backend: str = "xla") -> float:
     """Algorithm bandwidth (bytes / time), the y-axis of paper Figs 7/11."""
-    return nbytes / collective_time(op, nbytes, cluster, mode)
+    return nbytes / collective_time(op, nbytes, cluster, mode, backend=backend)
 
 
 def mpi_collective_time(op: str, nbytes: float, cluster: ClusterSpec) -> float:
@@ -247,7 +302,7 @@ class TrainWorkload:
 
 def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
               mode: str = "auto", overlap: float = 0.0,
-              comm_scale: float = 1.0) -> float:
+              comm_scale: float = 1.0, backend: str = "xla") -> float:
     """One optimizer step: max-over-pods compute + collective traffic.
 
     ZeRO-1: grads AllReduce'd once per step (bucketed);
@@ -266,17 +321,21 @@ def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
                      workload.flops_per_token) / pod.effective_flops
         comp = max(comp, n_micro * per_micro)
     if workload.zero_stage >= 3:
-        comm = collective_time("all_gather", 2 * workload.param_bytes, cluster, mode)
-        comm += collective_time("reduce_scatter", workload.param_bytes, cluster, mode)
+        comm = collective_time("all_gather", 2 * workload.param_bytes, cluster,
+                               mode, backend=backend)
+        comm += collective_time("reduce_scatter", workload.param_bytes,
+                                cluster, mode, backend=backend)
     else:
-        comm = collective_time("all_reduce", workload.param_bytes, cluster, mode)
+        comm = collective_time("all_reduce", workload.param_bytes, cluster,
+                               mode, backend=backend)
     return comp + (1.0 - overlap) * comm_scale * comm
 
 
 def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
                              mode: str = "auto", *,
                              bucket_bytes: float = 64 * 1024 * 1024,
-                             n_channels: int = 4) -> float:
+                             n_channels: int = 4,
+                             backend: str = "xla") -> float:
     """Gradient-reduction time as ``hetccl.tree_all_reduce`` executes it.
 
     The runtime fuses leaves into ~``bucket_bytes`` buckets and reduces each
@@ -303,14 +362,15 @@ def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
     n_buckets = max(int(math.ceil(param_bytes / max(bucket_bytes, 1))), 1)
     b = param_bytes / n_buckets
     t_rs = collective_time("reduce_scatter", b, cluster, mode,
-                           n_channels=n_channels)
+                           n_channels=n_channels, backend=backend)
     t_ag = collective_time("all_gather", b, cluster, mode,
-                           n_channels=n_channels)
+                           n_channels=n_channels, backend=backend)
     return t_rs + t_ag + (n_buckets - 1) * max(t_rs, t_ag)
 
 
 def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
-                    mode: str = "auto", *, n_channels: int = 4) -> float:
+                    mode: str = "auto", *, n_channels: int = 4,
+                    backend: str = "xla") -> float:
     """ZeRO-3 traffic at per-layer granularity (DESIGN.md §9).
 
     The trainer gathers each layer's params inside the scan (fwd + bwd = 2×
@@ -321,9 +381,9 @@ def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
     layers = max(int(n_layers), 1)
     per = param_bytes / layers
     t_ag = collective_time("all_gather", per, cluster, mode,
-                           n_channels=n_channels)
+                           n_channels=n_channels, backend=backend)
     t_rs = collective_time("reduce_scatter", per, cluster, mode,
-                           n_channels=n_channels)
+                           n_channels=n_channels, backend=backend)
     return layers * (2.0 * t_ag + t_rs)
 
 
@@ -333,7 +393,8 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
                       bucket_bytes: float = 64 * 1024 * 1024,
                       n_layers: int = 1, overlap: float = 0.0,
                       comm_scale: float = 1.0,
-                      compute_scale: float = 1.0) -> float:
+                      compute_scale: float = 1.0,
+                      backend: str = "xla") -> float:
     """Step time of one fully-specified plan candidate (DESIGN.md §9).
 
     Same compute model as :func:`step_time` (max over pods of each pod's
@@ -353,21 +414,24 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
         comp = max(comp, n_micro * per_micro)
     if workload.zero_stage >= 3:
         comm = zero3_comm_time(workload.param_bytes, n_layers, cluster, mode,
-                               n_channels=n_channels)
+                               n_channels=n_channels, backend=backend)
     else:
         comm = bucketed_all_reduce_time(workload.param_bytes, cluster, mode,
                                         bucket_bytes=bucket_bytes,
-                                        n_channels=n_channels)
+                                        n_channels=n_channels,
+                                        backend=backend)
     return compute_scale * comp + (1.0 - overlap) * comm_scale * comm
 
 
 def throughput_tokens_per_s(workload: TrainWorkload, cluster: ClusterSpec,
                             plan: HetPlan, mode: str = "auto",
                             overlap: float = 0.0,
-                            comm_scale: float = 1.0) -> float:
+                            comm_scale: float = 1.0,
+                            backend: str = "xla") -> float:
     live = sum(m * workload.tokens_per_micro * p.n_chips
                for m, p in zip(plan.micro_per_pod, cluster.pods))
-    return live / step_time(workload, cluster, plan, mode, overlap, comm_scale)
+    return live / step_time(workload, cluster, plan, mode, overlap,
+                            comm_scale, backend)
 
 
 def balanced_plan(workload: TrainWorkload, cluster: ClusterSpec,

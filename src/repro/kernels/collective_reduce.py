@@ -9,7 +9,9 @@ payload to bf16; the accumulator stays f32).
 
   acc_new = acc + incoming.astype(f32)
 
-Tiled (8, 128)-aligned 2-D blocks; ops.py reshapes flat chunks.
+Tiled (8, 128)-aligned 2-D blocks; ops.py reshapes flat chunks.  Shapes that
+don't divide the block are padded up and sliced back (ragged chunk tails from
+the multi-channel payload splits, DESIGN.md §10), never asserted away.
 """
 from __future__ import annotations
 
@@ -28,15 +30,22 @@ def collective_reduce(acc, incoming, *, block=(256, 256),
     """acc (M, L), incoming (M, L) possibly narrower dtype -> acc.dtype."""
     M, L = acc.shape
     bm, bl = min(block[0], M), min(block[1], L)
-    assert M % bm == 0 and L % bl == 0, (acc.shape, block)
-    return pl.pallas_call(
+    pad_m, pad_l = (-M) % bm, (-L) % bl
+    if pad_m or pad_l:
+        acc = jnp.pad(acc, ((0, pad_m), (0, pad_l)))
+        incoming = jnp.pad(incoming, ((0, pad_m), (0, pad_l)))
+    Mp, Lp = acc.shape
+    out = pl.pallas_call(
         _reduce_kernel,
-        grid=(M // bm, L // bl),
+        grid=(Mp // bm, Lp // bl),
         in_specs=[
             pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
             pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, L), acc.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, Lp), acc.dtype),
         interpret=interpret,
     )(acc, incoming)
+    if pad_m or pad_l:
+        out = out[:M, :L]
+    return out

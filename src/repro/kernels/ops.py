@@ -127,8 +127,8 @@ def collective_reduce(acc, incoming, *, interpret=False):
         flat_b = jnp.pad(flat_b, (0, pad))
     a2 = flat_a.reshape(-1, L)
     b2 = flat_b.reshape(-1, L)
-    bm = 256 if a2.shape[0] % 256 == 0 else (a2.shape[0] if a2.shape[0] < 256 else 1)
-    out = _cr_pallas(a2, b2, block=(bm, L), interpret=interpret)
+    # ragged row counts are padded inside the kernel wrapper (pad-and-slice)
+    out = _cr_pallas(a2, b2, block=(256, L), interpret=interpret)
     out = out.reshape(-1)
     if pad:
         out = out[:-pad]

@@ -87,7 +87,8 @@ def _serve_batch_sds(cfg: ModelConfig, shape: ShapeConfig, kind: str):
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
-             verbose: bool = True, plan_mode: str = "manual") -> dict:
+             verbose: bool = True, plan_mode: str = "manual",
+             backend: str = "auto") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero}
@@ -107,17 +108,23 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
             dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
             assert shape.global_batch % dp == 0, (shape.global_batch, dp)
             if plan_mode == "auto":
-                # joint (shares, mode, channels, bucket) selection priced by
-                # the simulator on the mesh's modeled topology (DESIGN.md §9)
+                # joint (shares, mode, backend, channels, bucket) selection
+                # priced by the simulator on the mesh's modeled topology
+                # (DESIGN.md §9; ring backends §10)
+                import dataclasses as _dc
                 req = plan_mod.plan_request(
                     cluster_for_mesh(mesh), cfg, shape.global_batch,
                     shape.seq_len, data_axis=sizes.get("data", 1),
                     zero_stage=zero)
-                tp = plan_mod.autotune(req)
+                space = plan_mod.DEFAULT_SPACE
+                if backend != "auto":
+                    space = _dc.replace(space, backends=(backend,))
+                tp = plan_mod.autotune(req, space)
                 plan, rc = tp.plan, tp.run_config()
                 rec["plan"] = tp.summary()
                 if verbose:
-                    print(f"  plan auto: mode={tp.mode} C={tp.n_channels} "
+                    print(f"  plan auto: mode={tp.mode} backend={tp.backend} "
+                          f"C={tp.n_channels} "
                           f"bucket={tp.bucket_bytes >> 20}MiB "
                           f"shares={tp.plan.micro_per_pod} "
                           f"modeled_step={tp.modeled_step_s:.4f}s")
@@ -130,7 +137,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
                 n_micro = per_dev // mb
                 plan = uniform_plan(n_pods, n_micro * n_pods, mb)
                 rc = RunConfig(zero_stage=zero,
-                               collective_mode="hier" if multi else "flat")
+                               collective_mode="hier" if multi else "flat",
+                               backend=backend if backend != "auto" else "xla")
             batch_sds, extra_specs = _train_batch_sds(cfg, shape, mesh, plan)
             prog = make_train_program(model, mesh, rc, plan,
                                       extra_batch_specs=extra_specs)
@@ -219,7 +227,13 @@ def main():
     ap.add_argument("--zero", type=int, default=3)
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: the repro.plan autotuner picks collective "
-                         "mode/channels/bucket/shares (train cells)")
+                         "mode/backend/channels/bucket/shares (train cells)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="pin the collective ring backend (DESIGN.md §10); "
+                         "auto lets --plan auto search it (manual plans "
+                         "default to xla).  Pinned runs get a __<backend> "
+                         "file suffix so baselines can be kept side by side")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -233,9 +247,11 @@ def main():
         for shape in shapes:
             for mesh_kind in meshes:
                 tag = f"{arch}__{shape}__{mesh_kind}"
+                if args.backend != "auto":
+                    tag += f"__{args.backend}"
                 print(f"=== {tag} ===", flush=True)
                 rec = run_cell(arch, shape, mesh_kind, args.zero,
-                               plan_mode=args.plan)
+                               plan_mode=args.plan, backend=args.backend)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
                 print(f"  -> {rec['status']} "

@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--zero", type=int, default=1)
     ap.add_argument("--mode", default="hier")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
+                    help="collective ring backend (DESIGN.md §10); "
+                         "--plan auto searches it jointly and overrides this")
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: repro.plan picks mode/channels/bucket/shares")
     ap.add_argument("--seq", type=int, default=128)
@@ -69,7 +72,7 @@ def main():
     sizes = dict(zip(axes, shape))
     n_pods = sizes.get("pod", 1)
     rc = RunConfig(zero_stage=args.zero, collective_mode=args.mode,
-                   learning_rate=args.lr,
+                   backend=args.backend, learning_rate=args.lr,
                    param_dtype="float32" if args.reduced else "bfloat16")
     if args.plan == "auto":
         from repro import plan as plan_mod
@@ -82,7 +85,8 @@ def main():
             micro_tokens=args.micro_batch * args.seq)
         tp = plan_mod.autotune(req)
         plan, rc = tp.plan, tp.run_config(rc)
-        print(f"plan auto: mode={tp.mode} C={tp.n_channels} "
+        print(f"plan auto: mode={tp.mode} backend={tp.backend} "
+              f"C={tp.n_channels} "
               f"bucket={tp.bucket_bytes >> 20}MiB shares={plan.micro_per_pod} "
               f"modeled_step={tp.modeled_step_s:.4f}s")
     else:

@@ -39,6 +39,7 @@ MiB = 1024 * 1024
 # Deterministic tie-break order: on equal modeled time prefer the simpler
 # schedule (fewer moving parts to debug on a real fleet).
 _MODE_ORDER = {"flat": 0, "hier": 1, "pipelined": 2}
+_BACKEND_ORDER = {"xla": 0, "pallas": 1}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,12 +55,18 @@ class SearchSpace:
                   is per-layer and takes the default bucket).
     zero_stages:  ZeRO stages to consider (pinned by ``PlanRequest.zero_stage``
                   when the caller has already chosen).
+    backends:     ring implementations to consider (DESIGN.md §10): "xla"
+                  ppermute rings vs "pallas" DMA rings with the overlapped
+                  in-kernel reduction.  Varied only for hier/pipelined —
+                  flat's native single-stage collective is backend-invariant
+                  (the vendor library already fuses its reduction).
     """
 
     modes: tuple[str, ...] = ("flat", "hier", "pipelined")
     n_channels: tuple[int, ...] = (2, 4, 8)
     bucket_bytes: tuple[int, ...] = (16 * MiB, 64 * MiB, 256 * MiB)
     zero_stages: tuple[int, ...] = (1, 3)
+    backends: tuple[str, ...] = ("xla", "pallas")
 
 
 DEFAULT_SPACE = SearchSpace()
@@ -158,6 +165,7 @@ class TrainPlan:
     space: SearchSpace
     plan: HetPlan                 # per-pod micro-batch shares
     mode: str                     # flat | hier | pipelined
+    backend: str                  # xla | pallas ring implementation (§10)
     n_channels: int               # 1 for non-pipelined modes (serial)
     bucket_bytes: int
     zero_stage: int
@@ -192,8 +200,8 @@ class TrainPlan:
         base = base or RunConfig()
         return dataclasses.replace(
             base, zero_stage=self.zero_stage, collective_mode=self.mode,
-            n_channels=self.n_channels, bucket_bytes=self.bucket_bytes,
-            n_micro=self.plan.n_micro_max)
+            backend=self.backend, n_channels=self.n_channels,
+            bucket_bytes=self.bucket_bytes, n_micro=self.plan.n_micro_max)
 
     def hetccl_config(self, local_axes: tuple[str, ...] = ("data",),
                       pod_axis: str | None = "pod"):
@@ -203,12 +211,14 @@ class TrainPlan:
         return hetccl.HetCCLConfig(
             mode=self.mode, local_axes=local_axes,
             pod_axis=pod_axis if len(self.request.cluster.pods) > 1 else None,
-            bucket_bytes=self.bucket_bytes, n_channels=self.n_channels)
+            bucket_bytes=self.bucket_bytes, n_channels=self.n_channels,
+            backend=self.backend)
 
     def summary(self) -> dict:
         """JSON-friendly digest (the dry-run record / plan_sweep row)."""
         return {
-            "mode": self.mode, "n_channels": self.n_channels,
+            "mode": self.mode, "backend": self.backend,
+            "n_channels": self.n_channels,
             "bucket_MiB": self.bucket_bytes // MiB,
             "zero_stage": self.zero_stage,
             "micro_per_pod": list(self.plan.micro_per_pod),
@@ -285,22 +295,29 @@ def plan_request(cluster: ClusterSpec, model: ModelConfig, global_batch: int,
 
 def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
     """Deterministic candidate enumeration with dimension pruning: channel
-    counts only vary the pipelined mode, bucket sizes only ZeRO-1; the flat
-    baseline is always included.  Yields (mode, n_channels, bucket, zero)."""
+    counts only vary the pipelined mode, bucket sizes only ZeRO-1, ring
+    backends only the modes with an explicit cross-island ring (hier /
+    pipelined — flat's native collective is backend-invariant, DESIGN.md
+    §10); the flat baseline is always included.  Yields
+    (mode, backend, n_channels, bucket, zero)."""
     seen = set()
     modes = tuple(space.modes)
     if "flat" not in modes:
         modes = ("flat",) + modes
+    backends = tuple(space.backends) or ("xla",)
     for zero in zero_stages:
         for mode in modes:
             channels = space.n_channels if mode == "pipelined" else (1,)
             buckets = space.bucket_bytes if zero < 3 else (DEFAULT_BUCKET,)
-            for c in channels:
-                for b in buckets:
-                    key = (mode, c, b, zero)
-                    if key not in seen:
-                        seen.add(key)
-                        yield key
+            mode_backends = backends if mode != "flat" else (
+                backends if "xla" not in backends else ("xla",))
+            for backend in mode_backends:
+                for c in channels:
+                    for b in buckets:
+                        key = (mode, backend, c, b, zero)
+                        if key not in seen:
+                            seen.add(key)
+                            yield key
 
 
 def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
@@ -321,8 +338,8 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
     Returns:
         Candidates sorted by (feasibility, modeled step time, simplicity).
         Deterministic: equal-cost candidates break ties toward the simpler
-        schedule (flat < hier < pipelined, then fewer channels, smaller
-        buckets, lower ZeRO stage).
+        schedule (flat < hier < pipelined, then xla < pallas, fewer
+        channels, smaller buckets, lower ZeRO stage).
     """
     cluster = request.cluster
     profiles = tuple(profiles) if profiles else pod_profiles(cluster)
@@ -347,21 +364,24 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
         for p, n_micro in zip(cluster.pods, hetplan.micro_per_pod))
 
     out = []
-    for mode, n_channels, bucket, zero in _candidates(space, zero_stages):
+    for mode, backend, n_channels, bucket, zero in _candidates(space,
+                                                               zero_stages):
         if zero >= 3:
             comm = sim.zero3_comm_time(w.param_bytes, request.model.n_layers,
                                        comm_cluster, mode,
-                                       n_channels=n_channels)
+                                       n_channels=n_channels, backend=backend)
         else:
             comm = sim.bucketed_all_reduce_time(w.param_bytes, comm_cluster,
                                                 mode, bucket_bytes=bucket,
-                                                n_channels=n_channels)
+                                                n_channels=n_channels,
+                                                backend=backend)
         comm = (1.0 - request.overlap) * request.comm_scale * comm
         step_s = comp + comm
         hbm = estimate_hbm_bytes(request, zero, mb)
         out.append(TrainPlan(
             request=request, space=space, plan=hetplan, mode=mode,
-            n_channels=n_channels, bucket_bytes=bucket, zero_stage=zero,
+            backend=backend, n_channels=n_channels, bucket_bytes=bucket,
+            zero_stage=zero,
             modeled_step_s=step_s, modeled_compute_s=comp,
             modeled_comm_s=comm,
             modeled_tokens_per_s=live_tokens / step_s if step_s > 0 else 0.0,
@@ -369,8 +389,8 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
             hbm_bytes_per_device=hbm, compute_scale=compute_scale,
             profiles=profiles))
     out.sort(key=lambda t: (not t.fits_hbm, t.modeled_step_s,
-                            _MODE_ORDER[t.mode], t.n_channels,
-                            t.bucket_bytes, t.zero_stage))
+                            _MODE_ORDER[t.mode], _BACKEND_ORDER[t.backend],
+                            t.n_channels, t.bucket_bytes, t.zero_stage))
     return out
 
 

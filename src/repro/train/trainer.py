@@ -83,8 +83,10 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         cross_dtype=jnp.dtype(rc.cross_dtype) if rc.cross_dtype else None,
         bucket_bytes=rc.bucket_bytes,
         n_channels=rc.n_channels,
-        pipeline_chunk_bytes=rc.pipeline_chunk_bytes)
-    hcfg.resolved_mode()        # eager mode validation (typos fail at build)
+        pipeline_chunk_bytes=rc.pipeline_chunk_bytes,
+        backend=rc.backend)
+    hcfg.resolved_mode()        # eager mode/backend validation (typos fail
+    hcfg.resolved_backend()     # at build, not inside the compiled step)
     manual_axes = _manual_axes(local_axes, pod_axis)
     rules = make_rules(cfg, mesh, rc.zero_stage)
     ctx = Ctx(rules=rules, manual=True, dp_axes=manual_axes)
@@ -148,8 +150,16 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
                        **extra_batch_specs}
     metric_specs = {"loss": P(), "grad_norm": P(), "tokens": P()}
 
+    def step_body_installed(state, batch):
+        # hetccl.current() must reflect this program's config while the body
+        # traces: cfg-free call sites deep in the model (fsdp_all_gather's
+        # adjoint picks its ring backend at trace time, DESIGN.md §10) read
+        # the installed config, not the trainer's explicit hcfg argument.
+        with hetccl.use(hcfg):
+            return step_body(state, batch)
+
     sm_step = compat.shard_map(
-        step_body, mesh=mesh,
+        step_body_installed, mesh=mesh,
         in_specs=(state_manual_specs, batch_spec_tree),
         out_specs=(state_manual_specs, metric_specs),
         axis_names=set(manual_axes), check_vma=False)

@@ -265,6 +265,76 @@ def test_pipelined_chunk_bytes_sizing(mesh3):
     np.testing.assert_allclose(got[0], x.sum(0), rtol=1e-5)
 
 
+def test_resolve_channels_clamps():
+    """Channel sizing edge cases: n_channels > payload granularity, explicit
+    chunk_bytes ceil, MAX_CHANNELS bound, degenerate limits."""
+    rc = C.resolve_channels
+    assert rc(1024, 4, None, limit=64) == 4            # plain channel count
+    assert rc(1024, 16, None, limit=3) == 3            # n_channels > n_chunks
+    assert rc(1024, 999, None, limit=999) == C.MAX_CHANNELS
+    assert rc(1024, 0, None, limit=8) == 1             # nonsense -> serial
+    assert rc(1024, 4, 300, limit=64) == 4             # ceil(1024/300) = 4
+    assert rc(1024, 4, 2048, limit=64) == 1            # chunk > payload
+    assert rc(1024, 4, None, limit=0) == 1             # empty granularity
+    assert rc(0, 4, 256, limit=8) == 1                 # zero-byte payload
+
+
+@pytest.mark.parametrize("n_channels", [8, 16])
+def test_pipelined_channels_exceed_chunks(mesh3, n_channels):
+    """More channels than the payload has elements per rank: the clamp must
+    degrade to a correct (fewer-channel) schedule, not crash or pad-corrupt."""
+    x = rng.randn(4, 3).astype(np.float32)             # 3 elements per rank
+
+    def pipe(v):
+        return C.pipelined_all_reduce(v[0], ("data",), "pod",
+                                      n_channels=n_channels)[None]
+
+    got = run(mesh3, pipe, x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got[0], x.sum(0), rtol=1e-5, atol=1e-6)
+    y = rng.randn(4 * 2, 2).astype(np.float32)         # 2 rows per rank
+    got = run(mesh3, lambda v: C.pipelined_reduce_scatter(
+        v, ("data",), "pod", n_channels=n_channels), y, P(None),
+        P(("pod", "data")))
+    want = run(mesh3, lambda v: C.flat_reduce_scatter(v, ("data",), "pod"), y,
+               P(None), P(("pod", "data")))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_two_rank_degenerate_rings():
+    """n=2 rings: both directions share one link-pair, bidir must still hold;
+    mixed-wire and broadcast roots included (the production multi-pod mesh
+    has 2-rank cross rings per DP lane)."""
+    mesh = _ring_mesh(2)
+
+    def go(fn, v, ins, outs):
+        sm = compat.shard_map(fn, mesh=mesh, in_specs=ins, out_specs=outs,
+                              axis_names={"pod"}, check_vma=False)
+        return np.asarray(jax.jit(sm)(v))
+
+    x = rng.randn(2 * 2 * 3, 5).astype(np.float32)
+    got = go(lambda v: C.ring_reduce_scatter_bidir(v, "pod"), x, P("pod"),
+             P("pod"))
+    want = go(lambda v: jax.lax.psum_scatter(
+        v, "pod", scatter_dimension=0, tiled=True), x, P("pod"), P("pod"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    got = go(lambda v: C.ring_reduce_scatter_mixed(
+        v, "pod", wire_dtype=jnp.bfloat16), x, P("pod"), P("pod"))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    # single-row-per-rank chunk: bidir falls back to the unidirectional ring
+    y = rng.randn(2 * 2 * 1, 3).astype(np.float32)
+    got = go(lambda v: C.ring_reduce_scatter_bidir(v, "pod"), y, P("pod"),
+             P("pod"))
+    want = go(lambda v: jax.lax.psum_scatter(
+        v, "pod", scatter_dimension=0, tiled=True), y, P("pod"), P("pod"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    for root in (0, 1):
+        z = rng.randn(2, 6).astype(np.float32)
+        got = go(lambda v: C.ring_broadcast(v[0], "pod", root=root)[None], z,
+                 P("pod"), P("pod"))
+        np.testing.assert_allclose(got, np.broadcast_to(z[root], z.shape),
+                                   atol=1e-6)
+
+
 def test_pipelined_variant_registered():
     from repro.core import tacc
     for op in ("all_reduce", "all_gather", "reduce_scatter"):

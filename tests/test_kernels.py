@@ -92,6 +92,24 @@ def test_collective_reduce_sweep(n, dtype_in):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
 
 
+@pytest.mark.parametrize("shape,block", [
+    ((300, 300), (256, 256)),    # ragged in both dims
+    ((7, 130), (8, 128)),        # smaller than one block in M, ragged in L
+    ((513, 1), (256, 256)),      # ragged chunk tail from an odd channel split
+])
+def test_collective_reduce_ragged_shapes(shape, block):
+    """Regression: non-divisible (M, L) used to hard-assert; the kernel must
+    pad-and-slice instead (ragged chunk tails from the multi-channel payload
+    splits, DESIGN.md §10)."""
+    from repro.kernels.collective_reduce import collective_reduce as cr
+    a = jnp.asarray(rng.randn(*shape), jnp.float32)
+    b = jnp.asarray(rng.randn(*shape), jnp.float32).astype(jnp.bfloat16)
+    got = cr(a, b, block=block, interpret=True)
+    want = ref.collective_reduce(a, b)
+    assert got.shape == shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
 def test_attention_chunked_matches_dense():
     """The model's chunked online-softmax path == dense oracle."""
     from repro.models.attention import chunked_attention, dense_reference

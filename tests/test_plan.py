@@ -81,6 +81,42 @@ def test_multi_mesh_beats_pr1_hand_tuned_pipelined():
     assert tp.mode in ("hier", "pipelined")
 
 
+def test_backend_dimension_searched_jointly():
+    """DESIGN.md §10: the backend rides the same frontier as mode/channels.
+    On a multi-island cluster the DMA backend's overlapped reduction prices
+    strictly below the xla rings, so the winner must carry it; flat
+    candidates stay backend-invariant and are pinned to xla."""
+    for cluster in (tpu_mixed_fleet(2, 2, 128), tpu_multipod(4, 128)):
+        frontier = plan_mod.rank(_req(cluster))
+        backends = {t.backend for t in frontier}
+        assert backends == {"xla", "pallas"}
+        assert all(t.backend == "xla" for t in frontier if t.mode == "flat")
+        best = frontier[0]
+        assert best.mode in ("hier", "pipelined")
+        assert best.backend == "pallas"
+        # the same candidate under xla must not be cheaper
+        twin = [t for t in frontier
+                if (t.mode, t.n_channels, t.bucket_bytes, t.zero_stage) ==
+                   (best.mode, best.n_channels, best.bucket_bytes,
+                    best.zero_stage) and t.backend == "xla"]
+        assert twin and best.modeled_comm_s <= twin[0].modeled_comm_s
+
+
+def test_backend_roundtrips_into_configs():
+    tp = plan_mod.autotune(_req(tpu_mixed_fleet(2, 2, 128)))
+    rc = tp.run_config()
+    assert rc.backend == tp.backend
+    hcfg = tp.hetccl_config()
+    assert hcfg.backend == tp.backend
+    assert tp.summary()["backend"] == tp.backend
+
+
+def test_backend_pinnable_via_space():
+    space = dataclasses.replace(plan_mod.DEFAULT_SPACE, backends=("xla",))
+    frontier = plan_mod.rank(_req(tpu_mixed_fleet(2, 2, 128)), space)
+    assert {t.backend for t in frontier} == {"xla"}
+
+
 def test_run_config_roundtrip_through_trainer(mesh3):
     """TrainPlan -> RunConfig -> make_train_program reproduces the planned
     collective configuration in the program's HetCCLConfig."""

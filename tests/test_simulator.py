@@ -189,6 +189,61 @@ def test_bidir_knob_isolates_ring_gain():
     assert t_bi < t_uni
 
 
+def test_pallas_backend_never_slower_on_reducing_ops():
+    """DMA rings overlap wire with the in-kernel reduction: for every
+    reducing op/mode/size, backend="pallas" must price <= backend="xla"
+    (acceptance: sum_k max(wire_k, reduce_k) vs wire + reduce)."""
+    from repro.core.topology import tpu_multipod, tpu_mixed_fleet
+    clusters = (paper_cluster(8, 8), tpu_multipod(2, 64),
+                tpu_mixed_fleet(2, 2, 128))
+    for c in clusters:
+        for op in ("all_reduce", "reduce_scatter", "reduce"):
+            for mode in ("hier", "pipelined"):
+                for size in (1 << 20, 1 << 25, 1 << 30):
+                    t_x = sim.collective_time(op, size, c, mode, backend="xla")
+                    t_p = sim.collective_time(op, size, c, mode,
+                                              backend="pallas")
+                    assert t_p <= t_x * (1 + 1e-12), (op, mode, size, t_p, t_x)
+                    assert t_p < t_x, (op, mode, size)   # strictly, not ties
+
+
+def test_pallas_backend_neutral_on_gather_ops():
+    """No reduction to hide: the DMA ring moves the same bytes, so gathers
+    price identically under either backend."""
+    from repro.core.topology import tpu_multipod
+    c = tpu_multipod(4, 64)
+    for mode in ("hier", "pipelined"):
+        t_x = sim.collective_time("all_gather", 1 << 28, c, mode, backend="xla")
+        t_p = sim.collective_time("all_gather", 1 << 28, c, mode,
+                                  backend="pallas")
+        assert t_x == t_p
+
+
+def test_pallas_flat_ring_never_beats_native():
+    """On a single island the vendor library (fused reduction) is the floor:
+    an explicit DMA ring can only add cost there — which is why the
+    autotuner pins flat candidates to xla."""
+    h100 = ClusterSpec((PodSpec("h100", H100_NVLINK, 8),))
+    t_native = sim.collective_time("all_reduce", 1 << 30, h100, "flat",
+                                   backend="xla")
+    t_ring = sim.collective_time("all_reduce", 1 << 30, h100, "flat",
+                                 backend="pallas")
+    assert t_native <= t_ring
+
+
+def test_backend_invalid_rejected():
+    """Every mode path must reject a bad backend — the flat/single-island
+    branch used to silently price it as xla."""
+    from repro.core.topology import tpu_multipod
+    import pytest
+    for mode, cluster in (("hier", tpu_multipod(2, 8)),
+                          ("flat", tpu_multipod(2, 8)),
+                          ("flat", tpu_multipod(1, 8))):
+        with pytest.raises(ValueError):
+            sim.collective_time("all_reduce", 1 << 20, cluster, mode,
+                                backend="cuda")
+
+
 def test_scales_to_1000_chips():
     """Design target: hierarchical collectives stay near-flat in cost as
     islands are added (cross stage operates on 1/n_local shards)."""

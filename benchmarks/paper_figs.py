@@ -246,7 +246,53 @@ def pallas_vs_xla():
     return rows
 
 
+def striping_scaling():
+    """Beyond-paper: modeled comm time vs multi-NIC stripe count per chip
+    type (transport layer, DESIGN.md §11).
+
+    derived = speedup of k stripes over the unstriped DMA ring for the same
+    cluster — v5e islands (4 ICI links) and v4 islands (6 links) keep
+    improving until the healthy-link count caps k, while single-link chips
+    (the paper's PCIe V100s) are flat at 1.0 by construction: the planner's
+    tie-break keeps stripes=1 there.  Clusters use the DP-projection island
+    size (8 chips) the plan autotuner prices, where the cross-island ring —
+    the stage striping accelerates — dominates.
+    """
+    from repro.core.topology import (ClusterSpec, PodSpec, TPU_V4, TPU_V5E,
+                                     V100_PCIE)
+    rows = []
+    chips = {"v5e_4link": TPU_V5E, "v4_6link": TPU_V4,
+             "v100_1link": V100_PCIE}
+    for cname, chip in chips.items():
+        c = ClusterSpec(tuple(PodSpec(f"pod{i}", chip, 8) for i in range(4)))
+        for op in ("all_reduce", "reduce_scatter"):
+            base = sim.collective_time(op, 64 << 20, c, "pipelined",
+                                       backend="pallas", n_stripes=1)
+            for k in (1, 2, 4, 8):
+                t = sim.collective_time(op, 64 << 20, c, "pipelined",
+                                        backend="pallas", n_stripes=k)
+                rows.append((f"striping/{op}/{cname}/k{k}", t * 1e6,
+                             base / t))
+        auto = sim.collective_time("all_reduce", 64 << 20, c, "pipelined",
+                                   backend="pallas", n_stripes="auto")
+        base = sim.collective_time("all_reduce", 64 << 20, c, "pipelined",
+                                   backend="pallas", n_stripes=1)
+        rows.append((f"striping/all_reduce/{cname}/auto", auto * 1e6,
+                     base / auto))
+    # failover what-if: one v5e link down -> restripe over the survivors,
+    # priced (the transport failover contract: degraded, never dropped)
+    c = ClusterSpec(tuple(PodSpec(f"pod{i}", TPU_V5E, 8) for i in range(4)))
+    healthy = sim.collective_time("all_reduce", 64 << 20, c, "pipelined",
+                                  backend="pallas", n_stripes="auto")
+    c.inventory(c.pods[0]).mark_down(0)
+    failed = sim.collective_time("all_reduce", 64 << 20, c, "pipelined",
+                                 backend="pallas", n_stripes="auto")
+    rows.append(("striping/failover/v5e_1down", failed * 1e6,
+                 healthy / failed))
+    return rows
+
+
 ALL = (fig7_collectives, fig8_p2p, fig9_training_speedup,
        fig11_other_collectives, fig13_14_mpi, fig15_highend,
        fig16_rdma_ablation, table4_balancing, scale_1000_chips,
-       pipelined_vs_hier, pallas_vs_xla)
+       pipelined_vs_hier, pallas_vs_xla, striping_scaling)

@@ -87,6 +87,11 @@ def main():
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
                     help="collective ring backend: xla ppermute rings or "
                          "pallas DMA rings (DESIGN.md §10)")
+    ap.add_argument("--stripes", default="auto",
+                    help="multi-NIC stripe count of the pallas DMA rings "
+                         "(transport layer, DESIGN.md §11).  auto = "
+                         "transport.plan_stripes over the mesh's modeled "
+                         "cluster; an integer pins it; xla runs resolve to 1")
     ap.add_argument("--n-channels", type=int, default=4,
                     help="pipeline channels of --mode pipelined")
     ap.add_argument("--pipeline-chunk-bytes", type=int, default=None)
@@ -144,10 +149,13 @@ def main():
     mb = max(1, min(per_dev, args.micro_tokens // shape.seq_len))
     n_micro = per_dev // mb
     plan = uniform_plan(n_pods, n_micro * n_pods, mb)
+    from repro.launch.mesh import resolve_stripes
+    n_stripes = resolve_stripes(args.stripes, args.backend, mesh)
     rc = RunConfig(zero_stage=args.zero,
                    collective_mode=args.mode or ("hier" if multi else "flat"),
                    backend=args.backend,
                    n_channels=args.n_channels,
+                   n_stripes=n_stripes,
                    pipeline_chunk_bytes=args.pipeline_chunk_bytes,
                    cross_dtype=args.cross_dtype)
     batch_sds, extra = _train_batch_sds(cfg, shape, mesh, plan)
@@ -167,7 +175,7 @@ def main():
     rec = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
            "mesh": args.mesh, "zero": args.zero, "n_micro": n_micro, "mb": mb,
            "mode": rc.collective_mode, "backend": rc.backend,
-           "n_channels": args.n_channels,
+           "n_channels": args.n_channels, "n_stripes": rc.n_stripes,
            "cross_dtype": args.cross_dtype,
            "seq_shard_acts": args.seq_shard_acts,
            "cross_pod_GB": stats.cross_pod_bytes / 1e9,

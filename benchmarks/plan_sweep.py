@@ -33,15 +33,23 @@ def scenarios():
 
 
 def sweep(arch: str, global_batch: int, seq_len: int,
-          zero: int | None = None) -> dict:
-    """Rank the full space per scenario; returns the JSON-ready record."""
+          zero: int | None = None, stripes: str = "auto") -> dict:
+    """Rank the full space per scenario; returns the JSON-ready record.
+
+    ``stripes``: "auto" searches ``SearchSpace.stripe_counts`` (the transport
+    layer's multi-NIC dimension, DESIGN.md §11); an integer pins it.
+    """
+    import dataclasses as _dc
     cfg = get_config(arch)
+    space = plan_mod.DEFAULT_SPACE
+    if stripes != "auto":
+        space = _dc.replace(space, stripe_counts=(int(stripes),))
     out = {"arch": arch, "global_batch": global_batch, "seq_len": seq_len,
            "scenarios": {}}
     for name, cluster, data_axis in scenarios():
         req = plan_mod.plan_request(cluster, cfg, global_batch, seq_len,
                                     data_axis=data_axis, zero_stage=zero)
-        frontier = plan_mod.rank(req)
+        frontier = plan_mod.rank(req, space)
         # measured-drift refinement frontier: slow one island to 60% and
         # re-rank — the what-if the elastic control plane runs (DESIGN.md §9)
         drifted = [PodProfile(p.name, p.effective_flops *
@@ -64,10 +72,27 @@ def csv_rows(record: dict):
         flat = min((c for c in frontier if c["mode"] == "flat"),
                    key=lambda c: c["modeled_step_s"])
         rows.append((f"plan_sweep/{name}/{record['arch']}/best_"
-                     f"{best['mode']}_c{best['n_channels']}",
+                     f"{best['mode']}_c{best['n_channels']}"
+                     f"_k{best.get('n_stripes', 1)}",
                      best["modeled_step_s"] * 1e6,
                      flat["modeled_step_s"] / best["modeled_step_s"]))
     return rows
+
+
+def check_striped_frontier(record: dict) -> None:
+    """Transport smoke invariant (DESIGN.md §11): wherever stripes were
+    searched, the chosen plan's modeled step/comm time is never worse than
+    the best stripes=1 candidate — striping is an optimization the planner
+    may decline (single-link chips), never a regression it can pick."""
+    for name, sc in record["scenarios"].items():
+        frontier = sc["frontier"]
+        best = frontier[0]
+        unstriped = [c for c in frontier if c.get("n_stripes", 1) == 1]
+        if not unstriped:
+            continue
+        floor = min(c["modeled_step_s"] for c in unstriped)
+        assert best["modeled_step_s"] <= floor + 1e-12, (name, best, floor)
+    return None
 
 
 def main():
@@ -77,10 +102,16 @@ def main():
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--zero", type=int, default=None,
                     help="pin the ZeRO stage (default: search over 1 and 3)")
+    ap.add_argument("--stripes", default="auto",
+                    help="multi-NIC stripe counts (DESIGN.md §11): auto "
+                         "searches SearchSpace.stripe_counts, an integer "
+                         "pins one count")
     ap.add_argument("--out", default="results/plan_sweep.json")
     args = ap.parse_args()
 
-    record = sweep(args.arch, args.global_batch, args.seq, args.zero)
+    record = sweep(args.arch, args.global_batch, args.seq, args.zero,
+                   stripes=args.stripes)
+    check_striped_frontier(record)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)

@@ -157,10 +157,10 @@ class RunConfig:
     """Parallelism + training knobs for one run.
 
     The collective-layer fields (``zero_stage``, ``collective_mode``,
-    ``n_channels``, ``bucket_bytes``, ``n_micro``) can be set by hand or
-    materialized jointly by the autotuner — ``repro.plan.TrainPlan
-    .run_config()`` (DESIGN.md §9), the ``--plan auto`` path of the
-    launchers.
+    ``n_channels``, ``n_stripes``, ``bucket_bytes``, ``n_micro``) can be set
+    by hand or materialized jointly by the autotuner — ``repro.plan
+    .TrainPlan.run_config()`` (DESIGN.md §9), the ``--plan auto`` path of
+    the launchers.
     """
 
     zero_stage: int = 1              # 1 or 3 (the paper evaluates both)
@@ -168,6 +168,9 @@ class RunConfig:
     backend: str = "xla"             # collective ring backend: xla | pallas
                                      # (DMA rings, DESIGN.md §10)
     n_channels: int = 4              # pipeline channels of "pipelined" mode
+    n_stripes: int = 1               # multi-NIC stripes of the DMA rings
+                                     # (transport layer, DESIGN.md §11;
+                                     # pallas backend only)
     pipeline_chunk_bytes: int | None = None   # alternative channel sizing
     bucket_bytes: int = 64 * 1024 * 1024      # gradient fusion bucket size
     n_micro: int = 1                 # gradient-accumulation micro-steps

@@ -64,7 +64,8 @@ def axis_world(axes: Axis) -> int:
 RING_BACKENDS = ("xla", "pallas")
 
 
-def resolve_ring_backend(backend: str, *, bidir: bool = False):
+def resolve_ring_backend(backend: str, *, bidir: bool = False,
+                         n_stripes: int = 1):
     """(reduce_scatter, all_gather) ring primitives for ``backend``.
 
     ``"xla"``: the ``lax.ppermute`` rings in this module.  ``"pallas"``: the
@@ -73,13 +74,23 @@ def resolve_ring_backend(backend: str, *, bidir: bool = False):
     emulated with ppermute + the ``collective_reduce`` kernel elsewhere
     (DESIGN.md §10).  Imported lazily so the default path never touches
     Pallas.
+
+    ``n_stripes`` > 1 binds the transport layer's multi-NIC stripe count
+    into the pallas rings (one DMA stream per link, DESIGN.md §11); the xla
+    rings are single-stream by construction (one ppermute is one logical
+    transfer), so the knob is ignored there — mirroring
+    ``HetCCLConfig.resolved_stripes``.
     """
     if backend == "pallas":
         from repro.kernels import ring_dma
-        return ((ring_dma.ring_reduce_scatter_bidir if bidir
-                 else ring_dma.ring_reduce_scatter),
-                (ring_dma.ring_all_gather_bidir if bidir
-                 else ring_dma.ring_all_gather))
+        rs = (ring_dma.ring_reduce_scatter_bidir if bidir
+              else ring_dma.ring_reduce_scatter)
+        ag = (ring_dma.ring_all_gather_bidir if bidir
+              else ring_dma.ring_all_gather)
+        if n_stripes and int(n_stripes) > 1:
+            rs = functools.partial(rs, n_stripes=int(n_stripes))
+            ag = functools.partial(ag, n_stripes=int(n_stripes))
+        return rs, ag
     if backend != "xla":
         raise ValueError(f"unknown collective backend {backend!r}; "
                          f"expected one of {RING_BACKENDS}")
@@ -320,7 +331,7 @@ def ring_broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
 
 @tacc.register("all_reduce", "flat", default=True)
 def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
-                    backend: str = "xla", **_):
+                    backend: str = "xla", n_stripes: int = 1, **_):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas":
         # the naive single-stage ring, but with the DMA kernels: one explicit
@@ -328,20 +339,21 @@ def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
         from repro.kernels import ring_dma
         out = x
         for a in all_axes:
-            out = ring_dma.ring_all_reduce(out, a)
+            out = ring_dma.ring_all_reduce(out, a, n_stripes=n_stripes)
         return out
     return lax.psum(x, all_axes)
 
 
 @tacc.register("all_gather", "flat", default=True)
 def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
-                    tiled: bool = True, backend: str = "xla", **_):
+                    tiled: bool = True, backend: str = "xla",
+                    n_stripes: int = 1, **_):
     gather_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas" and tiled:
         from repro.kernels import ring_dma
         out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
         for a in gather_axes:
-            out = ring_dma.ring_all_gather(out, a)
+            out = ring_dma.ring_all_gather(out, a, n_stripes=n_stripes)
         return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
     for a in gather_axes:
@@ -351,13 +363,14 @@ def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
 
 @tacc.register("reduce_scatter", "flat", default=True)
 def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *,
-                        dim: int = 0, backend: str = "xla", **_):
+                        dim: int = 0, backend: str = "xla",
+                        n_stripes: int = 1, **_):
     all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
     if backend == "pallas":
         from repro.kernels import ring_dma
         out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
         for a in all_axes:
-            out = ring_dma.ring_reduce_scatter(out, a)
+            out = ring_dma.ring_reduce_scatter(out, a, n_stripes=n_stripes)
         return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
     for a in all_axes:
@@ -417,19 +430,21 @@ def _flatten_pad(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
 
 @tacc.register("all_reduce", "hier")
 def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
-                    cross_dtype=None, backend: str = "xla", **_):
+                    cross_dtype=None, backend: str = "xla",
+                    n_stripes: int = 1, **_):
     """AllReduce = local ReduceScatter -> cross-pod ring AllReduce -> local AllGather.
 
     ``cross_dtype`` optionally compresses the cross-island stage (the slow
     links), a beyond-paper knob: gradients cast to e.g. bf16 only while they
     transit the pod boundary.  ``backend="pallas"`` swaps the cross-pod rings
     for the DMA rings (which additionally keep an f32 accumulator under the
-    narrow wire — the fused decompression of DESIGN.md §10).
+    narrow wire — the fused decompression of DESIGN.md §10); ``n_stripes``
+    is their multi-NIC stripe count (DESIGN.md §11).
     """
     local = _axes_tuple(axes)
     if not pod_axis:
         return lax.psum(x, local)
-    cross_rs, cross_ag = resolve_ring_backend(backend)
+    cross_rs, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes)
     D = 1
     for a in local:
         D *= lax.axis_size(a)
@@ -458,11 +473,12 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 @tacc.register("all_gather", "hier")
 def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0,
-                    tiled: bool = True, backend: str = "xla", **_):
+                    tiled: bool = True, backend: str = "xla",
+                    n_stripes: int = 1, **_):
     """Local native gather, then cross-pod ring gather (pod-major order)."""
     out = flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
     if pod_axis:
-        _, cross_ag = resolve_ring_backend(backend)
+        _, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
         out = cross_ag(out, pod_axis)
@@ -473,11 +489,12 @@ def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0
 
 @tacc.register("reduce_scatter", "hier")
 def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
-                        dim: int = 0, backend: str = "xla", **_):
+                        dim: int = 0, backend: str = "xla",
+                        n_stripes: int = 1, **_):
     """Cross-pod ring reduce-scatter first (P2P), then local native stage."""
     out = x
     if pod_axis:
-        cross_rs, _ = resolve_ring_backend(backend)
+        cross_rs, _ = resolve_ring_backend(backend, n_stripes=n_stripes)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
         out = cross_rs(out, pod_axis)
@@ -523,8 +540,9 @@ def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0
 
 @tacc.register("reduce", "hier")
 def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0,
-                backend: str = "xla", **_):
-    s = hier_all_reduce(x, axes, pod_axis, backend=backend)
+                backend: str = "xla", n_stripes: int = 1, **_):
+    s = hier_all_reduce(x, axes, pod_axis, backend=backend,
+                        n_stripes=n_stripes)
     flat_idx = jnp.zeros((), jnp.int32)
     stride = 1
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
@@ -570,20 +588,32 @@ MAX_CHANNELS = 16    # schedule-unroll guard: each channel emits its own stages
 
 
 def resolve_channels(nbytes: int, n_channels: int,
-                     chunk_bytes: int | None, limit: int) -> int:
+                     chunk_bytes: int | None, limit: int,
+                     n_stripes: int = 1) -> int:
     """Channel count for a payload: explicit chunk size wins, else
     ``n_channels``; clamped to [1, min(limit, MAX_CHANNELS)] where ``limit``
     is the payload granularity (can't split finer than one element/row) and
-    MAX_CHANNELS bounds the unrolled wavefront the schedule emits."""
+    MAX_CHANNELS bounds the unrolled wavefront the schedule emits.
+
+    ``n_stripes`` is the transport layer's per-channel stripe count: the two
+    knobs fragment multiplicatively (each channel's ring chunk is further
+    pad-and-sliced over k links), so channels are additionally clamped so a
+    ``channels × stripes`` fragment never drops below one MXU tile
+    (``transport.MXU_TILE_BYTES``) — a tiny gradient bucket runs one wide
+    channel instead of 16 tile-starved ones (DESIGN.md §11).
+    """
+    from repro.transport.stripe import MXU_TILE_BYTES
     c = -(-nbytes // chunk_bytes) if chunk_bytes else n_channels
-    return max(1, min(c, limit, MAX_CHANNELS))
+    tile_limit = max(nbytes // (MXU_TILE_BYTES * max(int(n_stripes), 1)), 1)
+    return max(1, min(c, limit, MAX_CHANNELS, tile_limit))
 
 
 @tacc.register("all_reduce", "pipelined")
 def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                          cross_dtype=None, n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
-                         bidir: bool = True, backend: str = "xla", **_):
+                         bidir: bool = True, backend: str = "xla",
+                         n_stripes: int = 1, **_):
     """AllReduce as a C-channel pipeline of (local RS -> cross ring -> local AG).
 
     Equals :func:`hier_all_reduce` numerically; chunk k's cross-pod stage is
@@ -599,11 +629,13 @@ def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     P = lax.axis_size(pod_axis)
     shape, dtype = x.shape, x.dtype
     C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
-                         pipeline_chunk_bytes, max(x.size // (D * P), 1))
+                         pipeline_chunk_bytes, max(x.size // (D * P), 1),
+                         n_stripes)
     flat, pad = _flatten_pad(x, C * D * P)
     n = flat.shape[0]
     chunks = list(jnp.split(flat, C)) if C > 1 else [flat]
-    cross_ring_rs, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir)
+    cross_ring_rs, cross_ring_ag = resolve_ring_backend(
+        backend, bidir=bidir, n_stripes=n_stripes)
 
     def local_rs(c):
         if D == 1:
@@ -636,7 +668,8 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
                          dim: int = 0, tiled: bool = True,
                          n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
-                         bidir: bool = True, backend: str = "xla", **_):
+                         bidir: bool = True, backend: str = "xla",
+                         n_stripes: int = 1, **_):
     """Two-stage gather, pipelined: chunk k's cross-pod ring gather overlaps
     chunk k+1's local native gather.  Pod-major result order (same as hier)."""
     if not pod_axis:
@@ -648,9 +681,10 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
     xm = jnp.moveaxis(x, dim, 0) if dim != 0 else x
     c0 = xm.shape[0]
     C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
-                         pipeline_chunk_bytes, c0)
+                         pipeline_chunk_bytes, c0, n_stripes)
     chunks = list(jnp.array_split(xm, C)) if C > 1 else [xm]
-    _, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir)
+    _, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir,
+                                            n_stripes=n_stripes)
 
     def local_ag(c):
         return flat_all_gather(c, axes, None, dim=0, tiled=True)
@@ -675,7 +709,8 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
 def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                              dim: int = 0, n_channels: int = 4,
                              pipeline_chunk_bytes: int | None = None,
-                             bidir: bool = True, backend: str = "xla", **_):
+                             bidir: bool = True, backend: str = "xla",
+                             n_stripes: int = 1, **_):
     """Two-stage reduce-scatter, pipelined: chunk k's local native stage
     overlaps chunk k+1's cross-pod ring."""
     if not pod_axis:
@@ -686,13 +721,14 @@ def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
     assert n % W == 0, (n, W)
     s = n // W                                        # rows this rank keeps
     C = resolve_channels(x.size * x.dtype.itemsize, n_channels,
-                         pipeline_chunk_bytes, s)
+                         pipeline_chunk_bytes, s, n_stripes)
     # chunk j must carry rows [r*s + j*s/C, ...) for every rank r, so split
     # the per-rank dim, not the raw leading dim.
     grouped = xm.reshape((W, s) + xm.shape[1:])
     chunks = [c.reshape((W * c.shape[1],) + xm.shape[1:])
               for c in jnp.array_split(grouped, C, axis=1)] if C > 1 else [xm]
-    cross_ring_rs, _ = resolve_ring_backend(backend, bidir=bidir)
+    cross_ring_rs, _ = resolve_ring_backend(backend, bidir=bidir,
+                                            n_stripes=n_stripes)
 
     def cross(c):
         return cross_ring_rs(c, pod_axis)
@@ -734,9 +770,11 @@ def _fsdp_ag_bwd(axis, dim, _, g):
     # contract inside the kernel (DESIGN.md §10).
     from repro.core import hetccl   # lazy: hetccl imports this module
     gm = jnp.moveaxis(g, dim, 0) if dim else g
-    if hetccl.current().backend == "pallas":
+    cfg = hetccl.current()
+    if cfg.backend == "pallas":
         from repro.kernels import ring_dma
-        out = ring_dma.ring_reduce_scatter(gm, axis, wire_dtype=g.dtype)
+        out = ring_dma.ring_reduce_scatter(gm, axis, wire_dtype=g.dtype,
+                                           n_stripes=cfg.resolved_stripes())
     else:
         out = ring_reduce_scatter_mixed(gm, axis)
     out = jnp.moveaxis(out, 0, dim) if dim else out

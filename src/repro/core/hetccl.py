@@ -56,6 +56,13 @@ class HetCCLConfig:
                  double-buffered in-kernel reduction (DESIGN.md §10); on
                  non-TPU platforms they fall back to an interpret-mode-
                  equivalent ppermute schedule with the same numerics.
+    n_stripes:   multi-NIC stripe count of the DMA rings (DESIGN.md §11):
+                 each cross-island wire hop is pad-and-sliced over this many
+                 per-link DMA streams.  Only meaningful under
+                 ``backend="pallas"`` — the xla ppermute ring is a single
+                 logical transfer, so :meth:`resolved_stripes` collapses the
+                 knob to 1 there.  The plan autotuner searches it jointly
+                 (``SearchSpace.stripe_counts``).
     """
 
     mode: str = "auto"
@@ -66,6 +73,7 @@ class HetCCLConfig:
     n_channels: int = 4
     pipeline_chunk_bytes: int | None = None
     backend: str = "xla"
+    n_stripes: int = 1
 
     def resolved_mode(self) -> str:
         if self.mode == "auto":
@@ -82,6 +90,18 @@ class HetCCLConfig:
                 f"unknown collective backend {self.backend!r}; "
                 f"expected one of {_coll.RING_BACKENDS}")
         return self.backend
+
+    def resolved_stripes(self) -> int:
+        """Effective per-link DMA stream count (DESIGN.md §11): validated,
+        clamped to the transport layer's cap, and collapsed to 1 for the xla
+        backend (one ppermute is one logical transfer — there is nothing to
+        stripe)."""
+        from repro.transport.stripe import MAX_STRIPES
+        if int(self.n_stripes) < 1:
+            raise ValueError(f"n_stripes must be >= 1, got {self.n_stripes}")
+        if self.resolved_backend() != "pallas":
+            return 1
+        return min(int(self.n_stripes), MAX_STRIPES)
 
     def dp_axes(self) -> tuple[str, ...]:
         """Pod-major: matches the gather order of both flat and hier
@@ -135,7 +155,7 @@ def install(config: HetCCLConfig) -> HetCCLConfig:
 def _install(config: HetCCLConfig, *, allow_undo: bool) -> HetCCLConfig:
     global _CURRENT
     mode = config.resolved_mode()     # validate before mutating any state
-    config.resolved_backend()
+    config.resolved_stripes()         # (also validates the backend)
     prev = _CURRENT
     if allow_undo and _INSTALL_STACK and config == _INSTALL_STACK[-1][0]:
         uninstall()
@@ -211,6 +231,7 @@ def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
     if variant == "pipelined":
         kw = _pipeline_kwargs(cfg, kw)
     kw.setdefault("backend", cfg.resolved_backend())
+    kw.setdefault("n_stripes", cfg.resolved_stripes())
     return tacc.dispatch(op, x, cfg.local_axes, cfg.pod_axis,
                          variant=variant, **kw)
 

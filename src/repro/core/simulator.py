@@ -25,6 +25,7 @@ from typing import Sequence
 from repro.core.balance import HetPlan, PodProfile, make_plan, uniform_plan
 from repro.core.topology import (ClusterSpec, HOST_STAGED_BW, MPI_ALPHA,
                                  MPI_HOST_REDUCE_BW, PodSpec, RDMA_ALPHA)
+from repro.transport.stripe import StripePlan, plan_stripes
 
 
 # ---------------------------------------------------------------------------
@@ -79,9 +80,38 @@ def _reduce_bw(cluster: ClusterSpec) -> float:
     return min(p.chip.hbm_bw for p in cluster.pods) / REDUCE_RW_FACTOR
 
 
+def _stripe_plan(cluster: ClusterSpec, n_stripes, nbytes: float,
+                 n_transfers: int = 1):
+    """Transport stripe schedule for the cross-island ring (DESIGN.md §11).
+
+    ``n_stripes``: 1/None -> no plan (the legacy aggregate-endpoint wire
+    model); an int > 1 -> exactly that many per-link DMA streams (clamped to
+    the healthy links); ``"auto"`` -> the transport planner picks k.  The
+    plan rides the slowest endpoint's inventory — the pod whose healthy
+    links bound every cross-island pair (paper §5.2) — with each stream's
+    rate additionally bounded by the fabric's per-link ``inter_pod_bw`` (one
+    NIC, one fabric path: the multi-NIC RDMA premise).  ``nbytes`` is one
+    ring step's chunk (the byte floor slices per-step transfers, not the
+    whole ring's traffic) and ``n_transfers`` the step count the fill term
+    repeats over.
+    """
+    if n_stripes in (None, 1):
+        return None
+    slow = min(cluster.pods, key=lambda p: cluster.effective_link_bw(p))
+    inv = cluster.inventory(slow)
+    if n_stripes == "auto":
+        return plan_stripes(inv, inv, nbytes=nbytes,
+                            inter_bw=cluster.inter_pod_bw,
+                            n_transfers=n_transfers)
+    return plan_stripes(inv, inv, nbytes=nbytes,
+                        inter_bw=cluster.inter_pod_bw,
+                        max_stripes=int(n_stripes), exact=True)
+
+
 def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
                         alpha: float, reduce_bw: float, *,
-                        half: float = 1.0, backend: str = "xla") -> float:
+                        half: float = 1.0, backend: str = "xla",
+                        stripes: StripePlan | None = None) -> float:
     """One explicit ring (ppermute or DMA) over ``n`` ranks (DESIGN.md §10).
 
     backend "xla": XLA schedules each ring step's wire transfer and its chunk
@@ -91,6 +121,13 @@ def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
     so the stage pays ``Σ_k max(wire_k, reduce_k)`` plus the fill/drain of
     the pipeline: ``(W+R)/S + (S-1)/S · max(W, R)``.  ``half`` is the
     bidirectional-ring wire discount (reduction volume is unaffected).
+
+    ``stripes`` (pallas only) replaces the aggregate-bandwidth wire term
+    with the transport layer's per-link model (DESIGN.md §11): the bytes on
+    the wire are pad-and-sliced over the plan's links and the wire time is
+    stripe fill + max over links of that link's per-stripe time, degraded
+    links priced at their reduced bandwidth.  The reduction term is
+    unaffected (it is HBM-bound, not NIC-bound).
     """
     if n <= 1:
         return 0.0
@@ -98,7 +135,12 @@ def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
         raise ValueError(f"unknown backend {backend!r}; expected "
                          f"one of {RING_BACKENDS}")
     steps = (2 if op == "all_reduce" else 1) * (n - 1)
-    W = half * _RING_FACTORS[op](n) * nbytes / bw
+    wire_bytes = half * _RING_FACTORS[op](n) * nbytes
+    if backend == "pallas" and stripes is not None:
+        # per-link wire term: the k-descriptor fill recurs every ring step
+        W = stripes.wire_time(wire_bytes, n_transfers=steps)
+    else:
+        W = wire_bytes / bw
     R = 0.0
     if op in _REDUCING_OPS:
         # reduction happens in the reduce-scatter half: (n-1)/n of the buffer
@@ -112,27 +154,34 @@ def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
 
 
 def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
-                           n_ranks: int, alpha: float = RDMA_ALPHA) -> float:
+                           n_ranks: int, alpha: float = RDMA_ALPHA,
+                           bw: float | None = None) -> float:
     """Vendor-local stage: the island's native library over its interconnect.
     Always priced as the native (fused-reduction) library — the backend knob
-    only swaps the explicit cross-island rings (DESIGN.md §10)."""
+    only swaps the explicit cross-island rings (DESIGN.md §10).  ``bw``
+    overrides the static link product with the pod's *healthy* aggregate
+    (``ClusterSpec.effective_link_bw``, DESIGN.md §11) — a downed NIC slows
+    the local stage too, not just the cross ring."""
     if n_ranks <= 1:
         return 0.0
-    bw = pod.chip.local_link_bw * pod.chip.local_links
+    if bw is None:
+        bw = pod.chip.local_link_bw * pod.chip.local_links
     steps = n_ranks - 1
     return alpha * steps + _RING_FACTORS[op](n_ranks) * nbytes / bw
 
 
 def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
                            alpha: float, bidir: bool,
-                           backend: str = "xla") -> list[float]:
+                           backend: str = "xla",
+                           n_stripes=1) -> list[float]:
     """Per-chunk stage costs of the pipelined hierarchical schedule.
 
     Stage list mirrors the hier decomposition (local native stage(s) + the
     cross-island ring); ``bidir`` halves the cross ring's *bandwidth* term —
     the bidirectional rings push half the payload per direction over the
     full-duplex link — while the per-hop α count is unchanged.  ``backend``
-    selects the cross ring's wire/reduce schedule (DESIGN.md §10).
+    selects the cross ring's wire/reduce schedule (DESIGN.md §10) and
+    ``n_stripes`` its multi-NIC stripe schedule (§11; pallas only).
     """
     pods = list(cluster.pods)
     P = len(pods)
@@ -140,27 +189,34 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
     cross_bw = cluster.slowest_endpoint_bw()
     red_bw = _reduce_bw(cluster)
     half = 0.5 if bidir else 1.0
+    # the plan slices one ring step's chunk (~shard/P) and repeats its fill
+    # over the ~P-1 steps; exact step counts are applied at pricing time
+    stripes = _stripe_plan(cluster, n_stripes, shard / max(P, 1),
+                           n_transfers=max(P - 1, 1)) \
+        if backend == "pallas" else None
+    def local(op_, p):
+        return _local_collective_time(op_, chunk_bytes, p, p.n_chips,
+                                      bw=cluster.effective_link_bw(p))
+
     if op == "all_reduce":
         return [
-            max(_local_collective_time("reduce_scatter", chunk_bytes, p,
-                                       p.n_chips) for p in pods),
+            max(local("reduce_scatter", p) for p in pods),
             _explicit_ring_time("all_reduce", shard, P, cross_bw, alpha,
-                                red_bw, half=half, backend=backend),
-            max(_local_collective_time("all_gather", chunk_bytes, p, p.n_chips)
-                for p in pods),
+                                red_bw, half=half, backend=backend,
+                                stripes=stripes),
+            max(local("all_gather", p) for p in pods),
         ]
     if op in ("all_gather", "reduce_scatter", "broadcast", "reduce"):
         ring_half = half if op in ("all_gather", "reduce_scatter") else 1.0
         return [
-            max(_local_collective_time(op, chunk_bytes, p, p.n_chips)
-                for p in pods),
+            max(local(op, p) for p in pods),
             _explicit_ring_time(op, shard, P, cross_bw, alpha, red_bw,
-                                half=ring_half, backend=backend),
+                                half=ring_half, backend=backend,
+                                stripes=stripes),
         ]
     if op == "all_to_all":
         return [
-            max(_local_collective_time(op, chunk_bytes, p, p.n_chips)
-                for p in pods),
+            max(local(op, p) for p in pods),
             alpha * (P - 1) + chunk_bytes * (P - 1) / P / cross_bw,
         ]
     raise ValueError(op)
@@ -168,7 +224,7 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
 
 def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
                     alpha: float, n_channels: int, bidir: bool,
-                    backend: str = "xla") -> float:
+                    backend: str = "xla", n_stripes=1) -> float:
     """Multi-channel software-pipelined time: with C chunks the slowest stage
     is paid C times and the others once (classic pipeline fill/drain), i.e.
 
@@ -182,28 +238,29 @@ def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
     best = float("inf")
     for c in range(1, max(int(n_channels), 1) + 1):
         stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
-                                        backend)
+                                        backend, n_stripes)
         best = min(best, sum(stages) + (c - 1) * max(stages))
     return best
 
 
 def pipelined_channel_time(op: str, nbytes: float, cluster: ClusterSpec,
                            n_channels: int, alpha: float | None = None,
-                           bidir: bool = True, backend: str = "xla") -> float:
+                           bidir: bool = True, backend: str = "xla",
+                           n_stripes=1) -> float:
     """T(C) at *exactly* C channels — no auto-tune.  For channel sweeps that
     want to show the fill/drain-vs-α tradeoff (collective_time's pipelined
     mode returns min over 1..n_channels and is monotone in n_channels)."""
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     c = max(int(n_channels), 1)
     stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
-                                    backend)
+                                    backend, n_stripes)
     return sum(stages) + (c - 1) * max(stages)
 
 
 def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
                     mode: str = "auto", alpha: float | None = None, *,
                     n_channels: int = 4, bidir: bool = True,
-                    backend: str = "xla") -> float:
+                    backend: str = "xla", n_stripes=1) -> float:
     """Time of one collective over every chip in ``cluster``.
 
     mode "flat": one ring over all chips, every link bounded by the slowest
@@ -223,6 +280,13 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     stage) are backend-invariant — the vendor library already fuses its
     reduction, which is exactly why the pallas rings only ever pay off on the
     cross-island stage.
+
+    n_stripes (pallas only): the transport layer's multi-NIC stripe count
+    (DESIGN.md §11) — an int pins k per-link DMA streams, ``"auto"`` lets
+    ``transport.plan_stripes`` pick k from the cluster's link inventories.
+    The default 1 keeps the legacy aggregate-endpoint wire model; the xla
+    backend ignores the knob (a ppermute ring is one logical transfer),
+    mirroring ``HetCCLConfig.resolved_stripes``.
     """
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     pods = list(cluster.pods)
@@ -239,13 +303,17 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
                          "flat | hier | pipelined | auto")
     if len(pods) == 1 or mode == "flat":
         bw = cluster.slowest_endpoint_bw() if len(pods) > 1 else \
-            pods[0].chip.local_link_bw * pods[0].chip.local_links
+            cluster.effective_link_bw(pods[0])
         if backend == "pallas":
             # explicit DMA ring over every chip: same wire as the native
             # ring plus the (overlapped) on-device reduction — never cheaper
             # than the vendor library on its own island.
+            stripes = _stripe_plan(cluster, n_stripes, nbytes / max(n, 1),
+                                   n_transfers=max(n - 1, 1)) \
+                if len(pods) > 1 else None
             return _explicit_ring_time(op, nbytes, n, bw, alpha,
-                                       _reduce_bw(cluster), backend="pallas")
+                                       _reduce_bw(cluster), backend="pallas",
+                                       stripes=stripes)
         return alpha * (n - 1) + _RING_FACTORS[op](n) * nbytes / bw
     if mode == "pipelined":
         # only the ops with a "pipelined" TACC registration run the
@@ -254,11 +322,12 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
         # with overlap the runtime never achieves.
         if op in ("all_reduce", "all_gather", "reduce_scatter"):
             return _pipelined_time(op, nbytes, cluster, alpha, n_channels,
-                                   bidir, backend)
+                                   bidir, backend, n_stripes)
         mode = "hier"
     # hierarchical: local stage + cross-pod ring on 1/n_local shards —
     # the serial (C=1, unidirectional) case of the pipelined stage model.
-    stages = _pipelined_stage_times(op, nbytes, cluster, alpha, False, backend)
+    stages = _pipelined_stage_times(op, nbytes, cluster, alpha, False, backend,
+                                    n_stripes)
     return sum(stages)
 
 
@@ -335,7 +404,7 @@ def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
                              mode: str = "auto", *,
                              bucket_bytes: float = 64 * 1024 * 1024,
                              n_channels: int = 4,
-                             backend: str = "xla") -> float:
+                             backend: str = "xla", n_stripes=1) -> float:
     """Gradient-reduction time as ``hetccl.tree_all_reduce`` executes it.
 
     The runtime fuses leaves into ~``bucket_bytes`` buckets and reduces each
@@ -362,15 +431,17 @@ def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
     n_buckets = max(int(math.ceil(param_bytes / max(bucket_bytes, 1))), 1)
     b = param_bytes / n_buckets
     t_rs = collective_time("reduce_scatter", b, cluster, mode,
-                           n_channels=n_channels, backend=backend)
+                           n_channels=n_channels, backend=backend,
+                           n_stripes=n_stripes)
     t_ag = collective_time("all_gather", b, cluster, mode,
-                           n_channels=n_channels, backend=backend)
+                           n_channels=n_channels, backend=backend,
+                           n_stripes=n_stripes)
     return t_rs + t_ag + (n_buckets - 1) * max(t_rs, t_ag)
 
 
 def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
                     mode: str = "auto", *, n_channels: int = 4,
-                    backend: str = "xla") -> float:
+                    backend: str = "xla", n_stripes=1) -> float:
     """ZeRO-3 traffic at per-layer granularity (DESIGN.md §9).
 
     The trainer gathers each layer's params inside the scan (fwd + bwd = 2×
@@ -381,9 +452,11 @@ def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
     layers = max(int(n_layers), 1)
     per = param_bytes / layers
     t_ag = collective_time("all_gather", per, cluster, mode,
-                           n_channels=n_channels, backend=backend)
+                           n_channels=n_channels, backend=backend,
+                           n_stripes=n_stripes)
     t_rs = collective_time("reduce_scatter", per, cluster, mode,
-                           n_channels=n_channels, backend=backend)
+                           n_channels=n_channels, backend=backend,
+                           n_stripes=n_stripes)
     return layers * (2.0 * t_ag + t_rs)
 
 
@@ -394,7 +467,7 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
                       n_layers: int = 1, overlap: float = 0.0,
                       comm_scale: float = 1.0,
                       compute_scale: float = 1.0,
-                      backend: str = "xla") -> float:
+                      backend: str = "xla", n_stripes=1) -> float:
     """Step time of one fully-specified plan candidate (DESIGN.md §9).
 
     Same compute model as :func:`step_time` (max over pods of each pod's
@@ -414,12 +487,13 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
         comp = max(comp, n_micro * per_micro)
     if workload.zero_stage >= 3:
         comm = zero3_comm_time(workload.param_bytes, n_layers, cluster, mode,
-                               n_channels=n_channels, backend=backend)
+                               n_channels=n_channels, backend=backend,
+                               n_stripes=n_stripes)
     else:
         comm = bucketed_all_reduce_time(workload.param_bytes, cluster, mode,
                                         bucket_bytes=bucket_bytes,
                                         n_channels=n_channels,
-                                        backend=backend)
+                                        backend=backend, n_stripes=n_stripes)
     return compute_scale * comp + (1.0 - overlap) * comm_scale * comm
 
 

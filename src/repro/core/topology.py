@@ -146,11 +146,37 @@ class ClusterSpec:
     def homogeneous(self) -> bool:
         return len({p.chip.name for p in self.pods}) <= 1
 
+    def inventory(self, pod: "PodSpec | str"):
+        """The (mutable) transport :class:`~repro.transport.links
+        .LinkInventory` of ``pod``'s chip, lazily built and cached per
+        cluster instance so health mutations (a NIC marked down or degraded)
+        persist and flow into every bandwidth query below (DESIGN.md §11)."""
+        from repro.transport.links import LinkInventory
+        cache = self.__dict__.get("_inventories")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_inventories", cache)
+        name = pod if isinstance(pod, str) else pod.name
+        if name not in cache:
+            spec = pod if not isinstance(pod, str) else \
+                next(p for p in self.pods if p.name == name)
+            cache[name] = LinkInventory.from_chip(spec.chip)
+        return cache[name]
+
+    def effective_link_bw(self, pod: "PodSpec | str") -> float:
+        """Endpoint capacity of ``pod``'s chips: the sum of *healthy* link
+        bandwidth from the transport inventory — equals the static
+        ``local_link_bw × local_links`` product only while every link is up."""
+        return self.inventory(pod).healthy_bw()
+
     def slowest_endpoint_bw(self) -> float:
-        """Cross-island transfers are bounded by the slower endpoint (paper §5.2)."""
-        endpoint = min(min(p.chip.local_link_bw * p.chip.local_links for p in self.pods),
-                       self.inter_pod_bw)
-        return endpoint
+        """Cross-island transfers are bounded by the slower endpoint (paper
+        §5.2).  Endpoint capacity comes from the transport inventory
+        (:meth:`effective_link_bw`), so a downed or degraded NIC narrows the
+        endpoint instead of the static link-count product pretending it is
+        still there."""
+        return min(min(self.effective_link_bw(p) for p in self.pods),
+                   self.inter_pod_bw)
 
 
 # Ready-made clusters ------------------------------------------------------

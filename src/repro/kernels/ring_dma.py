@@ -26,6 +26,12 @@ Two execution paths, resolved per TACC platform:
     Pallas kernel body in interpret mode when pinned, the jnp oracle on raw
     CPU).  This is the interpret-mode contract the equivalence suite tests.
 
+Orthogonal to both paths, ``n_stripes`` adds the transport layer's
+multi-NIC stripe dimension (DESIGN.md §11): each wire hop is pad-and-sliced
+across k per-link DMA streams — on TPU one ``make_async_remote_copy`` per
+stripe with per-(step-parity, stream, stripe) semaphores, in emulation one
+ppermute per stripe — bit-equivalent to the unstriped ring by construction.
+
 All functions must run inside a ``jax.shard_map`` whose manual axes include
 ``axis`` (same contract as ``core.collectives``).
 """
@@ -41,10 +47,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import tacc
+from repro.transport.stripe import MAX_STRIPES
 
 # Double-buffer depth: streams per ring step whose DMAs overlap the other
 # stream's accumulate.  The simulator's overlap model (simulator.DMA_STREAMS)
-# must agree — tested in tests/test_ring_dma.py.
+# and the flow scheduler's lane layout (transport.flow.N_STREAMS) must
+# agree — tested in tests/test_ring_dma.py and tests/test_transport.py.
 NUM_BUFFERS = 2
 
 _LANE = 128          # TPU lane width; payloads are reshaped to (rows, _LANE)
@@ -53,6 +61,33 @@ _SUBLANE = 8         # f32 sublane tile; rows padded to NUM_BUFFERS * _SUBLANE
 
 def _ring_perm(n: int, direction: int) -> list[tuple[int, int]]:
     return [(j, (j + direction) % n) for j in range(n)]
+
+
+def _clamp_stripes(n_stripes: int, rows: int) -> int:
+    """Static stripe count for a payload: the transport-layer cap, bounded by
+    the payload's own granularity (a stripe must carry at least one row)."""
+    return max(1, min(int(n_stripes), MAX_STRIPES, max(rows, 1)))
+
+
+def _striped_hop(blk: jax.Array, axis: str, perm, n_stripes: int) -> jax.Array:
+    """One wire hop as ``n_stripes`` concurrent per-link DMA streams.
+
+    Emulation of the multi-NIC stripe schedule (DESIGN.md §11): the payload
+    is pad-and-sliced into k contiguous stripes along dim 0, each carried by
+    its own ppermute (its own link's DMA stream); the hops have no data
+    dependence, so the scheduler sees them as concurrent — and the
+    reassembled result is bit-identical to the single-stream hop.
+    """
+    k = _clamp_stripes(n_stripes, blk.shape[0])
+    if k == 1:
+        return lax.ppermute(blk, axis, perm)
+    q, r = divmod(blk.shape[0], k)
+    sizes = [q + 1] * r + [q] * (k - r)
+    parts, lo = [], 0
+    for sz in sizes:
+        parts.append(lax.ppermute(blk[lo:lo + sz], axis, perm))
+        lo += sz
+    return jnp.concatenate(parts, axis=0)
 
 
 def _reduce(acc, incoming):
@@ -70,7 +105,7 @@ def _reduce(acc, incoming):
 # ---------------------------------------------------------------------------
 
 def _rs_emulated(chunks: jax.Array, axis: str, direction: int,
-                 wire_dtype) -> jax.Array:
+                 wire_dtype, n_stripes: int = 1) -> jax.Array:
     """chunks (n, c, ...) -> this rank's reduced chunk (c, ...), f32.
 
     Mirrors the TPU kernel's wave structure: each step's payload is split
@@ -78,7 +113,9 @@ def _rs_emulated(chunks: jax.Array, axis: str, direction: int,
     0's accumulate and the pair is pinned into one wave with
     ``optimization_barrier``, so the scheduler may overlap them (the
     emulation of "DMA in flight during the reduce") but cannot re-serialize
-    the wave.
+    the wave.  Each stream's hop is further split into ``n_stripes``
+    per-link ppermutes (:func:`_striped_hop`) — the multi-NIC stripe
+    schedule of DESIGN.md §11, bit-equivalent to the unstriped hop.
     """
     n = chunks.shape[0]
     idx = lax.axis_index(axis)
@@ -93,23 +130,25 @@ def _rs_emulated(chunks: jax.Array, axis: str, direction: int,
         blk = jnp.take(acc, send_idx, axis=0).astype(wire_dtype)
         cur = jnp.take(acc, recv_idx, axis=0)
         if h:
-            r0 = lax.ppermute(blk[:h], axis, perm)
-            r1 = lax.ppermute(blk[h:], axis, perm)   # in flight during r0's reduce
+            r0 = _striped_hop(blk[:h], axis, perm, n_stripes)
+            r1 = _striped_hop(blk[h:], axis, perm, n_stripes)   # in flight during r0's reduce
             new0 = _reduce(cur[:h], r0)
             new0, r1 = lax.optimization_barrier((new0, r1))
             new1 = _reduce(cur[h:], r1)
             new = jnp.concatenate([new0, new1], axis=0)
         else:
-            new = _reduce(cur, lax.ppermute(blk, axis, perm))
+            new = _reduce(cur, _striped_hop(blk, axis, perm, n_stripes))
         return acc.at[recv_idx].set(new)
 
     acc = lax.fori_loop(0, n - 1, body, acc)
     return jnp.take(acc, idx, axis=0)
 
 
-def _ag_emulated(x: jax.Array, axis: str, direction: int) -> jax.Array:
+def _ag_emulated(x: jax.Array, axis: str, direction: int,
+                 n_stripes: int = 1) -> jax.Array:
     """x (c, ...) per-rank chunk -> (n, c, ...) rank-stacked (no reduction:
-    double buffering only pipelines the copy-out against the next hop)."""
+    double buffering only pipelines the copy-out against the next hop;
+    stripes split each hop over per-link streams, DESIGN.md §11)."""
     n = lax.axis_size(axis)
     idx = lax.axis_index(axis)
     perm = _ring_perm(n, direction)
@@ -117,7 +156,7 @@ def _ag_emulated(x: jax.Array, axis: str, direction: int) -> jax.Array:
 
     def body(s, state):
         acc, cur = state
-        cur = lax.ppermute(cur, axis, perm)
+        cur = _striped_hop(cur, axis, perm, n_stripes)
         acc = acc.at[(idx - direction * (s + 1)) % n].set(cur)
         return acc, cur
 
@@ -133,22 +172,28 @@ def _ag_emulated(x: jax.Array, axis: str, direction: int) -> jax.Array:
 
 def _rs_dma_kernel(my_ref, x_ref, o_ref, acc_ref, send_buf, recv_buf,
                    send_sem, recv_sem, cap_sem, *, n, direction, half,
-                   wire_dtype):
+                   wire_dtype, n_stripes):
     """Ring reduce-scatter step loop on one device.
 
     Protocol (DESIGN.md §10): after a barrier-semaphore handshake with both
     ring neighbors, step s sends accumulator chunk (my - d·(s+1)) and
     receives chunk (my - d·(s+2)), each split into NUM_BUFFERS streams with
-    per-(step-parity, stream) comm slots and DMA semaphores.  Stream 0's
-    accumulate runs while stream 1's remote copy is still in flight.
+    per-(step-parity, stream, stripe) comm slots and DMA semaphores.  Stream
+    0's accumulate runs while stream 1's remote copy is still in flight.
+    Each stream is further sliced into ``n_stripes`` per-link DMA streams
+    (DESIGN.md §11): one ``make_async_remote_copy`` per stripe, each riding
+    its own NIC/ICI lane, all of a stream's stripes started before any wait
+    so the links fill concurrently.
 
     Backpressure: parity slots alone only tolerate a sender one step ahead,
     but ring skew is bounded only around the full cycle — so after consuming
-    recv slot ``par`` the receiver credits ``cap_sem[par]`` on its upstream
-    sender, and a sender must take that credit before its step s+2 reuses
-    the slot.  Signals are emitted only when a matching wait exists (step
-    s+2 <= n-2) so the regular semaphore drains to zero at kernel exit.
+    recv slot ``par`` (all of its stripes) the receiver credits
+    ``cap_sem[par]`` on its upstream sender, and a sender must take that
+    credit before its step s+2 reuses the slot.  Signals are emitted only
+    when a matching wait exists (step s+2 <= n-2) so the regular semaphore
+    drains to zero at kernel exit.
     """
+    rows_s = half // n_stripes
     my = my_ref[0]
     dst = lax.rem(my + direction + n, n)
     src = lax.rem(my - direction + n, n)
@@ -170,25 +215,38 @@ def _rs_dma_kernel(my_ref, x_ref, o_ref, acc_ref, send_buf, recv_buf,
             # dst consumed the step s-2 payload of this parity
             pltpu.semaphore_wait(cap_sem.at[par], 1)
 
-        send_buf[par, 0] = acc_ref[send_idx, :half].astype(wire_dtype)
-        send_buf[par, 1] = acc_ref[send_idx, half:].astype(wire_dtype)
+        for b in range(NUM_BUFFERS):
+            for j in range(n_stripes):
+                lo = b * half + j * rows_s
+                send_buf[par, b, j] = \
+                    acc_ref[send_idx, lo:lo + rows_s].astype(wire_dtype)
         copies = [
-            pltpu.make_async_remote_copy(
-                src_ref=send_buf.at[par, b], dst_ref=recv_buf.at[par, b],
-                send_sem=send_sem.at[par, b], recv_sem=recv_sem.at[par, b],
+            [pltpu.make_async_remote_copy(
+                src_ref=send_buf.at[par, b, j], dst_ref=recv_buf.at[par, b, j],
+                send_sem=send_sem.at[par, b, j], recv_sem=recv_sem.at[par, b, j],
                 device_id=(dst,),
                 device_id_type=pltpu.DeviceIdType.LOGICAL)
+             for j in range(n_stripes)]
             for b in range(NUM_BUFFERS)
         ]
-        for c in copies:
-            c.start()
-        copies[0].wait()
-        # stream 0 reduces while stream 1's DMA is still on the wire
-        acc_ref[recv_idx, :half] = (acc_ref[recv_idx, :half] +
-                                    recv_buf[par, 0].astype(jnp.float32))
-        copies[1].wait()
-        acc_ref[recv_idx, half:] = (acc_ref[recv_idx, half:] +
-                                    recv_buf[par, 1].astype(jnp.float32))
+        for stream in copies:          # all stripes of all streams launch
+            for c in stream:           # before any wait: every link fills
+                c.start()
+        for c in copies[0]:
+            c.wait()
+        # stream 0 reduces while stream 1's DMAs are still on the wire
+        for j in range(n_stripes):
+            lo = j * rows_s
+            acc_ref[recv_idx, lo:lo + rows_s] = (
+                acc_ref[recv_idx, lo:lo + rows_s] +
+                recv_buf[par, 0, j].astype(jnp.float32))
+        for c in copies[1]:
+            c.wait()
+        for j in range(n_stripes):
+            lo = half + j * rows_s
+            acc_ref[recv_idx, lo:lo + rows_s] = (
+                acc_ref[recv_idx, lo:lo + rows_s] +
+                recv_buf[par, 1, j].astype(jnp.float32))
 
         @pl.when(s + 2 <= n - 2)
         def _credit_upstream():
@@ -202,34 +260,36 @@ def _rs_dma_kernel(my_ref, x_ref, o_ref, acc_ref, send_buf, recv_buf,
 
 
 def _rs_dma_tpu(chunks: jax.Array, axis: str, direction: int,
-                wire_dtype) -> jax.Array:
+                wire_dtype, n_stripes: int = 1) -> jax.Array:
     """chunks (n, c, ...) -> (c, ...) reduced, f32.  TPU-only fast path."""
     n = chunks.shape[0]
     rest = chunks.shape[1:]
     L = int(np.prod(rest)) if rest else 1
+    S = _clamp_stripes(n_stripes, -(-L // (NUM_BUFFERS * _SUBLANE * _LANE)))
     flat = chunks.reshape(n, L).astype(jnp.float32)
-    tile = NUM_BUFFERS * _SUBLANE * _LANE
+    tile = NUM_BUFFERS * S * _SUBLANE * _LANE
     pad = (-L) % tile
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     rows = flat.shape[1] // _LANE
     half = rows // NUM_BUFFERS
+    rows_s = half // S
     x = flat.reshape(n, rows, _LANE)
     my = lax.axis_index(axis).reshape(1).astype(jnp.int32)
     wire = jnp.dtype(wire_dtype)
     out = pl.pallas_call(
         functools.partial(_rs_dma_kernel, n=n, direction=direction,
-                          half=half, wire_dtype=wire),
+                          half=half, wire_dtype=wire, n_stripes=S),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
             out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
             scratch_shapes=[
                 pltpu.VMEM((n, rows, _LANE), jnp.float32),      # accumulator
-                pltpu.VMEM((2, NUM_BUFFERS, half, _LANE), wire),  # send slots
-                pltpu.VMEM((2, NUM_BUFFERS, half, _LANE), wire),  # recv slots
-                pltpu.SemaphoreType.DMA((2, NUM_BUFFERS)),
-                pltpu.SemaphoreType.DMA((2, NUM_BUFFERS)),
+                pltpu.VMEM((2, NUM_BUFFERS, S, rows_s, _LANE), wire),  # send
+                pltpu.VMEM((2, NUM_BUFFERS, S, rows_s, _LANE), wire),  # recv
+                pltpu.SemaphoreType.DMA((2, NUM_BUFFERS, S)),
+                pltpu.SemaphoreType.DMA((2, NUM_BUFFERS, S)),
                 pltpu.SemaphoreType.REGULAR((2,)),   # per-parity capacity
             ]),
         out_shape=jax.ShapeDtypeStruct((rows, _LANE), jnp.float32),
@@ -242,12 +302,13 @@ def _rs_dma_tpu(chunks: jax.Array, axis: str, direction: int,
 
 
 def _ag_dma_kernel(my_ref, x_ref, o_ref, comm, send_sem, recv_sem, cap_sem,
-                   *, n, direction):
+                   *, n, direction, n_stripes):
     """Ring all-gather step loop: forward what arrived last step (slot s%2)
-    while the next hop lands in slot (s+1)%2.
+    while the next hop lands in slot (s+1)%2.  Each hop is ``n_stripes``
+    per-link remote copies (DESIGN.md §11), all started before any wait.
 
     Backpressure mirrors the reduce-scatter kernel: slot ``par`` is fully
-    drained only once step s's send from it completes (it was copied to the
+    drained only once step s's sends from it complete (it was copied to the
     output at step s-1 and is the DMA source at step s), at which point the
     receiver credits ``cap_sem[par]`` on its upstream sender; a sender takes
     the credit for slot ``nxt`` before writing it (steps >= 1 — the
@@ -263,7 +324,8 @@ def _ag_dma_kernel(my_ref, x_ref, o_ref, comm, send_sem, recv_sem, cap_sem,
     pltpu.semaphore_signal(barrier, inc=1, device_id=(lax.rem(my - 1 + n, n),),
                            device_id_type=pltpu.DeviceIdType.LOGICAL)
     pltpu.semaphore_wait(barrier, 2)
-    comm[0] = x_ref[...]
+    rows_s = comm.shape[2]
+    comm[0] = x_ref[...].reshape(n_stripes, rows_s, comm.shape[3])
     o_ref[my] = x_ref[...]
 
     def step(s, _):
@@ -271,15 +333,18 @@ def _ag_dma_kernel(my_ref, x_ref, o_ref, comm, send_sem, recv_sem, cap_sem,
 
         @pl.when(s >= 1)
         def _wait_capacity():
-            # dst drained slot nxt (its step s-1 send from it completed)
+            # dst drained slot nxt (its step s-1 sends from it completed)
             pltpu.semaphore_wait(cap_sem.at[nxt], 1)
 
-        rdma = pltpu.make_async_remote_copy(
-            src_ref=comm.at[par], dst_ref=comm.at[nxt],
-            send_sem=send_sem.at[par], recv_sem=recv_sem.at[nxt],
+        copies = [pltpu.make_async_remote_copy(
+            src_ref=comm.at[par, j], dst_ref=comm.at[nxt, j],
+            send_sem=send_sem.at[par, j], recv_sem=recv_sem.at[nxt, j],
             device_id=(dst,), device_id_type=pltpu.DeviceIdType.LOGICAL)
-        rdma.start()
-        rdma.wait()
+            for j in range(n_stripes)]
+        for c in copies:               # every link's stream launches first
+            c.start()
+        for c in copies:
+            c.wait()
 
         @pl.when(s < n - 2)
         def _credit_upstream():
@@ -288,33 +353,37 @@ def _ag_dma_kernel(my_ref, x_ref, o_ref, comm, send_sem, recv_sem, cap_sem,
                                    device_id_type=pltpu.DeviceIdType.LOGICAL)
 
         src_idx = lax.rem(my - direction * (s + 1) + n * (s + 2), n)
-        o_ref[src_idx] = comm[nxt]
+        o_ref[src_idx] = comm[nxt].reshape(n_stripes * rows_s, comm.shape[3])
         return ()
 
     lax.fori_loop(0, n - 1, step, ())
 
 
-def _ag_dma_tpu(x: jax.Array, axis: str, direction: int) -> jax.Array:
+def _ag_dma_tpu(x: jax.Array, axis: str, direction: int,
+                n_stripes: int = 1) -> jax.Array:
     """x (c, ...) -> (n, c, ...) rank-stacked.  TPU-only fast path."""
     n = lax.axis_size(axis)
     shape = x.shape
     L = int(np.prod(shape))
+    S = _clamp_stripes(n_stripes, -(-L // (_SUBLANE * _LANE)))
     flat = x.reshape(L)
-    pad = (-L) % (_SUBLANE * _LANE)
+    pad = (-L) % (S * _SUBLANE * _LANE)
     if pad:
         flat = jnp.pad(flat, (0, pad))
     rows = flat.shape[0] // _LANE
+    rows_s = rows // S
     my = lax.axis_index(axis).reshape(1).astype(jnp.int32)
     out = pl.pallas_call(
-        functools.partial(_ag_dma_kernel, n=n, direction=direction),
+        functools.partial(_ag_dma_kernel, n=n, direction=direction,
+                          n_stripes=S),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
             out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
             scratch_shapes=[
-                pltpu.VMEM((2, rows, _LANE), x.dtype),
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.VMEM((2, S, rows_s, _LANE), x.dtype),
+                pltpu.SemaphoreType.DMA((2, S)),
+                pltpu.SemaphoreType.DMA((2, S)),
                 pltpu.SemaphoreType.REGULAR((2,)),   # per-parity capacity
             ]),
         out_shape=jax.ShapeDtypeStruct((n, rows, _LANE), x.dtype),
@@ -333,18 +402,21 @@ def _on_tpu() -> bool:
 # ---------------------------------------------------------------------------
 # Public ring primitives (the backend="pallas" cross-island stage).
 # Signatures match core.collectives' xla rings so the dispatch layer can swap
-# them 1:1; extra keyword-only knobs (direction, wire_dtype) default to the
-# xla rings' behaviour.
+# them 1:1; extra keyword-only knobs (direction, wire_dtype, n_stripes)
+# default to the xla rings' behaviour.
 # ---------------------------------------------------------------------------
 
 def ring_reduce_scatter(x: jax.Array, axis: str, *, direction: int = 1,
-                        wire_dtype=None) -> jax.Array:
+                        wire_dtype=None, n_stripes: int = 1) -> jax.Array:
     """x (n*c, ...) tiled on dim 0 -> this rank's reduced chunk (c, ...).
 
     Same result as ``collectives.ring_reduce_scatter`` (within dtype
     tolerance: the accumulator here is f32 regardless of x.dtype, the
     collective_reduce contract).  ``wire_dtype`` narrows only the bytes on
     the wire — the fused decompression of the beyond-paper compression knob.
+    ``n_stripes`` splits each wire hop over that many per-link DMA streams
+    (the transport layer's stripe schedule, DESIGN.md §11) — bit-equivalent
+    to the unstriped ring, clamped to the payload's granularity.
     """
     n = lax.axis_size(axis)
     if n == 1:
@@ -353,14 +425,14 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, direction: int = 1,
     wire = jnp.dtype(wire_dtype) if wire_dtype is not None else x.dtype
     chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
     if _on_tpu():
-        out = _rs_dma_tpu(chunks, axis, direction, wire)
+        out = _rs_dma_tpu(chunks, axis, direction, wire, n_stripes)
     else:
-        out = _rs_emulated(chunks, axis, direction, wire)
+        out = _rs_emulated(chunks, axis, direction, wire, n_stripes)
     return out.astype(x.dtype)
 
 
 def ring_reduce_scatter_bidir(x: jax.Array, axis: str, *,
-                              wire_dtype=None) -> jax.Array:
+                              wire_dtype=None, n_stripes: int = 1) -> jax.Array:
     """Bidirectional DMA ring reduce-scatter: the payload's halves travel in
     opposite directions concurrently (independent kernels per direction —
     each link's two lanes carry half the bytes, as in the xla bidir ring)."""
@@ -370,46 +442,53 @@ def ring_reduce_scatter_bidir(x: jax.Array, axis: str, *,
     assert x.shape[0] % n == 0, (x.shape, n)
     c = x.shape[0] // n
     if c < 2:
-        return ring_reduce_scatter(x, axis, wire_dtype=wire_dtype)
+        return ring_reduce_scatter(x, axis, wire_dtype=wire_dtype,
+                                   n_stripes=n_stripes)
     h = c // 2
     chunks = x.reshape((n, c) + x.shape[1:])
     fwd = chunks[:, :h].reshape((n * h,) + x.shape[1:])
     bwd = chunks[:, h:].reshape((n * (c - h),) + x.shape[1:])
     return jnp.concatenate([
-        ring_reduce_scatter(fwd, axis, direction=1, wire_dtype=wire_dtype),
-        ring_reduce_scatter(bwd, axis, direction=-1, wire_dtype=wire_dtype),
+        ring_reduce_scatter(fwd, axis, direction=1, wire_dtype=wire_dtype,
+                            n_stripes=n_stripes),
+        ring_reduce_scatter(bwd, axis, direction=-1, wire_dtype=wire_dtype,
+                            n_stripes=n_stripes),
     ], axis=0)
 
 
-def ring_all_gather(x: jax.Array, axis: str, *, direction: int = 1) -> jax.Array:
+def ring_all_gather(x: jax.Array, axis: str, *, direction: int = 1,
+                    n_stripes: int = 1) -> jax.Array:
     """x (c, ...) per-rank chunk -> (n*c, ...) rank-major; matches
-    ``collectives.ring_all_gather`` exactly (no reduction, no dtype drift)."""
+    ``collectives.ring_all_gather`` exactly (no reduction, no dtype drift;
+    stripes only split the wire hops, DESIGN.md §11)."""
     n = lax.axis_size(axis)
     if n == 1:
         return x
-    out = _ag_dma_tpu(x, axis, direction) if _on_tpu() else \
-        _ag_emulated(x, axis, direction)
+    out = _ag_dma_tpu(x, axis, direction, n_stripes) if _on_tpu() else \
+        _ag_emulated(x, axis, direction, n_stripes)
     return out.reshape((n * x.shape[0],) + x.shape[1:])
 
 
-def ring_all_gather_bidir(x: jax.Array, axis: str) -> jax.Array:
+def ring_all_gather_bidir(x: jax.Array, axis: str, *,
+                          n_stripes: int = 1) -> jax.Array:
     """Bidirectional DMA ring all-gather (halves per-link byte-hops)."""
     n = lax.axis_size(axis)
     if n == 1:
         return x
     c = x.shape[0]
     if c < 2:
-        return ring_all_gather(x, axis)
+        return ring_all_gather(x, axis, n_stripes=n_stripes)
     h = c // 2
-    accf = _ag_dma_tpu(x[:h], axis, 1) if _on_tpu() else \
-        _ag_emulated(x[:h], axis, 1)
-    accb = _ag_dma_tpu(x[h:], axis, -1) if _on_tpu() else \
-        _ag_emulated(x[h:], axis, -1)
+    accf = _ag_dma_tpu(x[:h], axis, 1, n_stripes) if _on_tpu() else \
+        _ag_emulated(x[:h], axis, 1, n_stripes)
+    accb = _ag_dma_tpu(x[h:], axis, -1, n_stripes) if _on_tpu() else \
+        _ag_emulated(x[h:], axis, -1, n_stripes)
     out = jnp.concatenate([accf, accb], axis=1)        # (n, c, ...)
     return out.reshape((n * c,) + x.shape[1:])
 
 
-def ring_all_reduce(x: jax.Array, axis: str, *, wire_dtype=None) -> jax.Array:
+def ring_all_reduce(x: jax.Array, axis: str, *, wire_dtype=None,
+                    n_stripes: int = 1) -> jax.Array:
     """Bandwidth-optimal DMA ring all-reduce (reduce-scatter + all-gather),
     f32 accumulation, result cast back to x.dtype."""
     n = lax.axis_size(axis)
@@ -421,7 +500,8 @@ def ring_all_reduce(x: jax.Array, axis: str, *, wire_dtype=None) -> jax.Array:
     if pad:
         flat = jnp.pad(flat, (0, pad))
     red = ring_all_gather(
-        ring_reduce_scatter(flat, axis, wire_dtype=wire_dtype), axis)
+        ring_reduce_scatter(flat, axis, wire_dtype=wire_dtype,
+                            n_stripes=n_stripes), axis, n_stripes=n_stripes)
     if pad:
         red = red[: flat.shape[0] - pad]
     return red.reshape(shape).astype(dtype)

@@ -32,7 +32,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.balance import uniform_plan
 from repro.launch.mesh import (cluster_for_mesh, make_production_mesh,
-                               mesh_axis_sizes, pod_size_of)
+                               mesh_axis_sizes, pod_size_of, resolve_stripes)
 from repro.models import build
 from repro.roofline.analysis import Roofline, analyze_hlo
 from repro.serve.engine import make_serve_programs
@@ -88,7 +88,7 @@ def _serve_batch_sds(cfg: ModelConfig, shape: ShapeConfig, kind: str):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
              verbose: bool = True, plan_mode: str = "manual",
-             backend: str = "auto") -> dict:
+             backend: str = "auto", stripes: str = "auto") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero}
@@ -108,9 +108,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
             dp = int(np.prod([sizes.get(a, 1) for a in ("pod", "data")]))
             assert shape.global_batch % dp == 0, (shape.global_batch, dp)
             if plan_mode == "auto":
-                # joint (shares, mode, backend, channels, bucket) selection
-                # priced by the simulator on the mesh's modeled topology
-                # (DESIGN.md §9; ring backends §10)
+                # joint (shares, mode, backend, channels, bucket, stripes)
+                # selection priced by the simulator on the mesh's modeled
+                # topology (DESIGN.md §9; ring backends §10, transport §11)
                 import dataclasses as _dc
                 req = plan_mod.plan_request(
                     cluster_for_mesh(mesh), cfg, shape.global_batch,
@@ -119,12 +119,15 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
                 space = plan_mod.DEFAULT_SPACE
                 if backend != "auto":
                     space = _dc.replace(space, backends=(backend,))
+                if stripes != "auto":
+                    space = _dc.replace(space,
+                                        stripe_counts=(int(stripes),))
                 tp = plan_mod.autotune(req, space)
                 plan, rc = tp.plan, tp.run_config()
                 rec["plan"] = tp.summary()
                 if verbose:
                     print(f"  plan auto: mode={tp.mode} backend={tp.backend} "
-                          f"C={tp.n_channels} "
+                          f"C={tp.n_channels} stripes={tp.n_stripes} "
                           f"bucket={tp.bucket_bytes >> 20}MiB "
                           f"shares={tp.plan.micro_per_pod} "
                           f"modeled_step={tp.modeled_step_s:.4f}s")
@@ -136,9 +139,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
                 mb = max(1, min(per_dev, 8192 // shape.seq_len))
                 n_micro = per_dev // mb
                 plan = uniform_plan(n_pods, n_micro * n_pods, mb)
+                rbackend = backend if backend != "auto" else "xla"
                 rc = RunConfig(zero_stage=zero,
                                collective_mode="hier" if multi else "flat",
-                               backend=backend if backend != "auto" else "xla")
+                               backend=rbackend,
+                               n_stripes=resolve_stripes(stripes, rbackend,
+                                                         mesh))
             batch_sds, extra_specs = _train_batch_sds(cfg, shape, mesh, plan)
             prog = make_train_program(model, mesh, rc, plan,
                                       extra_batch_specs=extra_specs)
@@ -234,6 +240,13 @@ def main():
                          "auto lets --plan auto search it (manual plans "
                          "default to xla).  Pinned runs get a __<backend> "
                          "file suffix so baselines can be kept side by side")
+    ap.add_argument("--stripes", default="auto",
+                    help="multi-NIC stripe count of the DMA rings "
+                         "(transport layer, DESIGN.md §11; pallas backend "
+                         "only).  auto = planner-chosen (--plan auto "
+                         "searches SearchSpace.stripe_counts; manual pallas "
+                         "plans ask transport.plan_stripes); an integer "
+                         "pins it")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -251,7 +264,8 @@ def main():
                     tag += f"__{args.backend}"
                 print(f"=== {tag} ===", flush=True)
                 rec = run_cell(arch, shape, mesh_kind, args.zero,
-                               plan_mode=args.plan, backend=args.backend)
+                               plan_mode=args.plan, backend=args.backend,
+                               stripes=args.stripes)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
                 print(f"  -> {rec['status']} "

@@ -72,3 +72,24 @@ def make_smoke_mesh(n_pods: int = 1, data: int = 1, model: int = 1):
     if n_pods > 1:
         return compat.make_mesh((n_pods, data, model), ("pod", "data", "model"))
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def resolve_stripes(stripes: str, backend: str, mesh) -> int:
+    """Shared ``--stripes`` resolution of the launchers (DESIGN.md §11).
+
+    An explicit integer pins the count; ``"auto"`` asks
+    ``transport.plan_stripes`` over the mesh's modeled cluster — only
+    meaningful for the pallas backend on a multi-island mesh (the xla ring
+    is one logical transfer), so everything else resolves to 1.  The
+    representative payload is one gradient bucket's cross-ring shard
+    (``bucket_bytes / data-axis``), the transfer the stripes actually carry.
+    """
+    if stripes != "auto":
+        return int(stripes)
+    sizes = mesh_axis_sizes(mesh)
+    if backend != "pallas" or sizes.get("pod", 1) <= 1:
+        return 1
+    from repro.configs.base import RunConfig
+    from repro.transport import auto_stripes
+    return auto_stripes(cluster_for_mesh(mesh),
+                        RunConfig().bucket_bytes // sizes.get("data", 1))

@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
                     help="collective ring backend (DESIGN.md §10); "
                          "--plan auto searches it jointly and overrides this")
+    ap.add_argument("--stripes", default="auto",
+                    help="multi-NIC stripe count of the DMA rings "
+                         "(transport layer, DESIGN.md §11; pallas only). "
+                         "auto = planner-chosen: --plan auto searches it, "
+                         "manual pallas runs ask transport.plan_stripes; "
+                         "an integer pins it")
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: repro.plan picks mode/channels/bucket/shares")
     ap.add_argument("--seq", type=int, default=128)
@@ -71,10 +77,15 @@ def main():
     model = build(cfg)
     sizes = dict(zip(axes, shape))
     n_pods = sizes.get("pod", 1)
+    from repro.launch.mesh import resolve_stripes
     rc = RunConfig(zero_stage=args.zero, collective_mode=args.mode,
                    backend=args.backend, learning_rate=args.lr,
+                   # --plan auto searches the count below and replaces this
+                   n_stripes=resolve_stripes(args.stripes, args.backend,
+                                             mesh),
                    param_dtype="float32" if args.reduced else "bfloat16")
     if args.plan == "auto":
+        import dataclasses as _dc
         from repro import plan as plan_mod
         from repro.launch.mesh import cluster_for_mesh
         data_axis = sizes.get("data", 1)
@@ -83,10 +94,13 @@ def main():
             global_batch=args.n_micro * n_pods * args.micro_batch * data_axis,
             seq_len=args.seq, data_axis=data_axis, zero_stage=args.zero,
             micro_tokens=args.micro_batch * args.seq)
-        tp = plan_mod.autotune(req)
+        space = plan_mod.DEFAULT_SPACE
+        if args.stripes != "auto":
+            space = _dc.replace(space, stripe_counts=(int(args.stripes),))
+        tp = plan_mod.autotune(req, space)
         plan, rc = tp.plan, tp.run_config(rc)
         print(f"plan auto: mode={tp.mode} backend={tp.backend} "
-              f"C={tp.n_channels} "
+              f"C={tp.n_channels} stripes={tp.n_stripes} "
               f"bucket={tp.bucket_bytes >> 20}MiB shares={plan.micro_per_pod} "
               f"modeled_step={tp.modeled_step_s:.4f}s")
     else:

@@ -60,6 +60,13 @@ class SearchSpace:
                   in-kernel reduction.  Varied only for hier/pipelined —
                   flat's native single-stage collective is backend-invariant
                   (the vendor library already fuses its reduction).
+    stripe_counts: multi-NIC stripe counts of the transport layer (DESIGN.md
+                  §11): per-link DMA streams of the cross-island ring.
+                  Varied only for the pallas backend — the xla ppermute ring
+                  is one logical transfer and ignores the knob
+                  (``HetCCLConfig.resolved_stripes``) — and priced via the
+                  simulator's per-link wire term, so on single-link chips
+                  every count models identically and the tie-break keeps 1.
     """
 
     modes: tuple[str, ...] = ("flat", "hier", "pipelined")
@@ -67,6 +74,7 @@ class SearchSpace:
     bucket_bytes: tuple[int, ...] = (16 * MiB, 64 * MiB, 256 * MiB)
     zero_stages: tuple[int, ...] = (1, 3)
     backends: tuple[str, ...] = ("xla", "pallas")
+    stripe_counts: tuple[int, ...] = (1, 2, 4)
 
 
 DEFAULT_SPACE = SearchSpace()
@@ -175,6 +183,8 @@ class TrainPlan:
     modeled_tokens_per_s: float
     fits_hbm: bool
     hbm_bytes_per_device: float
+    n_stripes: int = 1            # per-link DMA streams of the cross ring
+                                  # (transport layer, DESIGN.md §11; pallas)
     compute_scale: float = 1.0    # profile-refinement calibration (refine())
     # the per-pod speeds the shares were computed from (measured profiles or
     # the hardware-constant fallback) — carried so refine() re-plans on the
@@ -201,6 +211,7 @@ class TrainPlan:
         return dataclasses.replace(
             base, zero_stage=self.zero_stage, collective_mode=self.mode,
             backend=self.backend, n_channels=self.n_channels,
+            n_stripes=self.n_stripes,
             bucket_bytes=self.bucket_bytes, n_micro=self.plan.n_micro_max)
 
     def hetccl_config(self, local_axes: tuple[str, ...] = ("data",),
@@ -212,13 +223,14 @@ class TrainPlan:
             mode=self.mode, local_axes=local_axes,
             pod_axis=pod_axis if len(self.request.cluster.pods) > 1 else None,
             bucket_bytes=self.bucket_bytes, n_channels=self.n_channels,
-            backend=self.backend)
+            backend=self.backend, n_stripes=self.n_stripes)
 
     def summary(self) -> dict:
         """JSON-friendly digest (the dry-run record / plan_sweep row)."""
         return {
             "mode": self.mode, "backend": self.backend,
             "n_channels": self.n_channels,
+            "n_stripes": self.n_stripes,
             "bucket_MiB": self.bucket_bytes // MiB,
             "zero_stage": self.zero_stage,
             "micro_per_pod": list(self.plan.micro_per_pod),
@@ -298,13 +310,15 @@ def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
     counts only vary the pipelined mode, bucket sizes only ZeRO-1, ring
     backends only the modes with an explicit cross-island ring (hier /
     pipelined — flat's native collective is backend-invariant, DESIGN.md
-    §10); the flat baseline is always included.  Yields
-    (mode, backend, n_channels, bucket, zero)."""
+    §10), stripe counts only the pallas backend (the xla ring is one
+    logical transfer, §11); the flat baseline is always included.  Yields
+    (mode, backend, n_channels, bucket, zero, stripes)."""
     seen = set()
     modes = tuple(space.modes)
     if "flat" not in modes:
         modes = ("flat",) + modes
     backends = tuple(space.backends) or ("xla",)
+    stripe_counts = tuple(space.stripe_counts) or (1,)
     for zero in zero_stages:
         for mode in modes:
             channels = space.n_channels if mode == "pipelined" else (1,)
@@ -312,12 +326,14 @@ def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
             mode_backends = backends if mode != "flat" else (
                 backends if "xla" not in backends else ("xla",))
             for backend in mode_backends:
+                stripes_dim = stripe_counts if backend == "pallas" else (1,)
                 for c in channels:
                     for b in buckets:
-                        key = (mode, backend, c, b, zero)
-                        if key not in seen:
-                            seen.add(key)
-                            yield key
+                        for k in stripes_dim:
+                            key = (mode, backend, c, b, zero, k)
+                            if key not in seen:
+                                seen.add(key)
+                                yield key
 
 
 def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
@@ -339,7 +355,9 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
         Candidates sorted by (feasibility, modeled step time, simplicity).
         Deterministic: equal-cost candidates break ties toward the simpler
         schedule (flat < hier < pipelined, then xla < pallas, fewer
-        channels, smaller buckets, lower ZeRO stage).
+        stripes, fewer channels, smaller buckets, lower ZeRO stage) — so on
+        single-link chips, where every stripe count prices identically, the
+        planner keeps stripes=1.
     """
     cluster = request.cluster
     profiles = tuple(profiles) if profiles else pod_profiles(cluster)
@@ -364,24 +382,26 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
         for p, n_micro in zip(cluster.pods, hetplan.micro_per_pod))
 
     out = []
-    for mode, backend, n_channels, bucket, zero in _candidates(space,
-                                                               zero_stages):
+    for mode, backend, n_channels, bucket, zero, stripes in _candidates(
+            space, zero_stages):
         if zero >= 3:
             comm = sim.zero3_comm_time(w.param_bytes, request.model.n_layers,
                                        comm_cluster, mode,
-                                       n_channels=n_channels, backend=backend)
+                                       n_channels=n_channels, backend=backend,
+                                       n_stripes=stripes)
         else:
             comm = sim.bucketed_all_reduce_time(w.param_bytes, comm_cluster,
                                                 mode, bucket_bytes=bucket,
                                                 n_channels=n_channels,
-                                                backend=backend)
+                                                backend=backend,
+                                                n_stripes=stripes)
         comm = (1.0 - request.overlap) * request.comm_scale * comm
         step_s = comp + comm
         hbm = estimate_hbm_bytes(request, zero, mb)
         out.append(TrainPlan(
             request=request, space=space, plan=hetplan, mode=mode,
             backend=backend, n_channels=n_channels, bucket_bytes=bucket,
-            zero_stage=zero,
+            zero_stage=zero, n_stripes=stripes,
             modeled_step_s=step_s, modeled_compute_s=comp,
             modeled_comm_s=comm,
             modeled_tokens_per_s=live_tokens / step_s if step_s > 0 else 0.0,
@@ -390,7 +410,8 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
             profiles=profiles))
     out.sort(key=lambda t: (not t.fits_hbm, t.modeled_step_s,
                             _MODE_ORDER[t.mode], _BACKEND_ORDER[t.backend],
-                            t.n_channels, t.bucket_bytes, t.zero_stage))
+                            t.n_stripes, t.n_channels, t.bucket_bytes,
+                            t.zero_stage))
     return out
 
 

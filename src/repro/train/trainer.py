@@ -84,9 +84,9 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         bucket_bytes=rc.bucket_bytes,
         n_channels=rc.n_channels,
         pipeline_chunk_bytes=rc.pipeline_chunk_bytes,
-        backend=rc.backend)
-    hcfg.resolved_mode()        # eager mode/backend validation (typos fail
-    hcfg.resolved_backend()     # at build, not inside the compiled step)
+        backend=rc.backend, n_stripes=rc.n_stripes)
+    hcfg.resolved_mode()        # eager mode/backend/stripe validation (typos
+    hcfg.resolved_stripes()     # fail at build, not inside the compiled step)
     manual_axes = _manual_axes(local_axes, pod_axis)
     rules = make_rules(cfg, mesh, rc.zero_stage)
     ctx = Ctx(rules=rules, manual=True, dp_axes=manual_axes)

@@ -1,0 +1,24 @@
+"""repro.transport — the multi-NIC striped transport layer (DESIGN.md §11).
+
+The layer between the collectives and the wire: a per-chip
+:class:`LinkInventory` with mutable health (up / degraded / down), a
+deterministic :class:`StripePlan` that splits each ring chunk across k
+per-link DMA streams, and a :class:`FlowScheduler` that maps stripes to the
+kernels' semaphore lanes and prices failover when a link dies.  Pure
+stdlib — importable from the numpy-only planner and a login node alike.
+"""
+from repro.transport.links import (LINK_DEGRADED, LINK_DOWN, LINK_UP, Link,
+                                   LinkHealth, LinkInventory)
+from repro.transport.stripe import (MAX_STRIPES, MIN_STRIPE_BYTES,
+                                    MXU_TILE_BYTES, STRIPE_FILL_S, StripePlan,
+                                    auto_stripes, plan_stripes)
+from repro.transport.flow import (FailoverEvent, FlowLane, FlowScheduler,
+                                  N_PARITIES, N_STREAMS)
+
+__all__ = [
+    "LINK_DEGRADED", "LINK_DOWN", "LINK_UP", "Link", "LinkHealth",
+    "LinkInventory",
+    "MAX_STRIPES", "MIN_STRIPE_BYTES", "MXU_TILE_BYTES", "STRIPE_FILL_S",
+    "StripePlan", "auto_stripes", "plan_stripes",
+    "FailoverEvent", "FlowLane", "FlowScheduler", "N_PARITIES", "N_STREAMS",
+]

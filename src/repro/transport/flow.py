@@ -1,0 +1,123 @@
+"""Flow-level scheduling: stripes -> semaphore lanes, and priced failover
+(DESIGN.md §11).
+
+The stripe planner (``transport.stripe``) decides *how many* streams and on
+*which links*; this module owns what happens between planning and the wire:
+
+  * :meth:`FlowScheduler.lanes` — the deterministic mapping from a
+    :class:`StripePlan` to the DMA kernels' semaphore lanes.  The ring
+    kernels allocate per-(step-parity, stream, stripe) DMA semaphores
+    (``kernels.ring_dma``: 2 parities × NUM_BUFFERS streams × k stripes);
+    a :class:`FlowLane` names one of those slots plus the link its stripe
+    rides, so a hung lane in a fleet log maps straight back to a NIC.
+  * :meth:`FlowScheduler.failover` — the down-link contract: when a link
+    dies mid-plan, the flow is **restriped over the surviving links and the
+    change is priced** (old vs new modeled wire time), never silently
+    dropped or silently absorbed.  Numerics are unaffected by construction
+    (striping is pad-and-slice of the same bytes); only time changes, and
+    the :class:`FailoverEvent` records by how much.
+
+N_STREAMS must equal ``kernels.ring_dma.NUM_BUFFERS`` — the same
+cross-layer contract the simulator's DMA_STREAMS carries, tested in
+``tests/test_transport.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.transport.links import LinkInventory
+from repro.transport.stripe import StripePlan, plan_stripes
+
+# Double-buffer streams per ring step (== kernels.ring_dma.NUM_BUFFERS) and
+# step parities of the comm-slot protocol (DESIGN.md §10).  Literals so this
+# module stays jax-free; the equality is contract-tested.
+N_STREAMS = 2
+N_PARITIES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowLane:
+    """One semaphore lane of the DMA ring kernels: the (parity, stream,
+    stripe) slot plus the link the stripe rides."""
+
+    parity: int
+    stream: int
+    stripe: int
+    link: int
+
+    def sem_index(self, n_stripes: int) -> int:
+        """Flat index into the kernel's (parity, stream, stripe) semaphore
+        array — the order ``pltpu.SemaphoreType.DMA((2, S, k))`` lays out."""
+        return (self.parity * N_STREAMS + self.stream) * n_stripes + self.stripe
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverEvent:
+    """One priced restripe: what died, what the flow looked like before and
+    after, and the modeled cost of surviving it."""
+
+    down_link: int
+    old_plan: StripePlan
+    new_plan: StripePlan
+    nbytes: float
+    old_time_s: float
+    new_time_s: float
+
+    @property
+    def slowdown(self) -> float:
+        """new/old modeled wire time — >= 1.0 unless the dead link was
+        already the straggler of the old plan."""
+        return self.new_time_s / self.old_time_s if self.old_time_s else 1.0
+
+
+class FlowScheduler:
+    """Maps stripes to semaphore lanes and re-plans around link failures.
+
+    One scheduler per island-pair flow; it owns (a reference to) the local
+    inventory, so health mutations made through it are visible to everything
+    else pricing the same chip (``ClusterSpec.effective_link_bw``).
+    """
+
+    def __init__(self, inventory: LinkInventory,
+                 peer: Optional[LinkInventory] = None,
+                 inter_bw: float = math.inf):
+        self.inventory = inventory
+        self.peer = peer
+        self.inter_bw = inter_bw
+        self.events: list[FailoverEvent] = []
+
+    def plan(self, nbytes: float, max_stripes: int | None = None,
+             exact: bool = False) -> StripePlan:
+        """Current-health stripe plan for a transfer of ``nbytes``."""
+        return plan_stripes(self.inventory, self.peer, nbytes=nbytes,
+                            inter_bw=self.inter_bw, max_stripes=max_stripes,
+                            exact=exact)
+
+    def lanes(self, plan: StripePlan) -> tuple[FlowLane, ...]:
+        """Every semaphore lane the kernels arm for ``plan``, in the layout
+        order of the kernel's (parity, stream, stripe) semaphore arrays."""
+        return tuple(
+            FlowLane(parity=p, stream=s, stripe=j, link=plan.link_ids[j])
+            for p in range(N_PARITIES)
+            for s in range(N_STREAMS)
+            for j in range(plan.n_stripes))
+
+    def failover(self, plan: StripePlan, down_link: int,
+                 nbytes: float) -> FailoverEvent:
+        """Mark ``down_link`` dead and restripe over the surviving links.
+
+        Returns the priced :class:`FailoverEvent` (also appended to
+        ``self.events``).  Raises RuntimeError — not a silent drop — when no
+        healthy link survives.
+        """
+        old_time = plan.wire_time(nbytes)
+        self.inventory.mark_down(down_link)
+        new_plan = self.plan(nbytes)
+        ev = FailoverEvent(down_link=down_link, old_plan=plan,
+                           new_plan=new_plan, nbytes=nbytes,
+                           old_time_s=old_time,
+                           new_time_s=new_plan.wire_time(nbytes))
+        self.events.append(ev)
+        return ev

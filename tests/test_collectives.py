@@ -267,16 +267,36 @@ def test_pipelined_chunk_bytes_sizing(mesh3):
 
 def test_resolve_channels_clamps():
     """Channel sizing edge cases: n_channels > payload granularity, explicit
-    chunk_bytes ceil, MAX_CHANNELS bound, degenerate limits."""
+    chunk_bytes ceil, MAX_CHANNELS bound, degenerate limits.  Payloads sit
+    above the MXU-tile floor so these cases test exactly what they always
+    did; the floor itself is tested separately below."""
+    from repro.transport.stripe import MXU_TILE_BYTES
     rc = C.resolve_channels
-    assert rc(1024, 4, None, limit=64) == 4            # plain channel count
-    assert rc(1024, 16, None, limit=3) == 3            # n_channels > n_chunks
-    assert rc(1024, 999, None, limit=999) == C.MAX_CHANNELS
-    assert rc(1024, 0, None, limit=8) == 1             # nonsense -> serial
-    assert rc(1024, 4, 300, limit=64) == 4             # ceil(1024/300) = 4
-    assert rc(1024, 4, 2048, limit=64) == 1            # chunk > payload
-    assert rc(1024, 4, None, limit=0) == 1             # empty granularity
+    big = 64 * MXU_TILE_BYTES                          # comfortably splittable
+    assert rc(big, 4, None, limit=64) == 4             # plain channel count
+    assert rc(big, 16, None, limit=3) == 3             # n_channels > n_chunks
+    assert rc(big, 999, None, limit=999) == C.MAX_CHANNELS
+    assert rc(big, 0, None, limit=8) == 1              # nonsense -> serial
+    assert rc(big, 4, big // 3, limit=64) == 4         # ceil(n/(n/3)) = 4
+    assert rc(big, 4, 2 * big, limit=64) == 1          # chunk > payload
+    assert rc(big, 4, None, limit=0) == 1              # empty granularity
     assert rc(0, 4, 256, limit=8) == 1                 # zero-byte payload
+
+
+def test_resolve_channels_tile_floor():
+    """Regression (DESIGN.md §11): channels × stripes must never fragment a
+    payload below one MXU tile — a tiny gradient bucket runs one wide
+    channel, not MAX_CHANNELS tile-starved ones."""
+    from repro.transport.stripe import MXU_TILE_BYTES
+    rc = C.resolve_channels
+    assert rc(1024, 16, None, limit=999) == 1          # tiny bucket -> serial
+    assert rc(4 * MXU_TILE_BYTES, 16, None, limit=999) == 4
+    # stripes multiply the fragmentation: the same payload takes fewer
+    # channels when each channel is further sliced over 4 links
+    assert rc(16 * MXU_TILE_BYTES, 16, None, limit=999, n_stripes=1) == 16
+    assert rc(16 * MXU_TILE_BYTES, 16, None, limit=999, n_stripes=4) == 4
+    # explicit chunk_bytes is clamped by the same floor
+    assert rc(4 * MXU_TILE_BYTES, 1, 512, limit=999, n_stripes=2) == 2
 
 
 @pytest.mark.parametrize("n_channels", [8, 16])

@@ -8,6 +8,8 @@ pins the TACC ``collective_reduce`` entry to the Pallas kernel's
 interpret-mode body, so the kernel's accumulate (f32 acc + narrow-wire
 decompression) — the piece the TPU DMA kernel fuses — is what actually runs.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +21,11 @@ from repro.core import collectives as C
 from repro.kernels import ring_dma
 
 rng = np.random.RandomState(7)
+
+# CI matrix knob (DESIGN.md §11): the pallas-equivalence job re-runs this
+# whole suite with the transport stripe count forced to 2, so every
+# mode-level equivalence below also certifies the striped schedule.
+N_STRIPES = int(os.environ.get("REPRO_TEST_N_STRIPES", "1"))
 
 TOL = {np.float32: dict(rtol=1e-5, atol=1e-5),
        # bf16 payloads: the xla ring accumulates in bf16, the pallas ring in
@@ -48,6 +55,7 @@ def _ring_mesh(n):
 
 
 def _cfg(mode, backend, **kw):
+    kw.setdefault("n_stripes", N_STRIPES)
     return hetccl.HetCCLConfig(mode=mode, local_axes=("data",),
                                pod_axis="pod", backend=backend, **kw)
 
@@ -93,6 +101,72 @@ def test_dma_bidir_rings_match_unidirectional(n):
     want = _run(mesh, lambda v: C.ring_all_gather(v, "pod"), y,
                 P("pod"), P(None), {"pod"})
     np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_striped_rings_bit_equal(n, k):
+    """Transport stripes (DESIGN.md §11) are pad-and-slice of the same wire
+    hops: striped(k) == unstriped pallas == xla for RS and AG."""
+    mesh = _ring_mesh(n)
+    x = rng.randn(n * n * 2, 6).astype(np.float32)
+    want = _run(mesh, lambda v: C.ring_reduce_scatter(v, "pod"), x,
+                P("pod"), P("pod"), {"pod"})
+    un = _run(mesh, lambda v: ring_dma.ring_reduce_scatter(v, "pod"), x,
+              P("pod"), P("pod"), {"pod"})
+    got = _run(mesh, lambda v: ring_dma.ring_reduce_scatter(
+        v, "pod", n_stripes=k), x, P("pod"), P("pod"), {"pod"})
+    np.testing.assert_array_equal(got, un)            # striping is exact
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    y = rng.randn(n * 4, 3).astype(np.float32)
+    wag = _run(mesh, lambda v: C.ring_all_gather(v, "pod"), y,
+               P("pod"), P(None), {"pod"})
+    gag = _run(mesh, lambda v: ring_dma.ring_all_gather(
+        v, "pod", n_stripes=k), y, P("pod"), P(None), {"pod"})
+    np.testing.assert_array_equal(gag, wag)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_striped_all_reduce_matches_unstriped(k):
+    mesh = _ring_mesh(4)
+    x = rng.randn(4, 10, 7).astype(np.float32)
+    got = _run(mesh, lambda v: ring_dma.ring_all_reduce(
+        v[0], "pod", n_stripes=k)[None], x, P("pod"), P("pod"), {"pod"})
+    un = _run(mesh, lambda v: ring_dma.ring_all_reduce(v[0], "pod")[None],
+              x, P("pod"), P("pod"), {"pod"})
+    np.testing.assert_array_equal(got, un)
+    np.testing.assert_allclose(got[0], x.sum(0), rtol=1e-5, atol=1e-5)
+
+
+def test_failover_restripe_same_numerics_higher_modeled_time():
+    """The transport failover contract (DESIGN.md §11): a link marked down
+    mid-plan restripes over the survivors — identical numerics (the stripe
+    count only re-slices the same bytes), strictly accounted (priced) time."""
+    from repro import transport
+    from repro.core import simulator as sim
+    from repro.core.topology import tpu_mixed_fleet
+    fs = transport.FlowScheduler(transport.LinkInventory.from_chip(
+        tpu_mixed_fleet().pods[0].chip), inter_bw=25e9)
+    plan = fs.plan(32 << 20)
+    mesh = _ring_mesh(4)
+    x = rng.randn(4 * 8, 5).astype(np.float32)
+
+    def run_k(k):
+        return _run(mesh, lambda v: ring_dma.ring_reduce_scatter(
+            v, "pod", n_stripes=k), x, P("pod"), P("pod"), {"pod"})
+
+    before = run_k(plan.n_stripes)
+    ev = fs.failover(plan, plan.link_ids[0], 32 << 20)
+    after = run_k(ev.new_plan.n_stripes)
+    np.testing.assert_array_equal(before, after)      # numerics unchanged
+    assert ev.new_time_s > ev.old_time_s              # time is, and is priced
+    # the simulator sees the same failover through the cluster inventory
+    healthy, down = tpu_mixed_fleet(2, 2, 8), tpu_mixed_fleet(2, 2, 8)
+    down.inventory(down.pods[0]).mark_down(0)
+    assert sim.collective_time("all_reduce", 32 << 20, down, "pipelined",
+                               backend="pallas", n_stripes="auto") > \
+        sim.collective_time("all_reduce", 32 << 20, healthy, "pipelined",
+                            backend="pallas", n_stripes="auto")
 
 
 def test_dma_ring_narrow_wire_decompression():

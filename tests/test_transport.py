@@ -1,0 +1,294 @@
+"""The multi-NIC striped transport layer (``repro.transport``, DESIGN.md
+§11): link inventory/health, deterministic stripe planning, flow lanes and
+priced failover, plus its integration into the topology endpoint model, the
+simulator's per-link wire term, and the plan autotuner's stripe dimension.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import transport
+from repro.core import simulator as sim
+from repro.core.topology import (ClusterSpec, PodSpec, TPU_V4, TPU_V5E,
+                                 V100_PCIE, paper_cluster, tpu_mixed_fleet)
+
+MB = 1 << 20
+
+
+def _v5e_inv():
+    return transport.LinkInventory.from_chip(TPU_V5E)
+
+
+# ---------------------------------------------------------------------------
+# links.py: inventory + health
+# ---------------------------------------------------------------------------
+
+def test_inventory_from_chip():
+    inv = _v5e_inv()
+    assert inv.n_healthy() == TPU_V5E.local_links == 4
+    assert inv.healthy_bw() == pytest.approx(
+        TPU_V5E.local_link_bw * TPU_V5E.local_links)
+    assert inv.effective_bw(0) == TPU_V5E.local_link_bw
+
+
+def test_health_transitions():
+    inv = _v5e_inv()
+    inv.mark_degraded(1, 0.5)
+    assert inv.effective_bw(1) == pytest.approx(0.5 * TPU_V5E.local_link_bw)
+    assert inv.n_healthy() == 4                      # degraded stays usable
+    inv.mark_down(1)
+    assert inv.effective_bw(1) == 0.0
+    assert inv.n_healthy() == 3
+    inv.mark_up(1)
+    assert inv.effective_bw(1) == TPU_V5E.local_link_bw
+    with pytest.raises(ValueError):
+        inv.mark_degraded(0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# stripe.py: plan_stripes determinism, floor, monotonicity
+# ---------------------------------------------------------------------------
+
+def test_plan_stripes_deterministic():
+    a, b = _v5e_inv(), _v5e_inv()
+    p1 = transport.plan_stripes(a, nbytes=8 * MB, inter_bw=25e9)
+    p2 = transport.plan_stripes(b, nbytes=8 * MB, inter_bw=25e9)
+    assert p1 == p2
+    assert p1.link_ids == tuple(sorted(p1.link_ids))   # index tie-break
+
+
+def test_plan_stripes_respects_byte_floor():
+    inv = _v5e_inv()
+    tiny = transport.plan_stripes(inv, nbytes=transport.MIN_STRIPE_BYTES // 2,
+                                  inter_bw=25e9)
+    assert tiny.n_stripes == 1
+    # exactly 2 floors' worth may stripe at most 2-ways
+    two = transport.plan_stripes(inv, nbytes=2 * transport.MIN_STRIPE_BYTES,
+                                 inter_bw=25e9)
+    assert two.n_stripes <= 2
+
+
+def test_plan_stripes_exact_clamps():
+    inv = _v5e_inv()
+    p = transport.plan_stripes(inv, nbytes=8 * MB, inter_bw=25e9,
+                               max_stripes=16, exact=True)
+    assert p.n_stripes == 4                           # healthy-link cap
+    inv.mark_down(3)
+    p = transport.plan_stripes(inv, nbytes=8 * MB, inter_bw=25e9,
+                               max_stripes=16, exact=True)
+    assert p.n_stripes == 3
+    assert 3 not in p.link_ids
+
+
+def test_plan_stripes_monotone_in_healthy_links():
+    """More healthy links never models slower (the planner may always keep
+    the smaller link set)."""
+    times = []
+    for n_down in range(TPU_V5E.local_links):
+        inv = _v5e_inv()
+        for i in range(n_down):
+            inv.mark_down(i)
+        p = transport.plan_stripes(inv, nbytes=32 * MB, inter_bw=25e9)
+        times.append(p.wire_time(32 * MB))
+    # times[i] has (4 - i) healthy links: fewer links -> never faster
+    assert all(t0 <= t1 + 1e-15 for t0, t1 in zip(times, times[1:]))
+
+
+def test_plan_stripes_degraded_link_priced():
+    inv = _v5e_inv()
+    healthy = transport.plan_stripes(inv, nbytes=32 * MB, inter_bw=np.inf,
+                                     max_stripes=4, exact=True)
+    inv.mark_degraded(0, 0.25)
+    degraded = transport.plan_stripes(inv, nbytes=32 * MB, inter_bw=np.inf,
+                                      max_stripes=4, exact=True)
+    assert degraded.wire_time(32 * MB) > healthy.wire_time(32 * MB)
+    # the degraded link sorts last in the deterministic order
+    assert degraded.link_ids[-1] == 0
+
+
+def test_plan_stripes_no_healthy_links_raises():
+    inv = transport.LinkInventory.from_chip(V100_PCIE)
+    inv.mark_down(0)
+    with pytest.raises(RuntimeError):
+        transport.plan_stripes(inv, nbytes=MB)
+
+
+# ---------------------------------------------------------------------------
+# flow.py: lane mapping + priced failover
+# ---------------------------------------------------------------------------
+
+def test_flow_lane_layout():
+    fs = transport.FlowScheduler(_v5e_inv(), inter_bw=25e9)
+    plan = fs.plan(8 * MB, max_stripes=4, exact=True)
+    lanes = fs.lanes(plan)
+    assert len(lanes) == (transport.N_PARITIES * transport.N_STREAMS *
+                          plan.n_stripes)
+    # lane -> semaphore index is a bijection in kernel layout order
+    idxs = [l.sem_index(plan.n_stripes) for l in lanes]
+    assert idxs == list(range(len(lanes)))
+    # every stripe rides the link the plan assigned it
+    for lane in lanes:
+        assert lane.link == plan.link_ids[lane.stripe]
+
+
+def test_flow_streams_match_kernel_buffers():
+    """Cross-layer contract: the flow scheduler's lane layout and the DMA
+    kernel's double-buffer depth describe the same schedule."""
+    from repro.kernels import ring_dma
+    assert transport.N_STREAMS == ring_dma.NUM_BUFFERS == sim.DMA_STREAMS
+
+
+def test_failover_restripes_and_prices():
+    fs = transport.FlowScheduler(_v5e_inv(), inter_bw=25e9)
+    plan = fs.plan(32 * MB)
+    assert plan.n_stripes > 1
+    ev = fs.failover(plan, plan.link_ids[0], 32 * MB)
+    assert ev.new_plan.n_stripes == plan.n_stripes - 1
+    assert plan.link_ids[0] not in ev.new_plan.link_ids
+    assert ev.new_time_s >= ev.old_time_s             # priced, not dropped
+    assert ev.slowdown >= 1.0
+    assert fs.events == [ev]
+    # last link dies too -> the failure surfaces, never a silent zero-path
+    for link in list(ev.new_plan.link_ids):
+        fs.inventory.mark_down(link)
+    with pytest.raises(RuntimeError):
+        fs.plan(32 * MB)
+
+
+# ---------------------------------------------------------------------------
+# topology: inventory-backed endpoint bandwidth
+# ---------------------------------------------------------------------------
+
+def test_cluster_effective_link_bw_matches_static_when_healthy():
+    c = tpu_mixed_fleet(2, 2, 8)
+    for p in c.pods:
+        assert c.effective_link_bw(p) == pytest.approx(
+            p.chip.local_link_bw * p.chip.local_links)
+    assert c.slowest_endpoint_bw() == pytest.approx(min(
+        min(p.chip.local_link_bw * p.chip.local_links for p in c.pods),
+        c.inter_pod_bw))
+
+
+def test_cluster_endpoint_narrows_with_link_health():
+    c = tpu_mixed_fleet(2, 2, 8)
+    c.inventory(c.pods[0]).mark_down(0)
+    assert c.effective_link_bw(c.pods[0]) == pytest.approx(
+        3 * TPU_V5E.local_link_bw)
+    # kill enough links to drop the endpoint below the fabric bound
+    c.inventory(c.pods[0]).mark_down(1)
+    c.inventory(c.pods[0]).mark_down(2)
+    c.inventory(c.pods[0]).mark_degraded(3, 0.2)      # 10 GB/s < 25 GB/s
+    assert c.slowest_endpoint_bw() == pytest.approx(0.2 * TPU_V5E.local_link_bw)
+    # inventories are cached per cluster: same object, same health
+    assert c.inventory(c.pods[0]) is c.inventory("pod0")
+
+
+# ---------------------------------------------------------------------------
+# simulator: per-link wire term
+# ---------------------------------------------------------------------------
+
+def test_sim_striping_never_slower_and_helps_multilink():
+    c = tpu_mixed_fleet(2, 2, 8)
+    t1 = sim.collective_time("all_reduce", 64 * MB, c, "pipelined",
+                             backend="pallas", n_stripes=1)
+    t4 = sim.collective_time("all_reduce", 64 * MB, c, "pipelined",
+                             backend="pallas", n_stripes=4)
+    ta = sim.collective_time("all_reduce", 64 * MB, c, "pipelined",
+                             backend="pallas", n_stripes="auto")
+    assert t4 < t1
+    assert ta <= t4 + 1e-15                           # auto at least as good
+
+
+def test_sim_striping_noop_on_single_link_and_xla():
+    p = paper_cluster(8, 8)
+    base = sim.collective_time("all_reduce", 64 * MB, p, "hier",
+                               backend="pallas")
+    assert sim.collective_time("all_reduce", 64 * MB, p, "hier",
+                               backend="pallas",
+                               n_stripes="auto") == pytest.approx(base)
+    c = tpu_mixed_fleet(2, 2, 8)
+    assert sim.collective_time("all_reduce", 64 * MB, c, "hier",
+                               backend="xla", n_stripes=4) == pytest.approx(
+        sim.collective_time("all_reduce", 64 * MB, c, "hier", backend="xla"))
+
+
+def test_sim_degraded_and_down_links_price_slower():
+    healthy = tpu_mixed_fleet(2, 2, 8)
+    t_h = sim.collective_time("all_reduce", 64 * MB, healthy, "pipelined",
+                              backend="pallas", n_stripes=4)
+    degraded = tpu_mixed_fleet(2, 2, 8)
+    degraded.inventory(degraded.pods[0]).mark_degraded(0, 0.2)
+    t_d = sim.collective_time("all_reduce", 64 * MB, degraded, "pipelined",
+                              backend="pallas", n_stripes=4)
+    down = tpu_mixed_fleet(2, 2, 8)
+    down.inventory(down.pods[0]).mark_down(0)
+    t_x = sim.collective_time("all_reduce", 64 * MB, down, "pipelined",
+                              backend="pallas", n_stripes=4)
+    assert t_d > t_h
+    assert t_x > t_h
+
+
+# ---------------------------------------------------------------------------
+# plan autotuner: the stripe dimension
+# ---------------------------------------------------------------------------
+
+def _mixed_request():
+    from repro import plan as plan_mod
+    from repro.configs import get_config
+    return plan_mod.plan_request(tpu_mixed_fleet(2, 2, 128),
+                                 get_config("smollm-135m"), 256, 4096,
+                                 data_axis=8)
+
+
+def test_plan_auto_selects_stripes_on_multilink():
+    """Acceptance: on the mixed fleet the winner stripes > 1 and its modeled
+    comm is never worse than the best stripes=1 candidate."""
+    from repro import plan as plan_mod
+    frontier = plan_mod.rank(_mixed_request())
+    best = frontier[0]
+    assert best.backend == "pallas" and best.n_stripes > 1
+    floor = min((t for t in frontier if t.n_stripes == 1),
+                key=lambda t: t.modeled_step_s)
+    assert best.modeled_step_s <= floor.modeled_step_s + 1e-12
+    assert best.modeled_comm_s <= floor.modeled_comm_s + 1e-12
+
+
+def test_plan_single_link_keeps_one_stripe():
+    from repro import plan as plan_mod
+    from repro.configs import get_config
+    req = plan_mod.plan_request(paper_cluster(8, 8),
+                                get_config("smollm-135m"), 256, 4096,
+                                data_axis=8)
+    assert plan_mod.autotune(req).n_stripes == 1
+
+
+def test_plan_stripe_dimension_deterministic_and_materializes():
+    from repro import plan as plan_mod
+    req = _mixed_request()
+    a, b = plan_mod.rank(req), plan_mod.rank(req)
+    assert [t.summary() for t in a] == [t.summary() for t in b]
+    best = a[0]
+    rc = best.run_config()
+    assert rc.n_stripes == best.n_stripes
+    assert best.hetccl_config().n_stripes == best.n_stripes
+    # xla candidates never carry a stripe count
+    assert all(t.n_stripes == 1 for t in a if t.backend == "xla")
+
+
+def test_plan_pinned_stripes_space():
+    from repro import plan as plan_mod
+    space = dataclasses.replace(plan_mod.DEFAULT_SPACE, stripe_counts=(2,))
+    frontier = plan_mod.rank(_mixed_request(), space)
+    assert {t.n_stripes for t in frontier if t.backend == "pallas"} == {2}
+
+
+def test_v4_islands_can_stripe_wider_than_v5e():
+    """The stripe plan sees per-chip link counts: a pure-v4 fleet (6 links)
+    supports k=6 while v5e caps at 4."""
+    c4 = ClusterSpec(tuple(PodSpec(f"p{i}", TPU_V4, 8) for i in range(4)))
+    c5 = ClusterSpec(tuple(PodSpec(f"p{i}", TPU_V5E, 8) for i in range(4)))
+    assert transport.plan_stripes(c4.inventory(c4.pods[0]), nbytes=64 * MB,
+                                  inter_bw=25e9).n_stripes == 6
+    assert transport.plan_stripes(c5.inventory(c5.pods[0]), nbytes=64 * MB,
+                                  inter_bw=25e9).n_stripes == 4

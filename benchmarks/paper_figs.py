@@ -11,7 +11,7 @@ from repro.core import simulator as sim
 from repro.core.balance import uniform_plan
 from repro.core.topology import (ClusterSpec, PodSpec, H100_NVLINK,
                                  MI300X_XGMI, V100_PCIE, W7800, paper_cluster,
-                                 tpu_multipod)
+                                 tpu_mixed_fleet, tpu_multipod)
 
 GB = 1 << 30
 
@@ -292,7 +292,61 @@ def striping_scaling():
     return rows
 
 
+def per_op_policy():
+    """Beyond-paper: per-op, size-classed policy table (repro.comm,
+    DESIGN.md §12) vs the PR-4 single-policy plan on the mixed fleet.
+
+    derived = speedup of the table over the best single-policy plan — the
+    train rows show the gradient path ties it by construction (the dominant
+    op's argmin IS the single winner), while the per-(op, size class) rows
+    show where the table genuinely diverges: small/medium payloads and the
+    non-gradient ops drop the stripes/channels the big reduce wants, and
+    each row is never slower than running the single plan's policy at that
+    payload (ratio >= 1).  Gradient-path rows are priced at the actual
+    bucket payload the table was tuned for, the rest at the class
+    representative — the same sizes ``plan.policy_table_for`` searched.
+    """
+    from repro import plan as plan_mod
+    from repro.comm.policy import size_class
+
+    req = plan_mod.plan_request(tpu_mixed_fleet(2, 2, 128),
+                                get_config("smollm-135m"),
+                                global_batch=256, seq_len=4096, data_axis=8)
+    frontier = plan_mod.rank(req)
+    single = next(t for t in frontier if t.policies is None)
+    tp = plan_mod.autotune_policies(req)
+    table = tp.policy_table()
+    rows = [("per_op_policy/train/step", tp.modeled_step_s * 1e6,
+             single.modeled_step_s / tp.modeled_step_s),
+            ("per_op_policy/train/comm", tp.modeled_comm_s * 1e6,
+             single.modeled_comm_s / tp.modeled_comm_s),
+            ("per_op_policy/distinct_policies", 0.0,
+             float(len(table.distinct_policies())))]
+    comm_cluster = req.comm_cluster()
+    w = plan_mod.workload_for(req.model, req.seq_len, tp.plan.micro_batch,
+                              tp.zero_stage, req.tensor_parallel())
+    actual = plan_mod.grad_payload_bytes(w.param_bytes, tp.bucket_bytes,
+                                         tp.zero_stage, req.model.n_layers)
+    for (op, cls), pol in table.rows:
+        nbytes = plan_mod.CLASS_REP_BYTES[cls]
+        if op in ("all_reduce", "all_gather", "reduce_scatter") and \
+                size_class(actual) == cls:
+            nbytes = actual
+        t_tab = sim.policy_collective_time(op, nbytes, comm_cluster, table)
+        # the baseline is what the single-policy runtime actually executes:
+        # ops outside RING_BACKED_OPS drop backend/stripes at dispatch
+        # (their registrations declare neither), so price them as xla
+        sb, sk = ((single.backend, single.n_stripes)
+                  if op in plan_mod.RING_BACKED_OPS else ("xla", 1))
+        t_single = sim.collective_time(op, nbytes, comm_cluster, single.mode,
+                                       n_channels=single.n_channels,
+                                       backend=sb, n_stripes=sk)
+        rows.append((f"per_op_policy/{op}/{cls}/{pol.label()}",
+                     t_tab * 1e6, t_single / t_tab))
+    return rows
+
+
 ALL = (fig7_collectives, fig8_p2p, fig9_training_speedup,
        fig11_other_collectives, fig13_14_mpi, fig15_highend,
        fig16_rdma_ablation, table4_balancing, scale_1000_chips,
-       pipelined_vs_hier, pallas_vs_xla, striping_scaling)
+       pipelined_vs_hier, pallas_vs_xla, striping_scaling, per_op_policy)

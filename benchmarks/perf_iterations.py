@@ -92,6 +92,14 @@ def main():
                          "(transport layer, DESIGN.md §11).  auto = "
                          "transport.plan_stripes over the mesh's modeled "
                          "cluster; an integer pins it; xla runs resolve to 1")
+    ap.add_argument("--policy", default="legacy",
+                    choices=["auto", "flat", "legacy"],
+                    help="collective policy source (repro.comm, DESIGN.md "
+                         "§12): auto = per-op, size-classed PolicyTable "
+                         "priced on the mesh's modeled topology (overrides "
+                         "--mode/--backend/--stripes); legacy = the "
+                         "single-policy facade of those flags; flat = flat "
+                         "everywhere")
     ap.add_argument("--n-channels", type=int, default=4,
                     help="pipeline channels of --mode pipelined")
     ap.add_argument("--pipeline-chunk-bytes", type=int, default=None)
@@ -149,15 +157,28 @@ def main():
     mb = max(1, min(per_dev, args.micro_tokens // shape.seq_len))
     n_micro = per_dev // mb
     plan = uniform_plan(n_pods, n_micro * n_pods, mb)
-    from repro.launch.mesh import resolve_stripes
+    from repro.launch.mesh import cluster_for_mesh, resolve_stripes
     n_stripes = resolve_stripes(args.stripes, args.backend, mesh)
     rc = RunConfig(zero_stage=args.zero,
-                   collective_mode=args.mode or ("hier" if multi else "flat"),
+                   collective_mode="flat" if args.policy == "flat"
+                   else (args.mode or ("hier" if multi else "flat")),
                    backend=args.backend,
                    n_channels=args.n_channels,
                    n_stripes=n_stripes,
                    pipeline_chunk_bytes=args.pipeline_chunk_bytes,
                    cross_dtype=args.cross_dtype)
+    if args.policy == "auto":
+        # per-op, size-classed policy table on the mesh's modeled topology
+        # (repro.comm, DESIGN.md §12); an explicit --stripes pin narrows
+        # the table search like --plan auto narrows its space
+        from repro import plan as plan_mod
+        space = plan_mod.DEFAULT_SPACE
+        if args.stripes != "auto":
+            space = dataclasses.replace(space,
+                                        stripe_counts=(int(args.stripes),))
+        rc = dataclasses.replace(rc, policies=plan_mod.policy_table_for(
+            cluster_for_mesh(mesh), space, bucket_bytes=rc.bucket_bytes,
+            zero_stage=args.zero))
     batch_sds, extra = _train_batch_sds(cfg, shape, mesh, plan)
     prog = make_train_program(model, mesh, rc, plan, extra_batch_specs=extra)
     state_sds = jax.eval_shape(prog.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -176,6 +197,8 @@ def main():
            "mesh": args.mesh, "zero": args.zero, "n_micro": n_micro, "mb": mb,
            "mode": rc.collective_mode, "backend": rc.backend,
            "n_channels": args.n_channels, "n_stripes": rc.n_stripes,
+           "policy": args.policy,
+           "policies": rc.policies.summary() if rc.policies else None,
            "cross_dtype": args.cross_dtype,
            "seq_shard_acts": args.seq_shard_acts,
            "cross_pod_GB": stats.cross_pod_bytes / 1e9,

@@ -1,0 +1,34 @@
+"""``repro.comm`` — first-class communicators with per-op, size-classed
+collective policies (DESIGN.md §12).
+
+Two halves:
+
+* :mod:`repro.comm.policy` (imported eagerly, pure stdlib): ``CommPolicy``,
+  ``PolicyTable``, ``size_class`` — usable from the numpy-only planner and a
+  login node;
+* :mod:`repro.comm.communicator` (loaded lazily — it pulls the jax-side
+  TACC registry): ``Communicator``, ``create``, ``from_config``.
+
+    from repro import comm
+    c = comm.create(("data",), "pod", policies={...})   # per-group
+    with hetccl.use(c): ...                             # per-op dispatch
+"""
+from repro.comm.policy import (BACKENDS, CommPolicy,           # noqa: F401
+                               DEFAULT_SIZE_CLASS_BOUNDS, MODES,
+                               PolicyTable, SIZE_CLASSES, WILDCARD,
+                               size_class)
+
+_LAZY = ("Communicator", "create", "from_config", "variant_for")
+
+__all__ = [
+    "BACKENDS", "CommPolicy", "Communicator", "DEFAULT_SIZE_CLASS_BOUNDS",
+    "MODES", "PolicyTable", "SIZE_CLASSES", "WILDCARD", "create",
+    "from_config", "size_class", "variant_for",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.comm import communicator as _c
+        return getattr(_c, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,202 @@
+"""First-class communicators: a per-group object owning the policy table
+(DESIGN.md §12).
+
+The paper's API is communicator-scoped — ``ncclCommInitRank`` per group,
+every collective issued *on* a comm — and HetCCL tunes each (op, payload)
+against that group.  :class:`Communicator` is the JAX-layer analogue:
+created once per mesh/axes group (:func:`create`), it owns
+
+* the group identity (``local_axes``, ``pod_axis`` — the DP axes the
+  collectives reduce over, pod-major like everything else, DESIGN.md §3),
+* a **resolved** :class:`~repro.comm.policy.PolicyTable` mapping
+  ``(op, size_class) -> CommPolicy`` (mode "auto" resolved against the pod
+  axis, stripes collapsed for the xla backend and clamped to the bound
+  link inventory's healthy links),
+* the transport binding: the link inventory is bound **at creation**, not
+  per call — a communicator on a degraded island stripes over the links
+  that island actually has (DESIGN.md §11).
+
+``repro.core.hetccl`` keeps an install stack of communicators; its
+``HetCCLConfig`` is now a thin facade that compiles into a one-row table
+(:func:`from_config`), so every existing call site keeps working while new
+code can hand each op class its own schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.comm.policy import (CommPolicy, DEFAULT_SIZE_CLASS_BOUNDS,
+                               PolicyTable)
+from repro.core import tacc
+from repro.transport.stripe import MAX_STRIPES
+
+DEFAULT_BUCKET_BYTES = 64 * 1024 * 1024
+
+
+def variant_for(op: str, mode: str) -> str:
+    """Per-op TACC variant with graceful degradation: ops without a
+    ``pipelined`` registration (broadcast, reduce, all_to_all) fall back to
+    ``hier``, and ops without that to ``flat``."""
+    avail = tacc.variants(op)
+    if mode in avail:
+        return mode
+    if mode == "pipelined" and "hier" in avail:
+        return "hier"
+    return "flat"
+
+
+def _resolve_policy(p: CommPolicy, pod_axis: str | None,
+                    stripe_cap: int) -> CommPolicy:
+    """Compile one table row: "auto" mode against the group's pod axis,
+    stripes collapsed for xla (one ppermute is one logical transfer) and
+    clamped to the bound inventory's healthy links."""
+    mode = p.mode
+    if mode == "auto":
+        mode = "hier" if pod_axis else "flat"
+    stripes = 1 if p.backend != "pallas" else \
+        max(min(int(p.n_stripes), stripe_cap), 1)
+    return CommPolicy(mode=mode, backend=p.backend,
+                      n_channels=max(int(p.n_channels), 1),
+                      n_stripes=stripes, cross_dtype=p.cross_dtype)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Communicator:
+    """A per-group collective context: axes + resolved policy table.
+
+    Accepted everywhere an ``HetCCLConfig`` used to be (the ``cfg``
+    argument of every ``hetccl`` op, ``hetccl.install``/``use``, the
+    optimizer steps) — ``dataclasses.replace`` works on it like on the old
+    config, e.g. ZeRO-3's pod-only projection ``replace(c, local_axes=())``.
+    A communicator compares equal to a legacy ``HetCCLConfig`` whose facade
+    compile produces the same one-row table (the facade contract).
+    """
+
+    local_axes: tuple[str, ...] = ("data",)
+    pod_axis: str | None = "pod"
+    table: PolicyTable = PolicyTable()
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    pipeline_chunk_bytes: int | None = None
+    # transport binding (DESIGN.md §11); identity-only: health is mutable
+    # state, not part of the communicator's value
+    inventory: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
+
+    def _value(self):
+        return (self.local_axes, self.pod_axis, self.table,
+                self.bucket_bytes, self.pipeline_chunk_bytes)
+
+    def __eq__(self, other):
+        if isinstance(other, Communicator):
+            return self._value() == other._value()
+        if hasattr(other, "to_policy"):            # legacy config facade
+            return self._value() == from_config(other)._value()
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(self._value())
+
+    def dp_axes(self) -> tuple[str, ...]:
+        """Pod-major DP axes (rank = pod·D + data, DESIGN.md §3)."""
+        return ((self.pod_axis,) if self.pod_axis else ()) + self.local_axes
+
+    def policy(self, op: str, nbytes: float) -> CommPolicy:
+        """The resolved policy for one concrete payload of ``op``."""
+        return self.table.resolve(op, nbytes)
+
+    def class_policy(self, op: str, cls: str) -> CommPolicy:
+        """The resolved policy for a named size class of ``op``."""
+        return self.table.lookup(op, cls)
+
+    def variant_for(self, op: str, policy: CommPolicy | None = None) -> str:
+        """TACC variant ``op`` dispatches to under ``policy`` (graceful
+        pipelined->hier->flat degradation)."""
+        policy = policy or self.table.default
+        return variant_for(op, policy.mode)
+
+    def default_variant(self, op: str) -> str:
+        """Registry-default variant installed for raw ``tacc.dispatch``
+        callers: the op's large-class policy (the bandwidth-dominant
+        regime)."""
+        return self.variant_for(op, self.class_policy(op, "large"))
+
+    def resolved_mode(self) -> str:
+        """Back-compat display helper matching ``HetCCLConfig``'s method:
+        the mode of the large-class all_reduce policy (the
+        bandwidth-dominant regime).  A per-op table has no single mode —
+        prefer :meth:`policy`/:meth:`class_policy` in new code."""
+        return self.class_policy("all_reduce", "large").mode
+
+
+def create(local_axes: tuple[str, ...] = ("data",),
+           pod_axis: str | None = "pod", *,
+           table: PolicyTable | None = None,
+           policies=None, default: CommPolicy | None = None,
+           topology_slice=None, link_inventory=None,
+           bounds: tuple[int, int] = DEFAULT_SIZE_CLASS_BOUNDS,
+           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+           pipeline_chunk_bytes: int | None = None) -> Communicator:
+    """Create a communicator for one group (the ``ncclCommInitRank``
+    analogue, DESIGN.md §12).
+
+    Args:
+        local_axes: intra-island mesh axes carrying data parallelism.
+        pod_axis: the island-boundary axis (None on single-island meshes).
+        table: a prebuilt :class:`PolicyTable`; or build one from
+        policies: ``{(op, size_class) | op: CommPolicy}`` rows, with
+        default: the fallback policy (flat/xla when omitted).
+        topology_slice: optional ``topology.ClusterSpec`` this group runs
+            on; binds the slowest island's link inventory (the endpoint
+            that bounds every cross-island pair, paper §5.2).
+        link_inventory: bind an explicit ``transport.LinkInventory``
+            instead; stripes are clamped to its *healthy* links at
+            creation, not per call (DESIGN.md §11).
+        bounds: size-class boundaries of a table built here.
+        bucket_bytes: gradient fusion bucket size (group-scoped knob).
+        pipeline_chunk_bytes: alternative channel sizing for pipelined rows.
+    Returns:
+        A :class:`Communicator` with every table row resolved.
+    Example::
+
+        c = comm.create(("data",), "pod", policies={
+                ("all_reduce", "large"): CommPolicy("pipelined", "pallas",
+                                                    n_channels=4, n_stripes=4),
+                "broadcast": CommPolicy("flat")})
+        with hetccl.use(c):
+            ...    # each op now routes by (op, payload size class)
+    """
+    if table is None:
+        table = PolicyTable.of(policies or {}, default=default, bounds=bounds)
+    elif policies is not None or default is not None:
+        raise ValueError("pass either table= or policies=/default=, not both")
+    if link_inventory is None and topology_slice is not None:
+        pods = list(getattr(topology_slice, "pods", ()) or ())
+        if pods:
+            slow = min(pods,
+                       key=lambda p: topology_slice.effective_link_bw(p))
+            link_inventory = topology_slice.inventory(slow)
+    cap = MAX_STRIPES
+    if link_inventory is not None:
+        cap = min(cap, max(len(link_inventory.healthy_links()), 1))
+    local_axes = tuple(local_axes)
+    resolved = PolicyTable(
+        rows=tuple((k, _resolve_policy(p, pod_axis, cap))
+                   for k, p in table.rows),
+        default=_resolve_policy(table.default, pod_axis, cap),
+        bounds=table.bounds)
+    return Communicator(local_axes=local_axes, pod_axis=pod_axis,
+                        table=resolved, bucket_bytes=int(bucket_bytes),
+                        pipeline_chunk_bytes=pipeline_chunk_bytes,
+                        inventory=link_inventory)
+
+
+def from_config(cfg) -> Communicator:
+    """Compile a legacy single-policy ``HetCCLConfig`` into a communicator
+    with a one-row table — the facade contract (DESIGN.md §12): the result
+    is bit-for-bit equal to ``create(..., table=PolicyTable.single(policy))``
+    and dispatches identically."""
+    return create(tuple(cfg.local_axes), cfg.pod_axis,
+                  table=PolicyTable.single(cfg.to_policy()),
+                  bucket_bytes=cfg.bucket_bytes,
+                  pipeline_chunk_bytes=cfg.pipeline_chunk_bytes)

@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.comm.policy import PolicyTable
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -160,13 +162,19 @@ class RunConfig:
     ``n_channels``, ``n_stripes``, ``bucket_bytes``, ``n_micro``) can be set
     by hand or materialized jointly by the autotuner — ``repro.plan
     .TrainPlan.run_config()`` (DESIGN.md §9), the ``--plan auto`` path of
-    the launchers.
+    the launchers.  When ``policies`` carries a per-op
+    :class:`~repro.comm.policy.PolicyTable` (DESIGN.md §12), the trainer
+    builds its communicator from that table and the single-policy fields
+    above serve only as the display/facade fallback.
     """
 
     zero_stage: int = 1              # 1 or 3 (the paper evaluates both)
     collective_mode: str = "auto"    # flat | hier | pipelined | auto (HetCCL)
     backend: str = "xla"             # collective ring backend: xla | pallas
                                      # (DMA rings, DESIGN.md §10)
+    policies: PolicyTable | None = None   # per-op, size-classed policy table
+                                     # (repro.comm, DESIGN.md §12); None ->
+                                     # the single-policy facade above
     n_channels: int = 4              # pipeline channels of "pipelined" mode
     n_stripes: int = 1               # multi-NIC stripes of the DMA rings
                                      # (transport layer, DESIGN.md §11;

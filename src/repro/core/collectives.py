@@ -327,11 +327,28 @@ def ring_broadcast(x: jax.Array, axis: str, root: int = 0) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # Flat (single-stage, native XLA) collectives — the homogeneous baseline.
+#
+# Each registration declares exactly the CommPolicy fields it consumes
+# (``policy_fields=``, DESIGN.md §12); tacc.dispatch maps only those, so no
+# signature needs a ``**_`` catch-all to swallow irrelevant knobs.
 # ---------------------------------------------------------------------------
 
-@tacc.register("all_reduce", "flat", default=True)
+def _flat_rank_index(all_axes: tuple[str, ...]) -> jax.Array:
+    """Pod-major flat rank of this device over ``all_axes`` (rank =
+    pod·D + data, DESIGN.md §3) — the root-matching index of the
+    rooted collectives (broadcast / reduce)."""
+    flat_idx = jnp.zeros((), jnp.int32)
+    stride = 1
+    for a in reversed(all_axes):
+        flat_idx = flat_idx + lax.axis_index(a) * stride
+        stride *= lax.axis_size(a)
+    return flat_idx
+
+
+@tacc.register("all_reduce", "flat", default=True,
+               policy_fields=("backend", "n_stripes"))
 def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
-                    backend: str = "xla", n_stripes: int = 1, **_):
+                    backend: str = "xla", n_stripes: int = 1):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas":
         # the naive single-stage ring, but with the DMA kernels: one explicit
@@ -344,10 +361,11 @@ def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
     return lax.psum(x, all_axes)
 
 
-@tacc.register("all_gather", "flat", default=True)
+@tacc.register("all_gather", "flat", default=True,
+               policy_fields=("backend", "n_stripes"))
 def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
                     tiled: bool = True, backend: str = "xla",
-                    n_stripes: int = 1, **_):
+                    n_stripes: int = 1):
     gather_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas" and tiled:
         from repro.kernels import ring_dma
@@ -361,10 +379,11 @@ def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
     return out
 
 
-@tacc.register("reduce_scatter", "flat", default=True)
+@tacc.register("reduce_scatter", "flat", default=True,
+               policy_fields=("backend", "n_stripes"))
 def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *,
                         dim: int = 0, backend: str = "xla",
-                        n_stripes: int = 1, **_):
+                        n_stripes: int = 1):
     all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
     if backend == "pallas":
         from repro.kernels import ring_dma
@@ -380,33 +399,25 @@ def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *,
 
 @tacc.register("all_to_all", "flat", default=True)
 def flat_all_to_all(x, axes: Axis, pod_axis: str | None = None, *,
-                    split_axis: int = 0, concat_axis: int = 0, **_):
+                    split_axis: int = 0, concat_axis: int = 0):
     all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
     return lax.all_to_all(x, all_axes, split_axis=split_axis,
                           concat_axis=concat_axis, tiled=True)
 
 
 @tacc.register("broadcast", "flat", default=True)
-def flat_broadcast(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0, **_):
+def flat_broadcast(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     # emulate: zero non-root contributions, then sum.
-    flat_idx = jnp.zeros((), jnp.int32)
-    stride = 1
-    for a in reversed(all_axes):
-        flat_idx = flat_idx + lax.axis_index(a) * stride
-        stride *= lax.axis_size(a)
+    flat_idx = _flat_rank_index(all_axes)
     return lax.psum(jnp.where(flat_idx == root, x, jnp.zeros_like(x)), all_axes)
 
 
 @tacc.register("reduce", "flat", default=True)
-def flat_reduce(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0, **_):
+def flat_reduce(x, axes: Axis, pod_axis: str | None = None, *, root: int = 0):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     s = lax.psum(x, all_axes)
-    flat_idx = jnp.zeros((), jnp.int32)
-    stride = 1
-    for a in reversed(all_axes):
-        flat_idx = flat_idx + lax.axis_index(a) * stride
-        stride *= lax.axis_size(a)
+    flat_idx = _flat_rank_index(all_axes)
     return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
 
 
@@ -428,10 +439,11 @@ def _flatten_pad(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     return flat, pad
 
 
-@tacc.register("all_reduce", "hier")
+@tacc.register("all_reduce", "hier",
+               policy_fields=("backend", "n_stripes", "cross_dtype"))
 def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                     cross_dtype=None, backend: str = "xla",
-                    n_stripes: int = 1, **_):
+                    n_stripes: int = 1):
     """AllReduce = local ReduceScatter -> cross-pod ring AllReduce -> local AllGather.
 
     ``cross_dtype`` optionally compresses the cross-island stage (the slow
@@ -471,10 +483,11 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     return flat.reshape(shape)
 
 
-@tacc.register("all_gather", "hier")
+@tacc.register("all_gather", "hier",
+               policy_fields=("backend", "n_stripes"))
 def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0,
                     tiled: bool = True, backend: str = "xla",
-                    n_stripes: int = 1, **_):
+                    n_stripes: int = 1):
     """Local native gather, then cross-pod ring gather (pod-major order)."""
     out = flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
     if pod_axis:
@@ -487,10 +500,11 @@ def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0
     return out
 
 
-@tacc.register("reduce_scatter", "hier")
+@tacc.register("reduce_scatter", "hier",
+               policy_fields=("backend", "n_stripes"))
 def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                         dim: int = 0, backend: str = "xla",
-                        n_stripes: int = 1, **_):
+                        n_stripes: int = 1):
     """Cross-pod ring reduce-scatter first (P2P), then local native stage."""
     out = x
     if pod_axis:
@@ -505,7 +519,7 @@ def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 @tacc.register("all_to_all", "hier")
 def hier_all_to_all(x, axes: Axis, pod_axis: str | None = "pod", *,
-                    split_axis: int = 0, concat_axis: int = 0, **_):
+                    split_axis: int = 0, concat_axis: int = 0):
     """Two-stage A2A: cross-pod superblocks via P2P ring, then local native A2A.
 
     Matches flat all_to_all over (pod, *axes) with pod-major rank order for
@@ -531,24 +545,21 @@ def hier_all_to_all(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 
 @tacc.register("broadcast", "hier")
-def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0, **_):
+def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0):
     out = flat_broadcast(x, axes, None, root=root)   # local stage from local root
     if pod_axis:
         out = ring_broadcast(out, pod_axis, root=0)
     return out
 
 
-@tacc.register("reduce", "hier")
+@tacc.register("reduce", "hier",
+               policy_fields=("backend", "n_stripes"))
 def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0,
-                backend: str = "xla", n_stripes: int = 1, **_):
+                backend: str = "xla", n_stripes: int = 1):
     s = hier_all_reduce(x, axes, pod_axis, backend=backend,
                         n_stripes=n_stripes)
-    flat_idx = jnp.zeros((), jnp.int32)
-    stride = 1
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
-    for a in reversed(all_axes):
-        flat_idx = flat_idx + lax.axis_index(a) * stride
-        stride *= lax.axis_size(a)
+    flat_idx = _flat_rank_index(all_axes)
     return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
 
 
@@ -608,12 +619,14 @@ def resolve_channels(nbytes: int, n_channels: int,
     return max(1, min(c, limit, MAX_CHANNELS, tile_limit))
 
 
-@tacc.register("all_reduce", "pipelined")
+@tacc.register("all_reduce", "pipelined",
+               policy_fields=("backend", "n_stripes", "cross_dtype",
+                              "n_channels"))
 def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                          cross_dtype=None, n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
                          bidir: bool = True, backend: str = "xla",
-                         n_stripes: int = 1, **_):
+                         n_stripes: int = 1):
     """AllReduce as a C-channel pipeline of (local RS -> cross ring -> local AG).
 
     Equals :func:`hier_all_reduce` numerically; chunk k's cross-pod stage is
@@ -663,13 +676,14 @@ def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     return flat.reshape(shape)
 
 
-@tacc.register("all_gather", "pipelined")
+@tacc.register("all_gather", "pipelined",
+               policy_fields=("backend", "n_stripes", "n_channels"))
 def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
                          dim: int = 0, tiled: bool = True,
                          n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
                          bidir: bool = True, backend: str = "xla",
-                         n_stripes: int = 1, **_):
+                         n_stripes: int = 1):
     """Two-stage gather, pipelined: chunk k's cross-pod ring gather overlaps
     chunk k+1's local native gather.  Pod-major result order (same as hier)."""
     if not pod_axis:
@@ -705,12 +719,13 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
     return jnp.moveaxis(out, 0, dim) if dim != 0 else out
 
 
-@tacc.register("reduce_scatter", "pipelined")
+@tacc.register("reduce_scatter", "pipelined",
+               policy_fields=("backend", "n_stripes", "n_channels"))
 def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                              dim: int = 0, n_channels: int = 4,
                              pipeline_chunk_bytes: int | None = None,
                              bidir: bool = True, backend: str = "xla",
-                             n_stripes: int = 1, **_):
+                             n_stripes: int = 1):
     """Two-stage reduce-scatter, pipelined: chunk k's local native stage
     overlaps chunk k+1's cross-pod ring."""
     if not pod_axis:
@@ -765,16 +780,18 @@ def _fsdp_ag_bwd(axis, dim, _, g):
     # Gradient reduce-scatter with the narrow wire (g.dtype) and f32
     # accumulation — the collective_reduce kernel semantics.  Also dodges an
     # XLA:CPU miscompile of bf16 psum_scatter inside partially-manual
-    # shard_map (see DESIGN.md §8).  Routed through the installed backend:
-    # under backend="pallas" the DMA ring keeps the same narrow-wire / f32
+    # shard_map (see DESIGN.md §8).  Routed through the active communicator's
+    # reduce_scatter policy for this payload (DESIGN.md §12): under
+    # backend="pallas" the DMA ring keeps the same narrow-wire / f32
     # contract inside the kernel (DESIGN.md §10).
     from repro.core import hetccl   # lazy: hetccl imports this module
     gm = jnp.moveaxis(g, dim, 0) if dim else g
-    cfg = hetccl.current()
-    if cfg.backend == "pallas":
+    pol = hetccl.current().policy("reduce_scatter",
+                                  g.size * jnp.dtype(g.dtype).itemsize)
+    if pol.backend == "pallas":
         from repro.kernels import ring_dma
         out = ring_dma.ring_reduce_scatter(gm, axis, wire_dtype=g.dtype,
-                                           n_stripes=cfg.resolved_stripes())
+                                           n_stripes=pol.n_stripes)
     else:
         out = ring_reduce_scatter_mixed(gm, axis)
     out = jnp.moveaxis(out, 0, dim) if dim else out

@@ -1,11 +1,18 @@
 """HetCCL public API — the drop-in collective layer (paper §4, Fig 2b).
 
-Applications (our trainer, serving engine, examples) call these functions; the
-TACC registry resolves them to the *flat* (single-stage native), *hier*
-(vendor-local + cross-pod P2P), or *pipelined* (multi-channel hier with the
-local stage overlapping the cross-island ring) implementation at **runtime**.
-Swapping the backend under an unmodified application — the paper's LD_PRELOAD
-trick — is :func:`install`; :func:`uninstall` / :func:`use` restore it.
+Applications (our trainer, serving engine, examples) call these functions;
+dispatch is **communicator-scoped** (DESIGN.md §12): the active
+:class:`repro.comm.Communicator` resolves each call's payload to a
+:class:`~repro.comm.policy.CommPolicy` from its per-op, size-classed
+``PolicyTable``, and the TACC registry routes to the *flat* (single-stage
+native), *hier* (vendor-local + cross-pod P2P), or *pipelined*
+(multi-channel hier with the local stage overlapping the cross-island ring)
+implementation at **runtime**.  Swapping the backend under an unmodified
+application — the paper's LD_PRELOAD trick — is :func:`install`;
+:func:`uninstall` / :func:`use` restore it.  :class:`HetCCLConfig` remains
+as the legacy single-policy facade: it compiles into a one-row table
+(:meth:`HetCCLConfig.to_table`) and is accepted everywhere a communicator
+is.
 
 Also provides :func:`tree_all_reduce`, a bucketed gradient all-reduce
 (flatten leaves -> fixed-size fusion buckets -> pipelined reduce-scatter ->
@@ -24,6 +31,8 @@ import jax.numpy as jnp
 
 from repro.core import tacc
 from repro.core import collectives as _coll  # noqa: F401  (registers impls)
+from repro.comm.communicator import Communicator, from_config, variant_for
+from repro.comm.policy import CommPolicy, PolicyTable
 
 _SWAPPABLE_OPS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
                   "broadcast", "reduce")
@@ -108,41 +117,68 @@ class HetCCLConfig:
         all_gather (pod blocks of local blocks) and P(('pod','data'))."""
         return ((self.pod_axis,) if self.pod_axis else ()) + self.local_axes
 
+    def to_policy(self) -> CommPolicy:
+        """Compile this config's knobs into one resolved
+        :class:`~repro.comm.policy.CommPolicy` (validates eagerly)."""
+        return CommPolicy(mode=self.resolved_mode(),
+                          backend=self.resolved_backend(),
+                          n_channels=max(int(self.n_channels), 1),
+                          n_stripes=self.resolved_stripes(),
+                          cross_dtype=self.cross_dtype)
 
-_CURRENT = HetCCLConfig(pod_axis=None)
-# (previous config, TACC defaults captured before each install) — LIFO so
-# nested installs unwind correctly.
-_INSTALL_STACK: list[tuple[HetCCLConfig, dict[str, str]]] = []
+    def to_table(self) -> PolicyTable:
+        """The facade contract (DESIGN.md §12): a legacy single-policy
+        config IS a one-row policy table — every (op, size class) resolves
+        to :meth:`to_policy`, bit-for-bit."""
+        return PolicyTable.single(self.to_policy())
+
+    def communicator(self) -> Communicator:
+        """Compile into a :class:`repro.comm.Communicator` (what
+        :func:`install`/:func:`use` do with a config internally)."""
+        return from_config(self)
+
+
+_CURRENT = from_config(HetCCLConfig(pod_axis=None))
+# (previous communicator, TACC defaults captured before each install) — LIFO
+# so nested installs unwind correctly.
+_INSTALL_STACK: list[tuple[Communicator, dict[str, str]]] = []
+
+
+def _as_communicator(cfg) -> Communicator:
+    """Normalize a ``cfg`` argument: None -> the active communicator,
+    HetCCLConfig -> its one-row-table facade compile, Communicator -> as-is."""
+    if cfg is None:
+        return _CURRENT
+    if isinstance(cfg, Communicator):
+        return cfg
+    return from_config(cfg)
 
 
 def _variant_for(op: str, mode: str) -> str:
-    """Per-op variant with graceful degradation: ops without a ``pipelined``
-    registration (broadcast, reduce, all_to_all) fall back to ``hier``."""
-    avail = tacc.variants(op)
-    if mode in avail:
-        return mode
-    if mode == "pipelined" and "hier" in avail:
-        return "hier"
-    return "flat"
+    """Back-compat alias of :func:`repro.comm.communicator.variant_for`."""
+    return variant_for(op, mode)
 
 
-def install(config: HetCCLConfig) -> HetCCLConfig:
+def install(config: "HetCCLConfig | Communicator") -> Communicator:
     """Swap the active collective backend (the LD_PRELOAD analogue).
 
-    Existing training code keeps calling the same functions; only the registry
-    default changes.  Installing exactly the config the most recent install
+    Existing training code keeps calling the same functions; only the active
+    communicator (and the registry defaults derived from its policy table)
+    changes.  Installing exactly the communicator the most recent install
     displaced is recognized as that undo — the legacy
     ``prev = install(cfg); ...; install(prev)`` restore pattern unwinds the
     stack instead of growing it.
 
     Args:
-        config: the :class:`HetCCLConfig` to activate.  A planner-produced
-            config (``repro.plan.TrainPlan.hetccl_config()``, DESIGN.md §9)
-            plugs in here unchanged.
+        config: the :class:`repro.comm.Communicator` to activate, or a
+            legacy :class:`HetCCLConfig` (compiled into its one-row-table
+            facade).  A planner-produced config
+            (``repro.plan.TrainPlan.hetccl_config()``, DESIGN.md §9) plugs
+            in here unchanged.
     Returns:
-        The previously active config; :func:`uninstall` (or the :func:`use`
-        context manager) pops the install and restores the TACC registry
-        defaults it displaced.
+        The previously active communicator; :func:`uninstall` (or the
+        :func:`use` context manager) pops the install and restores the TACC
+        registry defaults it displaced.
     Example::
 
         prev = hetccl.install(HetCCLConfig(mode="pipelined", n_channels=4))
@@ -152,29 +188,29 @@ def install(config: HetCCLConfig) -> HetCCLConfig:
     return _install(config, allow_undo=True)
 
 
-def _install(config: HetCCLConfig, *, allow_undo: bool) -> HetCCLConfig:
+def _install(config, *, allow_undo: bool) -> Communicator:
     global _CURRENT
-    mode = config.resolved_mode()     # validate before mutating any state
-    config.resolved_stripes()         # (also validates the backend)
+    c = _as_communicator(config)      # validates before mutating any state
     prev = _CURRENT
-    if allow_undo and _INSTALL_STACK and config == _INSTALL_STACK[-1][0]:
+    if allow_undo and _INSTALL_STACK and c == _INSTALL_STACK[-1][0]:
         uninstall()
         return prev
     prev_defaults = {op: tacc.get_default(op) for op in _SWAPPABLE_OPS}
     _INSTALL_STACK.append((prev, prev_defaults))
-    _CURRENT = config
+    _CURRENT = c
     for op in _SWAPPABLE_OPS:
-        tacc.set_default(op, _variant_for(op, mode))
+        tacc.set_default(op, c.default_variant(op))
     return prev
 
 
-def uninstall() -> HetCCLConfig:
-    """Undo the most recent :func:`install`: restore both the previous config
-    and the TACC registry defaults that install() mutated.
+def uninstall() -> Communicator:
+    """Undo the most recent :func:`install`: restore both the previous
+    communicator and the TACC registry defaults that install() mutated.
 
     Returns:
-        The config that was active before the uninstalled one.  Calling with
-        no install outstanding is a no-op that returns the current config.
+        The communicator that was active before the uninstalled one.
+        Calling with no install outstanding is a no-op that returns the
+        current one.
     """
     global _CURRENT
     if not _INSTALL_STACK:
@@ -187,16 +223,18 @@ def uninstall() -> HetCCLConfig:
 
 
 @contextlib.contextmanager
-def use(config: HetCCLConfig):
-    """Scoped backend swap: ``with hetccl.use(cfg): ...`` installs ``cfg`` and
-    restores the previous backend (config + registry defaults) on exit.
+def use(config: "HetCCLConfig | Communicator"):
+    """Scoped backend swap: ``with hetccl.use(cfg): ...`` installs ``cfg``
+    (a communicator, or a legacy config compiled into one) and restores the
+    previous backend (communicator + registry defaults) on exit.
 
     Always pushes a stack entry (no install()-style undo detection), so its
     enter/exit pair stays balanced even when ``cfg`` equals a config an
     enclosing scope displaced.
 
     Args:
-        config: the :class:`HetCCLConfig` to activate inside the scope.
+        config: the :class:`HetCCLConfig` or :class:`Communicator` to
+            activate inside the scope.
     Yields:
         The installed config.
     Example::
@@ -212,31 +250,42 @@ def use(config: HetCCLConfig):
         uninstall()
 
 
-def current() -> HetCCLConfig:
-    """Return the active :class:`HetCCLConfig` (the install-stack top, or the
-    module default — flat, no pod axis — when nothing is installed)."""
+def current() -> Communicator:
+    """Return the active :class:`repro.comm.Communicator` (the install-stack
+    top, or the module default — flat, no pod axis — when nothing is
+    installed)."""
     return _CURRENT
 
 
-def _pipeline_kwargs(cfg: HetCCLConfig, kw: dict) -> dict:
-    if cfg.resolved_mode() == "pipelined":
-        kw.setdefault("n_channels", cfg.n_channels)
-        kw.setdefault("pipeline_chunk_bytes", cfg.pipeline_chunk_bytes)
-    return kw
+def _payload_bytes(op: str, x, c: Communicator) -> int:
+    """The logical payload a collective moves — what the policy table (and
+    the simulator's pricing, DESIGN.md §12) keys on.  For all_gather that is
+    the *gathered* buffer (the wire carries (n-1)/n of it), not the input
+    shard, so runtime resolution matches the size the planner tuned the row
+    at.  The world factor is only computed for genuinely size-classed
+    tables (a one-row facade resolves identically at any size, and may be
+    dispatched outside a mesh context where axis sizes don't exist)."""
+    nbytes = int(x.size) * jnp.dtype(x.dtype).itemsize
+    if op == "all_gather" and c.table.rows:
+        nbytes *= _coll.axis_world(c.dp_axes())
+    return nbytes
 
 
-def _call(op: str, x, cfg: HetCCLConfig | None, **kw):
-    cfg = cfg or _CURRENT
-    variant = _variant_for(op, cfg.resolved_mode())
-    if variant == "pipelined":
-        kw = _pipeline_kwargs(cfg, kw)
-    kw.setdefault("backend", cfg.resolved_backend())
-    kw.setdefault("n_stripes", cfg.resolved_stripes())
-    return tacc.dispatch(op, x, cfg.local_axes, cfg.pod_axis,
-                         variant=variant, **kw)
+def _call(op: str, x, cfg, **kw):
+    """Communicator-scoped dispatch (DESIGN.md §12): resolve this payload's
+    policy from the active communicator's (op, size class) table, then let
+    tacc.dispatch map exactly the policy fields the resolved variant
+    declared."""
+    c = _as_communicator(cfg)
+    pol = c.policy(op, _payload_bytes(op, x, c))
+    variant = c.variant_for(op, pol)
+    if variant == "pipelined" and c.pipeline_chunk_bytes:
+        kw.setdefault("pipeline_chunk_bytes", c.pipeline_chunk_bytes)
+    return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
+                         variant=variant, policy=pol, **kw)
 
 
-def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
+def all_reduce(x, cfg=None, **kw):
     """Sum ``x`` across the DP world (pod-major flat group, DESIGN.md §3).
 
     Must run inside the train step's shard_map whose manual axes include the
@@ -244,48 +293,46 @@ def all_reduce(x, cfg: HetCCLConfig | None = None, **kw):
 
     Args:
         x: array shard to reduce.
-        cfg: optional config override; defaults to the installed one.
+        cfg: optional :class:`Communicator` or legacy :class:`HetCCLConfig`
+            override; defaults to the installed communicator.
         **kw: implementation extras (e.g. ``cross_dtype`` to compress the
-            cross-island stage).
+            cross-island stage — normally carried by the resolved policy).
     Returns:
         The summed array, identical on every DP rank.
     Example::
 
-        grads = hetccl.all_reduce(grads)      # mode picked by install()
+        grads = hetccl.all_reduce(grads)      # policy picked by install()
     """
-    cfg = cfg or _CURRENT
-    if cfg.resolved_mode() in ("hier", "pipelined") and cfg.cross_dtype is not None:
-        kw.setdefault("cross_dtype", cfg.cross_dtype)
     return _call("all_reduce", x, cfg, **kw)
 
 
-def all_gather(x, cfg: HetCCLConfig | None = None, **kw):
+def all_gather(x, cfg=None, **kw):
     """Concatenate every DP rank's ``x`` along ``dim`` (kw, default 0),
     pod-major.  Returns an array ``world_size()`` times larger on that dim."""
     return _call("all_gather", x, cfg, **kw)
 
 
-def reduce_scatter(x, cfg: HetCCLConfig | None = None, **kw):
+def reduce_scatter(x, cfg=None, **kw):
     """Sum across the DP world, then keep this rank's 1/world shard of dim
     ``dim`` (kw, default 0).  The bandwidth-optimal half of an all-reduce;
     ZeRO-3's gradient op.  Returns the reduced shard."""
     return _call("reduce_scatter", x, cfg, **kw)
 
 
-def all_to_all(x, cfg: HetCCLConfig | None = None, **kw):
+def all_to_all(x, cfg=None, **kw):
     """Transpose shard ownership: split ``split_axis`` world-ways, every rank
     keeps chunk j of rank i concatenated on ``concat_axis`` (kwargs).  MoE's
     dispatch/return op.  No pipelined variant — degrades to hier."""
     return _call("all_to_all", x, cfg, **kw)
 
 
-def broadcast(x, cfg: HetCCLConfig | None = None, **kw):
+def broadcast(x, cfg=None, **kw):
     """Every rank receives root's ``x`` (kw ``root``, default 0).  Returns
     the root value everywhere.  No pipelined variant — degrades to hier."""
     return _call("broadcast", x, cfg, **kw)
 
 
-def reduce(x, cfg: HetCCLConfig | None = None, **kw):
+def reduce(x, cfg=None, **kw):
     """Sum across the DP world; only ``root`` (kw, default 0) keeps the
     result, other ranks get zeros.  No pipelined variant — degrades to hier."""
     return _call("reduce", x, cfg, **kw)
@@ -297,11 +344,11 @@ def p2p(x, axis: str, perm: Sequence[tuple[int, int]]):
     return tacc.dispatch("p2p", x, axis, perm)
 
 
-def world_size(cfg: HetCCLConfig | None = None) -> int:
+def world_size(cfg=None) -> int:
     """Total DP ranks of ``cfg``'s axes (pod × local) inside the current
-    shard_map; 1 outside any mesh context."""
-    cfg = cfg or _CURRENT
-    return _coll.axis_world(cfg.dp_axes())
+    shard_map; 1 outside any mesh context.  ``cfg``: communicator or legacy
+    config, default the installed communicator."""
+    return _coll.axis_world(_as_communicator(cfg).dp_axes())
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +377,7 @@ def _make_buckets(leaves, bucket_bytes: int) -> list[list[int]]:
     return buckets
 
 
-def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
+def tree_all_reduce(tree, cfg=None, *, mean_by=None):
     """All-reduce every leaf of ``tree``, fused into ~bucket_bytes buckets.
 
     Leaves are flattened, grouped by dtype into buckets, and reduced with a
@@ -338,16 +385,20 @@ def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
     all-reduce is decomposed into its bandwidth-optimal halves and the
     buckets are run on a skewed wavefront, so bucket i's all-gather overlaps
     bucket i+1's reduce-scatter (on top of whatever intra-op pipelining the
-    installed collective mode adds).  Numerically equal to one blocking
+    resolved per-bucket policy adds).  Numerically equal to one blocking
     all-reduce per bucket.
+
+    ``cfg``: communicator or legacy config (default: the installed
+    communicator) — its ``bucket_bytes`` sizes the fusion buckets and its
+    policy table routes each bucket's RS/AG by payload size.
 
     ``mean_by``: optional scalar (e.g. summed token count) every *floating*
     leaf is divided by after reduction (integer leaves stay summed).
     """
-    cfg = cfg or _CURRENT
+    c = _as_communicator(cfg)
     leaves, treedef = jax.tree.flatten(tree)
-    buckets = _make_buckets(leaves, cfg.bucket_bytes)
-    world = world_size(cfg)
+    buckets = _make_buckets(leaves, c.bucket_bytes)
+    world = world_size(c)
 
     flats, pads = [], []
     for bucket in buckets:
@@ -359,15 +410,17 @@ def tree_all_reduce(tree, cfg: HetCCLConfig | None = None, *, mean_by=None):
         flats.append(flat)
         pads.append(pad)
 
-    if world > 1 and cfg.cross_dtype is None:
+    big = max((int(f.size) * jnp.dtype(f.dtype).itemsize for f in flats),
+              default=0)
+    if world > 1 and c.policy("all_reduce", big).cross_dtype is None:
         reduced = _coll.software_pipeline(
             flats,
-            (lambda f: reduce_scatter(f, cfg, dim=0),
-             lambda s: all_gather(s, cfg, dim=0)))
+            (lambda f: reduce_scatter(f, c, dim=0),
+             lambda s: all_gather(s, c, dim=0)))
     elif world > 1:
         # cross-stage compression only exists on the fused all_reduce path
         reduced = _coll.software_pipeline(
-            flats, (lambda f: all_reduce(f, cfg),))
+            flats, (lambda f: all_reduce(f, c),))
     else:
         reduced = flats
 

@@ -331,6 +331,19 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     return sum(stages)
 
 
+def policy_collective_time(op: str, nbytes: float, cluster: ClusterSpec,
+                           policies, alpha: float | None = None) -> float:
+    """Price one collective under the policy a per-op, size-classed
+    :class:`repro.comm.policy.PolicyTable` resolves for this payload
+    (DESIGN.md §12) — the pricing mirror of the communicator dispatch path:
+    the same (op, size class) row that routes the runtime call selects the
+    (mode, backend, channels, stripes) tuple priced here."""
+    p = policies.resolve(op, nbytes)
+    return collective_time(op, nbytes, cluster, p.mode, alpha,
+                           n_channels=max(int(p.n_channels), 1),
+                           backend=p.backend, n_stripes=p.n_stripes)
+
+
 def collective_busbw(op: str, nbytes: float, cluster: ClusterSpec,
                      mode: str = "auto", backend: str = "xla") -> float:
     """Algorithm bandwidth (bytes / time), the y-axis of paper Figs 7/11."""
@@ -404,7 +417,8 @@ def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
                              mode: str = "auto", *,
                              bucket_bytes: float = 64 * 1024 * 1024,
                              n_channels: int = 4,
-                             backend: str = "xla", n_stripes=1) -> float:
+                             backend: str = "xla", n_stripes=1,
+                             policies=None) -> float:
     """Gradient-reduction time as ``hetccl.tree_all_reduce`` executes it.
 
     The runtime fuses leaves into ~``bucket_bytes`` buckets and reduces each
@@ -425,38 +439,53 @@ def bucketed_all_reduce_time(param_bytes: float, cluster: ClusterSpec,
         mode: collective mode each bucket's RS/AG runs under.
         bucket_bytes: fusion bucket size (``HetCCLConfig.bucket_bytes``).
         n_channels: channel budget of the ``pipelined`` mode.
+        policies: optional per-op ``PolicyTable`` (DESIGN.md §12); when
+            given, each half runs under the policy the table resolves for
+            its payload and the single-policy args above are ignored.
     Returns:
         Modeled seconds for the whole gradient reduction.
     """
     n_buckets = max(int(math.ceil(param_bytes / max(bucket_bytes, 1))), 1)
     b = param_bytes / n_buckets
-    t_rs = collective_time("reduce_scatter", b, cluster, mode,
-                           n_channels=n_channels, backend=backend,
-                           n_stripes=n_stripes)
-    t_ag = collective_time("all_gather", b, cluster, mode,
-                           n_channels=n_channels, backend=backend,
-                           n_stripes=n_stripes)
+    if policies is not None:
+        t_rs = policy_collective_time("reduce_scatter", b, cluster, policies)
+        t_ag = policy_collective_time("all_gather", b, cluster, policies)
+    else:
+        t_rs = collective_time("reduce_scatter", b, cluster, mode,
+                               n_channels=n_channels, backend=backend,
+                               n_stripes=n_stripes)
+        t_ag = collective_time("all_gather", b, cluster, mode,
+                               n_channels=n_channels, backend=backend,
+                               n_stripes=n_stripes)
     return t_rs + t_ag + (n_buckets - 1) * max(t_rs, t_ag)
 
 
 def zero3_comm_time(param_bytes: float, n_layers: int, cluster: ClusterSpec,
                     mode: str = "auto", *, n_channels: int = 4,
-                    backend: str = "xla", n_stripes=1) -> float:
+                    backend: str = "xla", n_stripes=1,
+                    policies=None) -> float:
     """ZeRO-3 traffic at per-layer granularity (DESIGN.md §9).
 
     The trainer gathers each layer's params inside the scan (fwd + bwd = 2×
     param volume of all-gather) and reduce-scatters each layer's grads, so
     the α cost scales with ``n_layers`` — which is exactly why small models
     on α-heavy fabrics prefer ZeRO-1 and the planner must see that.
+    ``policies``: optional per-op ``PolicyTable`` (DESIGN.md §12), same
+    contract as :func:`bucketed_all_reduce_time`.
     """
     layers = max(int(n_layers), 1)
     per = param_bytes / layers
-    t_ag = collective_time("all_gather", per, cluster, mode,
-                           n_channels=n_channels, backend=backend,
-                           n_stripes=n_stripes)
-    t_rs = collective_time("reduce_scatter", per, cluster, mode,
-                           n_channels=n_channels, backend=backend,
-                           n_stripes=n_stripes)
+    if policies is not None:
+        t_ag = policy_collective_time("all_gather", per, cluster, policies)
+        t_rs = policy_collective_time("reduce_scatter", per, cluster,
+                                      policies)
+    else:
+        t_ag = collective_time("all_gather", per, cluster, mode,
+                               n_channels=n_channels, backend=backend,
+                               n_stripes=n_stripes)
+        t_rs = collective_time("reduce_scatter", per, cluster, mode,
+                               n_channels=n_channels, backend=backend,
+                               n_stripes=n_stripes)
     return layers * (2.0 * t_ag + t_rs)
 
 
@@ -467,7 +496,8 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
                       n_layers: int = 1, overlap: float = 0.0,
                       comm_scale: float = 1.0,
                       compute_scale: float = 1.0,
-                      backend: str = "xla", n_stripes=1) -> float:
+                      backend: str = "xla", n_stripes=1,
+                      policies=None) -> float:
     """Step time of one fully-specified plan candidate (DESIGN.md §9).
 
     Same compute model as :func:`step_time` (max over pods of each pod's
@@ -476,6 +506,9 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
     wavefront (:func:`bucketed_all_reduce_time`), ZeRO-3 per layer
     (:func:`zero3_comm_time`).  ``compute_scale`` is the profile-refinement
     calibration factor (observed/modeled; ``repro.plan.refine``).
+    ``policies``: optional per-op ``PolicyTable`` (DESIGN.md §12) — each op
+    class is then priced under its own policy instead of the single
+    mode/backend/channels/stripes tuple.
 
     Returns:
         Modeled seconds per optimizer step for this candidate.
@@ -488,12 +521,13 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
     if workload.zero_stage >= 3:
         comm = zero3_comm_time(workload.param_bytes, n_layers, cluster, mode,
                                n_channels=n_channels, backend=backend,
-                               n_stripes=n_stripes)
+                               n_stripes=n_stripes, policies=policies)
     else:
         comm = bucketed_all_reduce_time(workload.param_bytes, cluster, mode,
                                         bucket_bytes=bucket_bytes,
                                         n_channels=n_channels,
-                                        backend=backend, n_stripes=n_stripes)
+                                        backend=backend, n_stripes=n_stripes,
+                                        policies=policies)
     return compute_scale * comp + (1.0 - overlap) * comm_scale * comm
 
 

@@ -23,17 +23,27 @@ and for *collective* ops —
 A table maps ``(op, variant) -> callable`` and is consulted on every call, so
 swapping the whole communication backend (the paper's LD_PRELOAD trick) is a
 single registry update — see :func:`repro.core.hetccl.install`.
+
+Collective registrations additionally declare the **policy fields** they
+consume (``policy_fields=``): :func:`dispatch` with a
+``policy=CommPolicy(...)`` maps exactly those fields of the policy onto the
+implementation's keyword arguments (DESIGN.md §12).  That replaces the old
+convention of threading every knob as a loose kwarg and having
+implementations swallow the irrelevant ones with ``**_`` — a registered
+collective's signature now lists precisely what it consumes, and the CI
+dispatch-table sanity job asserts it.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 
 _lock = threading.Lock()
 _TABLE: Dict[str, Dict[str, Callable[..., Any]]] = {}
 _DEFAULT_VARIANT: Dict[str, str] = {}
+_POLICY_FIELDS: Dict[Tuple[str, str], Tuple[str, ...]] = {}
 _PLATFORM: str | None = None     # resolved lazily (taccSetPlatformAuto)
 
 
@@ -41,12 +51,20 @@ class TaccError(KeyError):
     pass
 
 
-def register(op: str, variant: str, *, default: bool = False) -> Callable:
-    """Decorator: register ``fn`` as the ``variant`` implementation of ``op``."""
+def register(op: str, variant: str, *, default: bool = False,
+             policy_fields: Tuple[str, ...] = ()) -> Callable:
+    """Decorator: register ``fn`` as the ``variant`` implementation of ``op``.
+
+    ``policy_fields`` names the :class:`repro.comm.policy.CommPolicy` fields
+    this implementation consumes (e.g. ``("backend", "n_stripes")``); they
+    must be actual keyword parameters of ``fn`` — :func:`dispatch` with a
+    ``policy=`` maps exactly these, nothing else.
+    """
 
     def deco(fn: Callable) -> Callable:
         with _lock:
             _TABLE.setdefault(op, {})[variant] = fn
+            _POLICY_FIELDS[(op, variant)] = tuple(policy_fields)
             if default or op not in _DEFAULT_VARIANT:
                 _DEFAULT_VARIANT[op] = variant
         return fn
@@ -81,7 +99,34 @@ def set_default(op: str, variant: str) -> None:
 
 
 def get_default(op: str) -> str:
-    return _DEFAULT_VARIANT[op]
+    try:
+        return _DEFAULT_VARIANT[op]
+    except KeyError:
+        raise TaccError(f"no default variant registered for op {op!r}; "
+                        f"registered ops: {sorted(_TABLE)}") from None
+
+
+def policy_fields(op: str, variant: str) -> Tuple[str, ...]:
+    """The policy fields declared by the ``(op, variant)`` registration."""
+    return _POLICY_FIELDS.get((op, variant), ())
+
+
+def resolve_variant(op: str, variant: str | None = None) -> str:
+    """The variant name ``op`` resolves to (explicit -> platform -> default),
+    without touching the implementation — the policy-mapping half of
+    :func:`dispatch` needs the name to look up declared fields."""
+    impls = _TABLE.get(op)
+    if not impls:
+        raise TaccError(f"unknown op {op!r}; registered: {sorted(_TABLE)}")
+    if variant is not None:
+        if variant not in impls:
+            raise TaccError(
+                f"op {op!r} has no variant {variant!r}; has {sorted(impls)}")
+        return variant
+    plat = get_platform()
+    if plat in impls:
+        return plat
+    return get_default(op)
 
 
 def resolve(op: str, variant: str | None = None) -> Callable[..., Any]:
@@ -91,22 +136,24 @@ def resolve(op: str, variant: str | None = None) -> Callable[..., Any]:
     default.  This mirrors TACC's function-table indirection: callers never
     name a platform-specific entry point.
     """
-    impls = _TABLE.get(op)
-    if not impls:
-        raise TaccError(f"unknown op {op!r}; registered: {sorted(_TABLE)}")
-    if variant is not None:
-        if variant not in impls:
-            raise TaccError(
-                f"op {op!r} has no variant {variant!r}; has {sorted(impls)}")
-        return impls[variant]
-    plat = get_platform()
-    if plat in impls:
-        return impls[plat]
-    return impls[_DEFAULT_VARIANT[op]]
+    return _TABLE[op][resolve_variant(op, variant)]
 
 
-def dispatch(op: str, *args: Any, variant: str | None = None, **kwargs: Any) -> Any:
-    return resolve(op, variant)(*args, **kwargs)
+def dispatch(op: str, *args: Any, variant: str | None = None,
+             policy: Any = None, **kwargs: Any) -> Any:
+    """Call the resolved implementation.
+
+    With ``policy=`` (a :class:`repro.comm.policy.CommPolicy`), the fields
+    the resolved registration declared via ``policy_fields`` are mapped onto
+    keyword arguments — and only those, so an implementation that does not
+    take e.g. ``n_stripes`` is never handed it (DESIGN.md §12).  Explicit
+    ``kwargs`` win over policy-derived values.
+    """
+    vname = resolve_variant(op, variant)
+    if policy is not None:
+        for f in _POLICY_FIELDS.get((op, vname), ()):
+            kwargs.setdefault(f, getattr(policy, f))
+    return _TABLE[op][vname](*args, **kwargs)
 
 
 def _fn_name(fn) -> str:
@@ -117,10 +164,13 @@ def _fn_name(fn) -> str:
 
 
 def table() -> Dict[str, Dict[str, str]]:
-    """Readable dump of the function table (paper Appendix C analogue)."""
-    return {op: {v: _fn_name(fn) for v, fn in impls.items()}
-            for op, impls in sorted(_TABLE.items())}
+    """Readable dump of the function table (paper Appendix C analogue).
+    Snapshots under the registry lock, like the writers."""
+    with _lock:
+        return {op: {v: _fn_name(fn) for v, fn in impls.items()}
+                for op, impls in sorted(_TABLE.items())}
 
 
 def variants(op: str) -> list[str]:
-    return sorted(_TABLE.get(op, {}))
+    with _lock:
+        return sorted(_TABLE.get(op, {}))

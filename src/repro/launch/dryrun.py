@@ -88,10 +88,12 @@ def _serve_batch_sds(cfg: ModelConfig, shape: ShapeConfig, kind: str):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
              verbose: bool = True, plan_mode: str = "manual",
-             backend: str = "auto", stripes: str = "auto") -> dict:
+             backend: str = "auto", stripes: str = "auto",
+             policy: str = "auto") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero}
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero,
+           "policy": policy}
     if not shape.applicable(cfg):
         rec["status"] = "skipped"
         rec["reason"] = "long_500k requires sub-quadratic attention (DESIGN.md §4)"
@@ -110,7 +112,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
             if plan_mode == "auto":
                 # joint (shares, mode, backend, channels, bucket, stripes)
                 # selection priced by the simulator on the mesh's modeled
-                # topology (DESIGN.md §9; ring backends §10, transport §11)
+                # topology (DESIGN.md §9; ring backends §10, transport §11);
+                # --policy auto additionally emits the per-op, size-classed
+                # policy table (repro.comm, DESIGN.md §12)
                 import dataclasses as _dc
                 req = plan_mod.plan_request(
                     cluster_for_mesh(mesh), cfg, shape.global_batch,
@@ -122,29 +126,52 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
                 if stripes != "auto":
                     space = _dc.replace(space,
                                         stripe_counts=(int(stripes),))
-                tp = plan_mod.autotune(req, space)
+                if policy == "flat":
+                    space = _dc.replace(space, modes=("flat",),
+                                        backends=("xla",), per_op=False)
+                elif policy == "legacy":
+                    space = _dc.replace(space, per_op=False)
+                tp = (plan_mod.autotune_policies(req, space)
+                      if policy == "auto" else plan_mod.autotune(req, space))
                 plan, rc = tp.plan, tp.run_config()
-                rec["plan"] = tp.summary()
+                rec["plan"] = tp.summary()   # includes the chosen table
                 if verbose:
+                    n_rows = (len(tp.policies.rows)
+                              if tp.policies is not None else 0)
                     print(f"  plan auto: mode={tp.mode} backend={tp.backend} "
                           f"C={tp.n_channels} stripes={tp.n_stripes} "
                           f"bucket={tp.bucket_bytes >> 20}MiB "
+                          f"policy_rows={n_rows} "
                           f"shares={tp.plan.micro_per_pod} "
                           f"modeled_step={tp.modeled_step_s:.4f}s")
             else:
                 # micro-batch so each device sees ~8k tokens per micro-step
                 # (keeps the remat activation stash inside v5e HBM); gradient
                 # accumulation covers the rest of the global batch.
+                import dataclasses as _dc
                 per_dev = shape.global_batch // dp
                 mb = max(1, min(per_dev, 8192 // shape.seq_len))
                 n_micro = per_dev // mb
                 plan = uniform_plan(n_pods, n_micro * n_pods, mb)
                 rbackend = backend if backend != "auto" else "xla"
                 rc = RunConfig(zero_stage=zero,
-                               collective_mode="hier" if multi else "flat",
+                               collective_mode="flat" if policy == "flat"
+                               else ("hier" if multi else "flat"),
                                backend=rbackend,
                                n_stripes=resolve_stripes(stripes, rbackend,
                                                          mesh))
+                if policy == "auto":
+                    # hand-set shares, per-op policy table (DESIGN.md §12)
+                    space = plan_mod.DEFAULT_SPACE
+                    if backend != "auto":
+                        space = _dc.replace(space, backends=(backend,))
+                    if stripes != "auto":
+                        space = _dc.replace(space,
+                                            stripe_counts=(int(stripes),))
+                    rc = _dc.replace(rc, policies=plan_mod.policy_table_for(
+                        cluster_for_mesh(mesh), space,
+                        bucket_bytes=rc.bucket_bytes, zero_stage=zero))
+                    rec["policy_table"] = rc.policies.summary()
             batch_sds, extra_specs = _train_batch_sds(cfg, shape, mesh, plan)
             prog = make_train_program(model, mesh, rc, plan,
                                       extra_batch_specs=extra_specs)
@@ -247,6 +274,15 @@ def main():
                          "searches SearchSpace.stripe_counts; manual pallas "
                          "plans ask transport.plan_stripes); an integer "
                          "pins it")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "flat", "legacy"],
+                    help="collective policy source (repro.comm, DESIGN.md "
+                         "§12): auto = per-op, size-classed PolicyTable "
+                         "(searched by --plan auto, priced on the mesh's "
+                         "modeled topology for manual plans); legacy = the "
+                         "single-policy facade of the flags above (PR-4 "
+                         "behavior); flat = force the flat single-stage "
+                         "policy everywhere")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -265,7 +301,7 @@ def main():
                 print(f"=== {tag} ===", flush=True)
                 rec = run_cell(arch, shape, mesh_kind, args.zero,
                                plan_mode=args.plan, backend=args.backend,
-                               stripes=args.stripes)
+                               stripes=args.stripes, policy=args.policy)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
                 print(f"  -> {rec['status']} "

@@ -36,6 +36,13 @@ def main():
                          "an integer pins it")
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: repro.plan picks mode/channels/bucket/shares")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "flat", "legacy"],
+                    help="collective policy source (repro.comm, DESIGN.md "
+                         "§12): auto = per-op, size-classed PolicyTable; "
+                         "legacy = the single-policy facade of "
+                         "--mode/--backend/--stripes; flat = force flat "
+                         "everywhere")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--micro-batch", type=int, default=1)
     ap.add_argument("--n-micro", type=int, default=2)
@@ -77,15 +84,17 @@ def main():
     model = build(cfg)
     sizes = dict(zip(axes, shape))
     n_pods = sizes.get("pod", 1)
+    import dataclasses as _dc
     from repro.launch.mesh import resolve_stripes
-    rc = RunConfig(zero_stage=args.zero, collective_mode=args.mode,
+    rc = RunConfig(zero_stage=args.zero,
+                   collective_mode="flat" if args.policy == "flat"
+                   else args.mode,
                    backend=args.backend, learning_rate=args.lr,
                    # --plan auto searches the count below and replaces this
                    n_stripes=resolve_stripes(args.stripes, args.backend,
                                              mesh),
                    param_dtype="float32" if args.reduced else "bfloat16")
     if args.plan == "auto":
-        import dataclasses as _dc
         from repro import plan as plan_mod
         from repro.launch.mesh import cluster_for_mesh
         data_axis = sizes.get("data", 1)
@@ -97,14 +106,35 @@ def main():
         space = plan_mod.DEFAULT_SPACE
         if args.stripes != "auto":
             space = _dc.replace(space, stripe_counts=(int(args.stripes),))
-        tp = plan_mod.autotune(req, space)
+        if args.policy == "flat":
+            space = _dc.replace(space, modes=("flat",), backends=("xla",),
+                                per_op=False)
+        elif args.policy == "legacy":
+            space = _dc.replace(space, per_op=False)
+        tp = (plan_mod.autotune_policies(req, space)
+              if args.policy == "auto" else plan_mod.autotune(req, space))
         plan, rc = tp.plan, tp.run_config(rc)
+        n_rows = len(tp.policies.rows) if tp.policies is not None else 0
         print(f"plan auto: mode={tp.mode} backend={tp.backend} "
               f"C={tp.n_channels} stripes={tp.n_stripes} "
-              f"bucket={tp.bucket_bytes >> 20}MiB shares={plan.micro_per_pod} "
+              f"bucket={tp.bucket_bytes >> 20}MiB policy_rows={n_rows} "
+              f"shares={plan.micro_per_pod} "
               f"modeled_step={tp.modeled_step_s:.4f}s")
     else:
         plan = uniform_plan(n_pods, args.n_micro * n_pods, args.micro_batch)
+        if args.policy == "auto":
+            # hand-set shares, per-op policy table (repro.comm, DESIGN.md
+            # §12); an explicit --stripes pin narrows the table search the
+            # same way --plan auto narrows its space
+            from repro import plan as plan_mod
+            from repro.launch.mesh import cluster_for_mesh
+            space = plan_mod.DEFAULT_SPACE
+            if args.stripes != "auto":
+                space = _dc.replace(space,
+                                    stripe_counts=(int(args.stripes),))
+            rc = _dc.replace(rc, policies=plan_mod.policy_table_for(
+                cluster_for_mesh(mesh), space, bucket_bytes=rc.bucket_bytes,
+                zero_stage=args.zero))
     prog = make_train_program(model, mesh, rc, plan)
     print(f"arch={cfg.name} params={model.n_params():,} mesh={sizes} "
           f"zero={args.zero} mode={prog.hcfg.resolved_mode()}")

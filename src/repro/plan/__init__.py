@@ -12,15 +12,21 @@ bucket size, ZeRO stage, per-pod micro-batch shares):
 See ``autotuner`` for the search, ``refine`` for the measured-profile
 feedback loop, and DESIGN.md §9 for the cost model and re-plan contract.
 """
-from repro.plan.autotuner import (DEFAULT_BUCKET, DEFAULT_SPACE, MiB,
-                                  PlanRequest, SearchSpace, TrainPlan,
-                                  autotune, estimate_hbm_bytes, plan_request,
-                                  pod_profiles, rank, workload_for)
+from repro.plan.autotuner import (CLASS_REP_BYTES, DEFAULT_BUCKET,
+                                  DEFAULT_SPACE, MiB, POLICY_OPS,
+                                  RING_BACKED_OPS, PlanRequest,
+                                  SearchSpace, TrainPlan, autotune,
+                                  autotune_policies, best_policy,
+                                  estimate_hbm_bytes, grad_payload_bytes,
+                                  plan_request,
+                                  pod_profiles, policy_table_for, rank,
+                                  workload_for)
 from repro.plan.refine import calibrate, refine, refined_frontier
 
 __all__ = [
-    "DEFAULT_BUCKET", "DEFAULT_SPACE", "MiB", "PlanRequest", "SearchSpace",
-    "TrainPlan", "autotune", "calibrate", "estimate_hbm_bytes",
-    "plan_request", "pod_profiles", "rank", "refine", "refined_frontier",
-    "workload_for",
+    "CLASS_REP_BYTES", "DEFAULT_BUCKET", "DEFAULT_SPACE", "MiB",
+    "POLICY_OPS", "RING_BACKED_OPS", "PlanRequest", "SearchSpace", "TrainPlan", "autotune",
+    "autotune_policies", "best_policy", "calibrate", "estimate_hbm_bytes",
+    "grad_payload_bytes", "plan_request", "pod_profiles", "policy_table_for", "rank", "refine",
+    "refined_frontier", "workload_for",
 ]

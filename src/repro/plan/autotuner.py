@@ -29,6 +29,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.comm.policy import (CommPolicy, PolicyTable, SIZE_CLASSES,
+                               size_class)
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import simulator as sim
 from repro.core.balance import HetPlan, PodProfile, make_plan
@@ -40,6 +42,21 @@ MiB = 1024 * 1024
 # schedule (fewer moving parts to debug on a real fleet).
 _MODE_ORDER = {"flat": 0, "hier": 1, "pipelined": 2}
 _BACKEND_ORDER = {"xla": 0, "pallas": 1}
+
+# The collectives a policy table covers and the representative payload the
+# per-op search prices each size class at (DESIGN.md §12).  The class that
+# contains the actual gradient-path payload is re-priced at that exact size
+# instead, so the emitted table is optimal for the traffic the step emits.
+POLICY_OPS = ("all_reduce", "all_gather", "reduce_scatter", "broadcast",
+              "reduce", "all_to_all")
+CLASS_REP_BYTES = {"small": 16 * 1024, "medium": MiB, "large": 64 * MiB}
+# Ops whose registered implementations actually consume backend/n_stripes
+# (declare them as policy fields): only these may carry pallas/striped rows —
+# emitting a schedule the runtime cannot execute would make the modeled
+# speedup fictional.  Mirrors the collectives registry (CI's dispatch-table
+# sanity keeps the registry side honest; tests/test_comm.py ties the two).
+RING_BACKED_OPS = frozenset({"all_reduce", "all_gather", "reduce_scatter",
+                             "reduce"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +84,13 @@ class SearchSpace:
                   (``HetCCLConfig.resolved_stripes``) — and priced via the
                   simulator's per-link wire term, so on single-link chips
                   every count models identically and the tie-break keeps 1.
+    per_op:       also emit per-op, size-classed policy-table candidates
+                  (DESIGN.md §12): for each (zero stage, bucket) pair one
+                  extra candidate whose every (op, size class) runs its own
+                  argmin policy over this space.  Such a candidate is never
+                  modeled slower than any single-policy candidate sharing
+                  its (zero, bucket); exact ties break toward the simpler
+                  single-policy plan.
     """
 
     modes: tuple[str, ...] = ("flat", "hier", "pipelined")
@@ -75,6 +99,7 @@ class SearchSpace:
     zero_stages: tuple[int, ...] = (1, 3)
     backends: tuple[str, ...] = ("xla", "pallas")
     stripe_counts: tuple[int, ...] = (1, 2, 4)
+    per_op: bool = True
 
 
 DEFAULT_SPACE = SearchSpace()
@@ -190,6 +215,13 @@ class TrainPlan:
     # the hardware-constant fallback) — carried so refine() re-plans on the
     # same evidence instead of silently reverting to datasheet speeds
     profiles: tuple[PodProfile, ...] | None = None
+    # per-op, size-classed policy table (DESIGN.md §12): set on the
+    # ``SearchSpace.per_op`` candidates, None on single-policy candidates
+    # (their scalar tuple above is the whole story).  On a per-op candidate
+    # the scalar mode/backend/channels/stripes mirror the gradient-path
+    # (reduce_scatter at the dominant payload) row for display and as the
+    # facade fallback of :meth:`hetccl_config`.
+    policies: PolicyTable | None = None
 
     def run_config(self, base: RunConfig | None = None) -> RunConfig:
         """Materialize into the trainer's :class:`RunConfig`.
@@ -200,7 +232,9 @@ class TrainPlan:
         Returns:
             ``base`` with the planner-owned fields (``zero_stage``,
             ``collective_mode``, ``n_channels``, ``bucket_bytes``,
-            ``n_micro``) replaced.
+            ``n_micro``, ``policies``) replaced.  A per-op candidate's
+            table rides along in ``RunConfig.policies`` and the trainer
+            builds its communicator from it (DESIGN.md §12).
 
         Example::
 
@@ -212,7 +246,20 @@ class TrainPlan:
             base, zero_stage=self.zero_stage, collective_mode=self.mode,
             backend=self.backend, n_channels=self.n_channels,
             n_stripes=self.n_stripes,
-            bucket_bytes=self.bucket_bytes, n_micro=self.plan.n_micro_max)
+            bucket_bytes=self.bucket_bytes, n_micro=self.plan.n_micro_max,
+            policies=self.policies)
+
+    def policy_table(self) -> PolicyTable:
+        """The communicator policy table this plan stands for (DESIGN.md
+        §12): the per-op table of a ``per_op`` candidate, or the one-row
+        facade compile of a single-policy candidate — so every TrainPlan,
+        legacy or not, materializes into the same communicator surface."""
+        if self.policies is not None:
+            return self.policies
+        return PolicyTable.single(CommPolicy(
+            mode=self.mode, backend=self.backend,
+            n_channels=max(int(self.n_channels), 1),
+            n_stripes=self.n_stripes))
 
     def hetccl_config(self, local_axes: tuple[str, ...] = ("data",),
                       pod_axis: str | None = "pod"):
@@ -242,6 +289,8 @@ class TrainPlan:
             "fits_hbm": self.fits_hbm,
             "hbm_GB_per_device": self.hbm_bytes_per_device / 1e9,
             "compute_scale": self.compute_scale,
+            "policies": (self.policies.summary()
+                         if self.policies is not None else None),
         }
 
 
@@ -305,35 +354,108 @@ def plan_request(cluster: ClusterSpec, model: ModelConfig, global_batch: int,
                        global_batch=global_batch, seq_len=seq_len, **kw)
 
 
-def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
-    """Deterministic candidate enumeration with dimension pruning: channel
-    counts only vary the pipelined mode, bucket sizes only ZeRO-1, ring
+def _comm_candidates(space: SearchSpace):
+    """Deterministic (mode, backend, n_channels, stripes) enumeration with
+    dimension pruning: channel counts only vary the pipelined mode, ring
     backends only the modes with an explicit cross-island ring (hier /
     pipelined — flat's native collective is backend-invariant, DESIGN.md
     §10), stripe counts only the pallas backend (the xla ring is one
-    logical transfer, §11); the flat baseline is always included.  Yields
-    (mode, backend, n_channels, bucket, zero, stripes)."""
+    logical transfer, §11); the flat baseline is always included."""
     seen = set()
     modes = tuple(space.modes)
     if "flat" not in modes:
         modes = ("flat",) + modes
     backends = tuple(space.backends) or ("xla",)
     stripe_counts = tuple(space.stripe_counts) or (1,)
+    for mode in modes:
+        channels = space.n_channels if mode == "pipelined" else (1,)
+        mode_backends = backends if mode != "flat" else (
+            backends if "xla" not in backends else ("xla",))
+        for backend in mode_backends:
+            stripes_dim = stripe_counts if backend == "pallas" else (1,)
+            for c in channels:
+                for k in stripes_dim:
+                    key = (mode, backend, c, k)
+                    if key not in seen:
+                        seen.add(key)
+                        yield key
+
+
+def _candidates(space: SearchSpace, zero_stages: Sequence[int]):
+    """Single-policy candidates: :func:`_comm_candidates` × ZeRO stages ×
+    bucket sizes (buckets only vary ZeRO-1).  Yields
+    (mode, backend, n_channels, bucket, zero, stripes)."""
     for zero in zero_stages:
-        for mode in modes:
-            channels = space.n_channels if mode == "pipelined" else (1,)
-            buckets = space.bucket_bytes if zero < 3 else (DEFAULT_BUCKET,)
-            mode_backends = backends if mode != "flat" else (
-                backends if "xla" not in backends else ("xla",))
-            for backend in mode_backends:
-                stripes_dim = stripe_counts if backend == "pallas" else (1,)
-                for c in channels:
-                    for b in buckets:
-                        for k in stripes_dim:
-                            key = (mode, backend, c, b, zero, k)
-                            if key not in seen:
-                                seen.add(key)
-                                yield key
+        buckets = space.bucket_bytes if zero < 3 else (DEFAULT_BUCKET,)
+        for mode, backend, c, k in _comm_candidates(space):
+            for b in buckets:
+                yield (mode, backend, c, b, zero, k)
+
+
+def best_policy(op: str, nbytes: float, cluster: ClusterSpec,
+                space: SearchSpace = DEFAULT_SPACE) -> tuple[CommPolicy, float]:
+    """The argmin (mode, backend, channels, stripes) policy for one
+    (op, payload) over ``space``, priced with the α-β simulator — the
+    per-cell primitive of the policy-table search (DESIGN.md §12).
+
+    Returns:
+        ``(policy, modeled_seconds)``.  Ties break toward the simpler
+        schedule (flat < hier < pipelined, xla < pallas, fewer stripes,
+        fewer channels), so degenerate cells (single island, single-link
+        chips, tiny payloads) keep the legacy configuration.
+    """
+    best = None
+    for mode, backend, c, k in _comm_candidates(space):
+        if op not in RING_BACKED_OPS:
+            backend, k = "xla", 1   # the op can't execute a pallas/striped row
+        t = sim.collective_time(op, nbytes, cluster, mode, n_channels=c,
+                                backend=backend, n_stripes=k)
+        key = (t, _MODE_ORDER[mode], _BACKEND_ORDER[backend], k, c)
+        if best is None or key < best[0]:
+            best = (key, CommPolicy(mode=mode, backend=backend,
+                                    n_channels=c, n_stripes=k))
+    return best[1], best[0][0]
+
+
+def grad_payload_bytes(param_bytes: float, bucket_bytes: float,
+                        zero_stage: int, n_layers: int) -> float:
+    """The payload one gradient-path collective actually carries: a fusion
+    bucket under ZeRO-1 (``bucketed_all_reduce_time``'s ``b``), one layer's
+    shard under ZeRO-3 (``zero3_comm_time``'s ``per``)."""
+    if zero_stage >= 3:
+        return param_bytes / max(int(n_layers), 1)
+    n_buckets = max(-(-int(param_bytes) // max(int(bucket_bytes), 1)), 1)
+    return param_bytes / n_buckets
+
+
+def policy_table_for(cluster: ClusterSpec, space: SearchSpace = DEFAULT_SPACE,
+                     *, grad_bytes: float | None = None,
+                     bucket_bytes: float = DEFAULT_BUCKET,
+                     zero_stage: int = 1, n_layers: int = 1) -> PolicyTable:
+    """Search the per-op, size-classed policy table for ``cluster``
+    (DESIGN.md §12): every (op, size class) cell gets its own
+    :func:`best_policy`, priced at the class's representative payload —
+    except the class containing the actual gradient-path payload (when
+    ``grad_bytes`` is given), which is priced at that exact size so the
+    table is optimal for the traffic the training step emits.
+
+    Because each cell is an independent argmin over the same space a
+    single-policy candidate draws from, pricing a step under this table is
+    never slower than under any single policy from that space.
+    """
+    actual = None
+    if grad_bytes:
+        actual = grad_payload_bytes(grad_bytes, bucket_bytes, zero_stage,
+                                     n_layers)
+    rows = {}
+    for op in POLICY_OPS:
+        for cls in SIZE_CLASSES:
+            rep = CLASS_REP_BYTES[cls]
+            if actual is not None and size_class(actual) == cls and \
+                    op in ("all_reduce", "all_gather", "reduce_scatter"):
+                rep = actual
+            rows[(op, cls)] = best_policy(op, rep, cluster, space)[0]
+    return PolicyTable.of(rows, default=rows[("all_reduce", "large")])
 
 
 def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
@@ -408,7 +530,47 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
             fits_hbm=hbm <= min(p.chip.hbm_bytes for p in cluster.pods),
             hbm_bytes_per_device=hbm, compute_scale=compute_scale,
             profiles=profiles))
+
+    if space.per_op:
+        # per-op policy-table candidates (DESIGN.md §12): one per
+        # (zero stage, bucket) pair, every (op, size class) at its own
+        # argmin policy — never modeled slower than a single-policy
+        # candidate sharing the (zero, bucket), ties lose to it below.
+        n_layers = request.model.n_layers
+        for zero in zero_stages:
+            buckets = space.bucket_bytes if zero < 3 else (DEFAULT_BUCKET,)
+            for bucket in buckets:
+                table = policy_table_for(
+                    comm_cluster, space, grad_bytes=w.param_bytes,
+                    bucket_bytes=bucket, zero_stage=zero, n_layers=n_layers)
+                if zero >= 3:
+                    comm = sim.zero3_comm_time(w.param_bytes, n_layers,
+                                               comm_cluster, policies=table)
+                else:
+                    comm = sim.bucketed_all_reduce_time(
+                        w.param_bytes, comm_cluster, bucket_bytes=bucket,
+                        policies=table)
+                comm = (1.0 - request.overlap) * request.comm_scale * comm
+                step_s = comp + comm
+                hbm = estimate_hbm_bytes(request, zero, mb)
+                dom = table.resolve("reduce_scatter", grad_payload_bytes(
+                    w.param_bytes, bucket, zero, n_layers))
+                out.append(TrainPlan(
+                    request=request, space=space, plan=hetplan,
+                    mode=dom.mode, backend=dom.backend,
+                    n_channels=dom.n_channels, bucket_bytes=bucket,
+                    zero_stage=zero, n_stripes=dom.n_stripes,
+                    modeled_step_s=step_s, modeled_compute_s=comp,
+                    modeled_comm_s=comm,
+                    modeled_tokens_per_s=(live_tokens / step_s
+                                          if step_s > 0 else 0.0),
+                    fits_hbm=hbm <= min(p.chip.hbm_bytes
+                                        for p in cluster.pods),
+                    hbm_bytes_per_device=hbm, compute_scale=compute_scale,
+                    profiles=profiles, policies=table))
+
     out.sort(key=lambda t: (not t.fits_hbm, t.modeled_step_s,
+                            t.policies is not None,
                             _MODE_ORDER[t.mode], _BACKEND_ORDER[t.backend],
                             t.n_stripes, t.n_channels, t.bucket_bytes,
                             t.zero_stage))
@@ -439,3 +601,27 @@ def autotune(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
     """
     return rank(request, space, profiles=profiles,
                 compute_scale=compute_scale)[0]
+
+
+def autotune_policies(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE,
+                      *, profiles: Sequence[PodProfile] | None = None,
+                      compute_scale: float = 1.0) -> TrainPlan:
+    """The best *per-op policy-table* plan (the ``--policy auto`` entry
+    point, DESIGN.md §12): the top-ranked candidate that carries a
+    :class:`PolicyTable`.
+
+    By construction its modeled step time is ≤ the best single-policy plan
+    of the same frontier (each table cell is the argmin over the space any
+    single policy is drawn from); a single-policy plan only outranks it on
+    an exact tie, where the table degenerates to one policy anyway.  Falls
+    back to the overall best plan when the space disables per-op search.
+
+    Example::
+
+        tp = plan.autotune_policies(req)
+        rc = tp.run_config()            # RunConfig.policies carries the table
+        print(tp.policy_table().summary())
+    """
+    frontier = rank(request, space, profiles=profiles,
+                    compute_scale=compute_scale)
+    return next((t for t in frontier if t.policies is not None), frontier[0])

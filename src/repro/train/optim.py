@@ -95,9 +95,11 @@ def zero1_master_from_params(params, dp_axes):
     return jax.tree.map(one, params)
 
 
-def zero1_step(params, grads, opt, step, rc: RunConfig, cfg: hetccl.HetCCLConfig):
+def zero1_step(params, grads, opt, step, rc: RunConfig, cfg):
     """Full ZeRO-1 step.  grads: full (un-reduced local sums); returns
-    (new_params, new_opt).  Collectives: HetCCL AllReduce + AllGather."""
+    (new_params, new_opt).  Collectives: HetCCL AllReduce + AllGather.
+    ``cfg``: the program's ``repro.comm.Communicator`` (or a legacy
+    ``HetCCLConfig``) — every collective resolves its policy from it."""
     rank, world = dp_rank_and_world(cfg.dp_axes())
     grads = hetccl.tree_all_reduce(grads, cfg)
 
@@ -144,12 +146,13 @@ def zero3_init_opt(params):
             "master": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
 
 
-def zero3_step(params, grads, opt, step, rc: RunConfig,
-               cfg: hetccl.HetCCLConfig, fsdp_leaf_mask):
+def zero3_step(params, grads, opt, step, rc: RunConfig, cfg, fsdp_leaf_mask):
     """grads: fsdp leaves already reduce-scattered over 'data' (the
     fsdp_all_gather adjoint); remaining reduction:
       fsdp leaves      -> AllReduce over 'pod' only (HetCCL cross stage),
-      replicated leaves-> AllReduce over ('data','pod')."""
+      replicated leaves-> AllReduce over ('data','pod').
+    ``cfg``: communicator (or legacy config); the pod-only projection is a
+    ``dataclasses.replace`` like before."""
     pod_cfg = dataclasses.replace(cfg, local_axes=())
     def sync(g, is_fsdp):
         if cfg.pod_axis:
@@ -185,7 +188,7 @@ def global_norm(tree) -> jax.Array:
     return jnp.sqrt(sq)
 
 
-def global_norm_sharded(tree, fsdp_leaf_mask, cfg: hetccl.HetCCLConfig) -> jax.Array:
+def global_norm_sharded(tree, fsdp_leaf_mask, cfg) -> jax.Array:
     """Norm when fsdp leaves are distinct shards per 'data' rank."""
     sq_sharded = jnp.zeros((), jnp.float32)
     sq_repl = jnp.zeros((), jnp.float32)

@@ -24,6 +24,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import comm as comm_mod
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import compat, hetccl
 from repro.core.balance import HetPlan
@@ -34,13 +35,20 @@ from repro.train import optim
 
 @dataclasses.dataclass
 class TrainProgram:
-    """A compiled training program bound to (model, mesh, plan, run config)."""
+    """A compiled training program bound to (model, mesh, plan, run config).
+
+    ``comm`` is the program's :class:`repro.comm.Communicator` (DESIGN.md
+    §12): built from ``rc.policies`` when the planner emitted a per-op
+    table, else the one-row facade compile of ``hcfg`` — every collective
+    in the step dispatches through it.
+    """
 
     model: Model
     mesh: Any
     rc: RunConfig
     plan: HetPlan
     hcfg: hetccl.HetCCLConfig
+    comm: comm_mod.Communicator
     rules: dict
     step_fn: Callable          # jitted: (state, batch) -> (state, metrics)
     init_fn: Callable          # jitted: (key,) -> state
@@ -87,6 +95,19 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         backend=rc.backend, n_stripes=rc.n_stripes)
     hcfg.resolved_mode()        # eager mode/backend/stripe validation (typos
     hcfg.resolved_stripes()     # fail at build, not inside the compiled step)
+    if rc.policies is not None:
+        # planner-emitted per-op policy table (DESIGN.md §12); the table
+        # doesn't tune compression, so a run-level cross_dtype fills every
+        # row that leaves it unset
+        table = rc.policies
+        if rc.cross_dtype:
+            table = table.with_cross_dtype(jnp.dtype(rc.cross_dtype))
+        comm = comm_mod.create(
+            local_axes, pod_axis, table=table,
+            bucket_bytes=rc.bucket_bytes,
+            pipeline_chunk_bytes=rc.pipeline_chunk_bytes)
+    else:
+        comm = comm_mod.from_config(hcfg)   # legacy single-policy facade
     manual_axes = _manual_axes(local_axes, pod_axis)
     rules = make_rules(cfg, mesh, rc.zero_stage)
     ctx = Ctx(rules=rules, manual=True, dp_axes=manual_axes)
@@ -133,10 +154,10 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
 
         if rc.zero_stage >= 3:
             new_params, new_opt, gnorm = optim.zero3_step(
-                params, grads, opt, step, rc, hcfg, fsdp_mask)
+                params, grads, opt, step, rc, comm, fsdp_mask)
         else:
             new_params, new_opt, gnorm = optim.zero1_step(
-                params, grads, opt, step, rc, hcfg)
+                params, grads, opt, step, rc, comm)
         metrics = {"loss": loss_total * inv, "grad_norm": gnorm,
                    "tokens": total_tokens}
         return ({"params": new_params, "opt": new_opt, "step": step + 1}, metrics)
@@ -151,11 +172,12 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
     metric_specs = {"loss": P(), "grad_norm": P(), "tokens": P()}
 
     def step_body_installed(state, batch):
-        # hetccl.current() must reflect this program's config while the body
-        # traces: cfg-free call sites deep in the model (fsdp_all_gather's
-        # adjoint picks its ring backend at trace time, DESIGN.md §10) read
-        # the installed config, not the trainer's explicit hcfg argument.
-        with hetccl.use(hcfg):
+        # hetccl.current() must reflect this program's communicator while
+        # the body traces: cfg-free call sites deep in the model
+        # (fsdp_all_gather's adjoint resolves its ring policy at trace time,
+        # DESIGN.md §10/§12) read the installed communicator, not the
+        # trainer's explicit argument.
+        with hetccl.use(comm):
             return step_body(state, batch)
 
     sm_step = compat.shard_map(
@@ -203,8 +225,8 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
     init_jit = jax.jit(sm_init, out_shardings=state_shardings)
 
     return TrainProgram(model=model, mesh=mesh, rc=rc, plan=plan, hcfg=hcfg,
-                        rules=rules, step_fn=step_jit, init_fn=init_jit,
-                        state_shardings=state_shardings,
+                        comm=comm, rules=rules, step_fn=step_jit,
+                        init_fn=init_jit, state_shardings=state_shardings,
                         batch_sharding=batch_shardings)
 
 

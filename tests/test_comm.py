@@ -1,0 +1,418 @@
+"""repro.comm contract (DESIGN.md §12): per-op, size-classed policy dispatch,
+the legacy HetCCLConfig facade, the typed tacc policy path (no ``**_``
+kwarg swallowing), and the planner's policy-table acceptance invariant."""
+import dataclasses
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.core import collectives as C  # noqa: F401  (registers impls)
+from repro.core import compat, hetccl, tacc
+
+rng = np.random.RandomState(7)
+
+_COLLECTIVE_OPS = ("all_reduce", "all_gather", "reduce_scatter",
+                   "all_to_all", "broadcast", "reduce", "p2p")
+
+
+def run(mesh, fn, x, in_spec, out_spec):
+    sm = compat.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                          axis_names={"pod", "data"}, check_vma=False)
+    return np.asarray(jax.jit(sm)(x))
+
+
+# ---------------------------------------------------------------------------
+# Size classes and table lookup
+# ---------------------------------------------------------------------------
+
+def test_size_class_boundaries_deterministic():
+    """Boundaries belong to the smaller class; defaults are 64KiB / 8MiB."""
+    assert comm.size_class(0) == "small"
+    assert comm.size_class(64 * 1024) == "small"
+    assert comm.size_class(64 * 1024 + 1) == "medium"
+    assert comm.size_class(8 << 20) == "medium"
+    assert comm.size_class((8 << 20) + 1) == "large"
+    # custom bounds follow the same inclusive-upper-edge rule
+    assert comm.size_class(10, bounds=(10, 20)) == "small"
+    assert comm.size_class(11, bounds=(10, 20)) == "medium"
+    assert comm.size_class(21, bounds=(10, 20)) == "large"
+    with pytest.raises(ValueError):
+        comm.size_class(1, bounds=(20, 10))
+
+
+def test_policy_table_lookup_precedence():
+    """Exact (op, class) row > (op, '*') wildcard > table default."""
+    small = comm.CommPolicy(mode="flat")
+    any_ar = comm.CommPolicy(mode="hier", backend="pallas")
+    dflt = comm.CommPolicy(mode="pipelined", n_channels=4)
+    t = comm.PolicyTable.of({("all_reduce", "small"): small,
+                             "all_reduce": any_ar}, default=dflt)
+    assert t.lookup("all_reduce", "small") == small
+    assert t.lookup("all_reduce", "large") == any_ar
+    assert t.lookup("broadcast", "large") == dflt
+    assert t.resolve("all_reduce", 1024) == small
+    assert t.resolve("all_reduce", 1 << 30) == any_ar
+    # normalized rows: construction order never changes identity
+    t2 = comm.PolicyTable.of({"all_reduce": any_ar,
+                              ("all_reduce", "small"): small}, default=dflt)
+    assert t == t2 and hash(t) == hash(t2)
+    with pytest.raises(ValueError):
+        comm.PolicyTable.of({("all_reduce", "tiny"): small})
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        comm.CommPolicy(mode="heir")
+    with pytest.raises(ValueError):
+        comm.CommPolicy(backend="cuda")
+    with pytest.raises(ValueError):
+        comm.CommPolicy(n_stripes=0)
+
+
+# ---------------------------------------------------------------------------
+# Facade contract: legacy HetCCLConfig == one-row table, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_facade_equals_one_row_table(mesh3):
+    cfg = hetccl.HetCCLConfig(mode="pipelined", local_axes=("data",),
+                              pod_axis="pod", n_channels=2, backend="xla")
+    facade = comm.from_config(cfg)
+    explicit = comm.create(("data",), "pod",
+                           table=comm.PolicyTable.single(cfg.to_policy()),
+                           bucket_bytes=cfg.bucket_bytes)
+    assert facade == explicit
+    assert facade.table == cfg.to_table()
+    assert cfg.to_table() == comm.PolicyTable.single(cfg.to_policy())
+    # ... and the compiled collectives are bit-for-bit identical
+    x = rng.randn(4, 64).astype(np.float32)
+    out_cfg = run(mesh3, lambda v: hetccl.all_reduce(v[0], cfg)[None], x,
+                  P(("pod", "data")), P(("pod", "data")))
+    out_comm = run(mesh3, lambda v: hetccl.all_reduce(v[0], facade)[None], x,
+                   P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_array_equal(out_cfg, out_comm)
+    # the facade also compares equal directly (current() legacy pattern)
+    assert facade == cfg
+
+
+def test_auto_mode_resolves_at_creation():
+    """A stored table row is always concrete: "auto" compiles against the
+    communicator's pod axis."""
+    pol = comm.CommPolicy(mode="auto", backend="pallas", n_stripes=4)
+    multi = comm.create(("data",), "pod", policies={"all_reduce": pol})
+    single = comm.create(("data",), None, policies={"all_reduce": pol})
+    assert multi.class_policy("all_reduce", "large").mode == "hier"
+    assert single.class_policy("all_reduce", "large").mode == "flat"
+
+
+def test_xla_backend_collapses_stripes_and_inventory_clamps():
+    """Stripe resolution happens once, at communicator creation: xla rows
+    collapse to 1; pallas rows clamp to the bound inventory's healthy
+    links (transport binding, DESIGN.md §11/§12)."""
+    from repro.core.topology import TPU_V5E
+    from repro.transport.links import LinkInventory
+    xla = comm.create(policies={"all_reduce": comm.CommPolicy(
+        mode="hier", backend="xla", n_stripes=4)})
+    assert xla.class_policy("all_reduce", "large").n_stripes == 1
+    inv = LinkInventory.from_chip(TPU_V5E)        # 4 links
+    inv.mark_down(0)
+    inv.mark_down(1)
+    clamped = comm.create(link_inventory=inv, policies={
+        "all_reduce": comm.CommPolicy(mode="hier", backend="pallas",
+                                      n_stripes=4)})
+    assert clamped.class_policy("all_reduce", "large").n_stripes == 2
+    # topology_slice binds the slowest island's inventory the same way
+    from repro.core.topology import tpu_mixed_fleet
+    cluster = tpu_mixed_fleet(1, 1, 8)
+    c = comm.create(topology_slice=cluster, policies={
+        "all_reduce": comm.CommPolicy(mode="hier", backend="pallas",
+                                      n_stripes=8)})
+    assert c.inventory is not None
+    assert c.class_policy("all_reduce", "large").n_stripes == \
+        len(c.inventory.healthy_links())
+
+
+# ---------------------------------------------------------------------------
+# Per-op routed dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def dispatch_recorder(monkeypatch):
+    """Record (op, resolved variant) of every tacc dispatch."""
+    seen = []
+    orig = tacc.dispatch
+
+    def spy(op, *args, variant=None, policy=None, **kw):
+        seen.append((op, tacc.resolve_variant(op, variant)))
+        return orig(op, *args, variant=variant, policy=policy, **kw)
+
+    monkeypatch.setattr(tacc, "dispatch", spy)
+    return seen
+
+
+def test_mixed_table_routes_each_op(mesh3, dispatch_recorder):
+    """A mixed table (all_reduce=pipelined, broadcast=flat, default hier)
+    routes every op to its declared variant — and stays numerically equal
+    to the native collectives."""
+    c = comm.create(("data",), "pod", policies={
+        "all_reduce": comm.CommPolicy(mode="pipelined", n_channels=2),
+        "broadcast": comm.CommPolicy(mode="flat"),
+    }, default=comm.CommPolicy(mode="hier"))
+    x = rng.randn(4, 32).astype(np.float32)
+
+    def f(v):
+        a = hetccl.all_reduce(v[0], c)
+        b = hetccl.broadcast(v[0], c, root=0)
+        r = hetccl.reduce_scatter(v[0].reshape(-1), c, dim=0)
+        return (a + b)[None], r[None]
+
+    sm = compat.shard_map(f, mesh=mesh3, in_specs=P(("pod", "data")),
+                          out_specs=(P(("pod", "data")), P(("pod", "data"))),
+                          axis_names={"pod", "data"}, check_vma=False)
+    got, _ = jax.jit(sm)(x)
+    got = np.asarray(got)
+    variants = dict(dispatch_recorder)
+    assert variants["all_reduce"] == "pipelined"
+    assert variants["broadcast"] == "flat"
+    assert variants["reduce_scatter"] == "hier"     # table default
+    np.testing.assert_allclose(got[0], x.sum(0) + x[0], rtol=1e-5, atol=1e-5)
+
+
+def test_size_classed_routing_within_one_op(mesh3, dispatch_recorder):
+    """The same op routes differently by payload size class."""
+    c = comm.create(("data",), "pod", bounds=(256, 4096), policies={
+        ("all_reduce", "small"): comm.CommPolicy(mode="flat"),
+        ("all_reduce", "large"): comm.CommPolicy(mode="hier"),
+    })
+    small = rng.randn(4, 8).astype(np.float32)       # 32 B shard <= 256
+    big = rng.randn(4, 2048).astype(np.float32)      # 8 KiB shard > 4096
+
+    def f(v):
+        return hetccl.all_reduce(v[0], c)[None]
+
+    got_s = run(mesh3, f, small, P(("pod", "data")), P(("pod", "data")))
+    assert dispatch_recorder[-1] == ("all_reduce", "flat")
+    got_b = run(mesh3, f, big, P(("pod", "data")), P(("pod", "data")))
+    assert dispatch_recorder[-1] == ("all_reduce", "hier")
+    np.testing.assert_allclose(got_s[0], small.sum(0), rtol=1e-5)
+    np.testing.assert_allclose(got_b[0], big.sum(0), rtol=1e-4, atol=1e-4)
+
+
+def test_install_mixed_table_sets_per_op_registry_defaults():
+    """install() derives each op's registry default from its large-class
+    policy, and nested install/use restore everything (satellite: registry
+    restoration under communicators)."""
+    before = {op: tacc.get_default(op) for op in
+              ("all_reduce", "broadcast", "reduce_scatter")}
+    before_comm = hetccl.current()
+    c = comm.create(("data",), "pod", policies={
+        "all_reduce": comm.CommPolicy(mode="pipelined", n_channels=2),
+        "broadcast": comm.CommPolicy(mode="flat"),
+    }, default=comm.CommPolicy(mode="hier"))
+    hetccl.install(c)
+    try:
+        assert tacc.get_default("all_reduce") == "pipelined"
+        assert tacc.get_default("broadcast") == "flat"
+        assert tacc.get_default("reduce_scatter") == "hier"
+        with hetccl.use(hetccl.HetCCLConfig(mode="flat", pod_axis=None)):
+            assert tacc.get_default("all_reduce") == "flat"
+            assert hetccl.current().pod_axis is None
+        assert tacc.get_default("all_reduce") == "pipelined"
+        assert hetccl.current() == c
+    finally:
+        hetccl.uninstall()
+    assert {op: tacc.get_default(op) for op in before} == before
+    assert hetccl.current() == before_comm
+
+
+# ---------------------------------------------------------------------------
+# TACC typed policy path (satellites: TaccError, locks, no **_ swallowing)
+# ---------------------------------------------------------------------------
+
+def test_get_default_raises_tacc_error():
+    with pytest.raises(tacc.TaccError):
+        tacc.get_default("no_such_op")
+    # TaccError subclasses KeyError, so legacy except-KeyError code survives
+    with pytest.raises(KeyError):
+        tacc.get_default("no_such_op")
+    assert tacc.variants("no_such_op") == []
+    assert "all_reduce" in tacc.table()
+
+
+def test_no_collective_swallows_kwargs_and_policy_fields_declared():
+    """Acceptance: no TACC-registered collective signature contains ``**_``
+    any more, and every declared policy field is a real keyword parameter —
+    the same invariant the CI dispatch-table sanity job asserts."""
+    from repro.comm.policy import CommPolicy
+    policy_fieldnames = {f.name for f in dataclasses.fields(CommPolicy)}
+    for op in _COLLECTIVE_OPS:
+        for variant in tacc.variants(op):
+            fn = tacc.resolve(op, variant)
+            sig = inspect.signature(fn)
+            assert not any(p.kind is p.VAR_KEYWORD
+                           for p in sig.parameters.values()), (op, variant)
+            declared = tacc.policy_fields(op, variant)
+            assert set(declared) <= policy_fieldnames, (op, variant, declared)
+            for f in declared:
+                assert f in sig.parameters, (op, variant, f)
+
+
+def test_dispatch_policy_maps_only_declared_fields(mesh3):
+    """flat_all_to_all declares no policy fields: dispatching it with a
+    pallas/striped policy must not hand it backend/n_stripes kwargs."""
+    pol = comm.CommPolicy(mode="flat", backend="pallas", n_stripes=4)
+    x = rng.randn(4, 4, 3).astype(np.float32)
+
+    def f(v):
+        return tacc.dispatch("all_to_all", v[0], ("data",), "pod",
+                             variant="flat", policy=pol)[None]
+
+    got = run(mesh3, f, x, P(("pod", "data")), P(("pod", "data")))
+    ref = run(mesh3,
+              lambda v: jax.lax.all_to_all(v[0], ("pod", "data"), 0, 0,
+                                           tiled=True)[None],
+              x, P(("pod", "data")), P(("pod", "data")))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Planner integration (acceptance: table <= best single-policy plan)
+# ---------------------------------------------------------------------------
+
+def test_policy_table_plan_prices_leq_best_single_policy():
+    """On the mixed fleet, --plan auto's PolicyTable candidate models <= the
+    best single-policy (PR-4) plan, with >= 2 ops/size-classes resolving to
+    different policies, and planned_step_time reproduces its pricing."""
+    from repro import plan as plan_mod
+    from repro.core import simulator as sim
+    from repro.core.topology import tpu_mixed_fleet
+    from repro.configs import get_config
+
+    req = plan_mod.plan_request(tpu_mixed_fleet(2, 2, 128),
+                                get_config("smollm-135m"), global_batch=256,
+                                seq_len=4096, data_axis=8)
+    frontier = plan_mod.rank(req)
+    single = next(t for t in frontier if t.policies is None)
+    tp = plan_mod.autotune_policies(req)
+    assert tp.policies is not None
+    assert tp.modeled_step_s <= single.modeled_step_s * (1 + 1e-12)
+    assert len(tp.policies.distinct_policies()) >= 2
+    # the table is what run_config carries into the trainer
+    rc = tp.run_config()
+    assert rc.policies == tp.policies == tp.policy_table()
+    # planned_step_time prices each op class under its own policy
+    w = plan_mod.workload_for(req.model, req.seq_len, tp.plan.micro_batch,
+                              tp.zero_stage, req.tensor_parallel())
+    step = sim.planned_step_time(w, req.comm_cluster(), tp.plan,
+                                 bucket_bytes=tp.bucket_bytes,
+                                 n_layers=req.model.n_layers,
+                                 policies=tp.policies)
+    assert step == pytest.approx(tp.modeled_step_s)
+    # a single-policy plan's policy_table() is its one-row facade
+    assert single.policy_table() == comm.PolicyTable.single(
+        comm.CommPolicy(mode=single.mode, backend=single.backend,
+                        n_channels=single.n_channels,
+                        n_stripes=single.n_stripes))
+
+
+def test_all_gather_resolves_at_gathered_payload(mesh3, dispatch_recorder):
+    """Dispatch keys all_gather on the *gathered* buffer (what the wire
+    carries (n-1)/n of, and what the planner tuned the row at), not the
+    input shard — an 8-rank gather of a shard just under the boundary must
+    route the next class up."""
+    # world = 8 on mesh3's ('pod','data')... dp world is 4 (2x2); shard of
+    # 160 B gathers to 640 B -> with bounds (256, 4096) that is "medium"
+    c = comm.create(("data",), "pod", bounds=(256, 4096), policies={
+        ("all_gather", "small"): comm.CommPolicy(mode="flat"),
+        ("all_gather", "medium"): comm.CommPolicy(mode="hier"),
+    })
+    x = rng.randn(4, 40).astype(np.float32)          # 160 B per-rank shard
+
+    def f(v):
+        return hetccl.all_gather(v[0].reshape(-1), c, dim=0)[None]
+
+    got = run(mesh3, f, x, P(("pod", "data")), P(("pod", "data")))
+    assert dispatch_recorder[-1] == ("all_gather", "hier")
+    np.testing.assert_allclose(got[0], x.reshape(-1), rtol=1e-6)
+
+
+def test_policy_table_never_emits_unexecutable_rows():
+    """broadcast / all_to_all implementations declare no backend/n_stripes
+    fields, so their table rows must stay xla/unstriped — a pallas row
+    there would model a schedule the runtime cannot execute."""
+    from repro import plan as plan_mod
+    from repro.core.topology import tpu_mixed_fleet
+    table = plan_mod.policy_table_for(tpu_mixed_fleet(2, 2, 8))
+    for (op, cls), pol in table.rows:
+        if op not in plan_mod.RING_BACKED_OPS:
+            assert pol.backend == "xla" and pol.n_stripes == 1, (op, cls, pol)
+        declared = set()
+        for variant in tacc.variants(op):
+            declared |= set(tacc.policy_fields(op, variant))
+        if pol.backend != "xla" or pol.n_stripes > 1:
+            assert "backend" in declared, (op, cls, pol)
+
+
+def test_with_cross_dtype_fills_unset_rows_only():
+    explicit = comm.CommPolicy(mode="hier", cross_dtype="float16")
+    t = comm.PolicyTable.of({("all_reduce", "small"): explicit},
+                            default=comm.CommPolicy(mode="hier"))
+    t2 = t.with_cross_dtype("bfloat16")
+    assert t2.lookup("all_reduce", "small").cross_dtype == "float16"
+    assert t2.default.cross_dtype == "bfloat16"
+    assert t.default.cross_dtype is None        # original untouched
+
+
+def test_per_op_search_disabled_keeps_legacy_frontier():
+    from repro import plan as plan_mod
+    from repro.core.topology import tpu_multipod
+    from repro.configs import get_config
+    req = plan_mod.plan_request(tpu_multipod(4, 128),
+                                get_config("smollm-135m"), global_batch=256,
+                                seq_len=4096, data_axis=8)
+    space = dataclasses.replace(plan_mod.DEFAULT_SPACE, per_op=False)
+    frontier = plan_mod.rank(req, space)
+    assert all(t.policies is None for t in frontier)
+    assert plan_mod.autotune_policies(req, space).policies is None
+
+
+def test_runconfig_policies_roundtrip_through_trainer(mesh3):
+    """RunConfig.policies -> make_train_program builds the communicator from
+    the table, and a step under it matches the legacy facade program."""
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.core.balance import uniform_plan
+    from repro.data.pipeline import DataPipeline
+    from repro.models import build
+    from repro.train.trainer import make_train_program
+
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    plan = uniform_plan(2, 2, 1)
+    table = comm.PolicyTable.of(
+        {"all_reduce": comm.CommPolicy(mode="pipelined", n_channels=2),
+         "broadcast": comm.CommPolicy(mode="flat")},
+        default=comm.CommPolicy(mode="hier"))
+    rc = RunConfig(zero_stage=1, param_dtype="float32", policies=table)
+    prog = make_train_program(model, mesh3, rc, plan)
+    assert prog.comm.table == comm.create(("data",), "pod",
+                                          table=table).table
+    rc_legacy = RunConfig(zero_stage=1, param_dtype="float32",
+                          collective_mode="hier")
+    prog_legacy = make_train_program(model, mesh3, rc_legacy, plan)
+    key = jax.random.PRNGKey(0)
+    state = prog.init_fn(key)
+    state_l = prog_legacy.init_fn(key)
+    pipe = DataPipeline(seed=0, plan=plan, dp_world=prog.dp_world(),
+                        seq_len=32, vocab=cfg.vocab)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    _, m = prog.step_fn(state, batch)
+    _, m_l = prog_legacy.step_fn(state_l, batch)
+    np.testing.assert_allclose(float(m["loss"]), float(m_l["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m["grad_norm"]),
+                               float(m_l["grad_norm"]), rtol=1e-4)

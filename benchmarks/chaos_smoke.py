@@ -1,0 +1,127 @@
+"""Chaos smoke: kill a pod mid-run and assert the elastic control plane
+recovers with loss bit-identical to an uninterrupted baseline (DESIGN.md
+§13 acceptance, CI `chaos` job).
+
+Matrix:
+  zero3  kill pod1 @ step 4, no checkpoint available
+             -> recovery MUST be checkpointless (replicas cover all shards)
+  zero1  kill pod1 @ step 5, checkpoints every 2 steps
+             -> recovery MUST fall back to the step-4 checkpoint
+  zero3  degrade one link @ step 2
+             -> no rebuild at all (transport failover territory)
+
+In every case the post-recovery loss trajectory must equal — exactly, not
+approximately — a baseline run of the same survivor program from the same
+state, and the pre-fault prefix must equal an uninterrupted full-mesh run.
+
+    PYTHONPATH=src python -m benchmarks.chaos_smoke
+"""
+import os
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import elastic
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.core import compat
+    from repro.core.balance import uniform_plan
+    from repro.data.pipeline import DataPipeline
+    from repro.launch.mesh import cluster_for_mesh
+    from repro.models import build
+    from repro.train import checkpoint as ck
+    from repro.train import ft
+    from repro.train.trainer import make_train_program
+
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    seq = 64
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+    def make_batches(prog):
+        pipe = DataPipeline(seed=0, plan=prog.plan, dp_world=prog.dp_world(),
+                            seq_len=seq, vocab=cfg.vocab)
+        return lambda s: {k: jnp.asarray(v)
+                          for k, v in pipe.batch_at(s).items()}
+
+    def scenario(zero, script, ckpt_every, expect_methods, n_steps=8,
+                 fail_step=None):
+        prog = make_train_program(
+            model, mesh,
+            RunConfig(zero_stage=zero, collective_mode="hier",
+                      learning_rate=1e-3, param_dtype="float32"),
+            uniform_plan(2, 2, 1))
+        cluster = cluster_for_mesh(mesh)
+        with tempfile.TemporaryDirectory() as d:
+            state = prog.init_fn(jax.random.PRNGKey(1))
+            state, report = elastic.run_elastic(
+                prog, state, make_batches, cluster=cluster,
+                ckpt_dir=os.path.join(d, "e"), n_steps=n_steps,
+                script=elastic.parse_script(script), ckpt_every=ckpt_every)
+            assert report.recovery_methods == expect_methods, \
+                (script, report.recovery_methods)
+            assert [h["step"] for h in report.history] == list(range(n_steps))
+
+            # pre-fault prefix == uninterrupted full-mesh run, bit for bit
+            truth = prog.init_fn(jax.random.PRNGKey(1))
+            cut = fail_step if fail_step is not None else n_steps
+            truth, hist_full = ft.run_supervised(
+                prog.step_fn, truth, make_batches(prog),
+                ckpt_dir=os.path.join(d, "t"), ckpt_every=10 * n_steps,
+                n_steps=cut, state_shardings=prog.state_shardings)
+            prefix = min(cut, (report.recoveries[0].step
+                               if report.recoveries else n_steps))
+            for h_e, h_f in zip(report.history[:prefix], hist_full):
+                assert h_e["loss"] == h_f["loss"], (h_e, h_f)
+
+            if not report.recoveries:
+                return report
+
+            # post-recovery == baseline from the same state on the same
+            # survivor program, bit for bit
+            sprog = report.final_prog
+            rec = report.recoveries[0]
+            if rec.method == "checkpointless":
+                host, missing = elastic.assemble_from_survivors(truth, [])
+                assert not missing
+                base = ck.place_tree(host, sprog.abstract_state(),
+                                     sprog.state_shardings)
+            else:
+                base = ck.restore(os.path.join(d, "e"), rec.step,
+                                  sprog.abstract_state(),
+                                  sprog.state_shardings)
+            _, hist_cont = ft.run_supervised(
+                sprog.step_fn, base, make_batches(sprog),
+                ckpt_dir=os.path.join(d, "c"), ckpt_every=10 * n_steps,
+                n_steps=n_steps, start_step=rec.step,
+                state_shardings=sprog.state_shardings)
+            got = [h["loss"] for h in report.history[rec.step:]]
+            want = [h["loss"] for h in hist_cont]
+            assert got == want, ("recovered trajectory diverged",
+                                 got, want)
+            return report
+
+    r = scenario(3, "kill:pod1@4", ckpt_every=50,
+                 expect_methods=["checkpointless"], fail_step=4)
+    print(f"chaos zero3 kill: checkpointless recovery at step "
+          f"{r.recoveries[0].step}, loss bit-identical to baseline")
+    r = scenario(1, "kill:pod1@5", ckpt_every=2,
+                 expect_methods=["checkpoint"], fail_step=5)
+    print(f"chaos zero1 kill: checkpoint fallback to step "
+          f"{r.recoveries[0].step} "
+          f"({len(r.recoveries[0].missing)} uncovered leaves), "
+          f"loss bit-identical to baseline")
+    r = scenario(3, "degrade:pod0.1x0.25@2", ckpt_every=50,
+                 expect_methods=[], n_steps=4)
+    assert [e.kind for e in r.events] == ["link-degraded"]
+    print("chaos link degrade: in-epoch, no rebuild, run completed")
+    print("chaos smoke OK")
+
+
+if __name__ == "__main__":
+    main()

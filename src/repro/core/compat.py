@@ -76,15 +76,19 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
-def make_mesh(shape, axis_names, *, axis_types: str = "auto"):
+def make_mesh(shape, axis_names, *, axis_types: str = "auto", devices=None):
     """``jax.make_mesh`` with uniform axis types where supported.
 
     axis_types: "auto" | "explicit" — ignored on jax versions without typed
     mesh axes (all axes behave as untyped/auto there).
+    devices: explicit device list to build the mesh over (the elastic
+    survivor-mesh path, ``repro.elastic``, DESIGN.md §13): the mesh uses
+    exactly these devices, never the default first-N enumeration.
     """
+    kw = {} if devices is None else {"devices": list(devices)}
     if HAS_AXIS_TYPES:
         from jax.sharding import AxisType
         t = AxisType.Explicit if axis_types == "explicit" else AxisType.Auto
         return jax.make_mesh(tuple(shape), tuple(axis_names),
-                             axis_types=(t,) * len(tuple(axis_names)))
-    return jax.make_mesh(tuple(shape), tuple(axis_names))
+                             axis_types=(t,) * len(tuple(axis_names)), **kw)
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kw)

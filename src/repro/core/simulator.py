@@ -531,6 +531,44 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
     return compute_scale * comp + (1.0 - overlap) * comm_scale * comm
 
 
+# Rebuild-epoch cost constants (repro.elastic, DESIGN.md §13).  Control-plane
+# terms are fleet-scale estimates, not per-chip physics: detection waits out
+# the heartbeat timeout, the re-plan is a numpy search on a login core, and
+# communicator (re)creation is per-pair alpha setup.
+REBUILD_CONTROL_S = 0.5          # replan + communicator-table compile
+CKPT_DISK_BW = 2e9               # bytes/s restore read from shared storage
+
+
+def rebuild_time(cluster: ClusterSpec, state_bytes: float, *,
+                 checkpointless: bool = True, detect_s: float = 5.0,
+                 disk_bw: float = CKPT_DISK_BW) -> float:
+    """Modeled seconds a membership-change epoch costs (DESIGN.md §13).
+
+    The elastic loop is detect -> rebuild -> re-plan -> recover; the first
+    three are control-plane (``detect_s`` heartbeat timeout +
+    :data:`REBUILD_CONTROL_S`), and recovery is dominated by moving
+    ``state_bytes`` of optimizer/param state onto the new mesh:
+
+    * checkpointless: shards gather from live peers over the surviving
+      fabric — bounded by the slowest endpoint (paper §5.2), exactly the
+      bandwidth every cross-island collective already pays;
+    * checkpoint fallback: the same re-place traffic *plus* reading the
+      checkpoint from shared storage at ``disk_bw`` first — strictly
+      costlier for any state size, which is why the recovery path prefers
+      checkpointless whenever ZeRO replication covers every shard.
+
+    ``state_bytes``: bytes that must land on the new mesh (full logical
+    state for a pod join, the dead pod's re-placed share for a loss —
+    caller's choice; only relative pricing matters to the control plane).
+    """
+    bw = cluster.slowest_endpoint_bw()
+    alpha = cluster.inter_pod_alpha * max(len(cluster.pods) - 1, 1)
+    t = detect_s + REBUILD_CONTROL_S + alpha + state_bytes / bw
+    if not checkpointless:
+        t += state_bytes / disk_bw
+    return t
+
+
 def throughput_tokens_per_s(workload: TrainWorkload, cluster: ClusterSpec,
                             plan: HetPlan, mode: str = "auto",
                             overlap: float = 0.0,

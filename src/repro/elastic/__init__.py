@@ -1,0 +1,44 @@
+"""repro.elastic: pod-loss survival without a job restart (DESIGN.md §13).
+
+The fault-domain control plane that closes the detect -> rebuild -> re-plan
+-> recover loop in one place:
+
+    detect.py      link health + step heartbeats -> typed PodEvents
+    membership.py  epoch state machine (RUNNING -> DRAINING -> REBUILDING)
+    recover.py     checkpointless ZeRO resharding from surviving replicas
+    chaos.py       deterministic fault injector + the elastic run loop
+
+Quick start::
+
+    from repro import elastic
+    script = elastic.parse_script("kill:pod1@3")
+    state, report = elastic.run_elastic(
+        prog, state, make_batches, cluster=cluster, script=script,
+        ckpt_dir=ckpt_dir, n_steps=10, train_plan=tp)
+    assert report.recovery_methods  # "checkpointless" under ZeRO-3
+"""
+from repro.elastic.chaos import (ChaosAction, ChaosScript, ElasticReport,
+                                 MembershipSignal, PodJoinSignal,
+                                 PodLostError, parse_script, run_elastic)
+from repro.elastic.detect import (EVENT_LINK_DEGRADED, EVENT_LINK_RECOVERED,
+                                  EVENT_POD_DEAD, EVENT_POD_JOINED,
+                                  FailureDetector, HeartbeatMonitor, PodEvent,
+                                  dead_pods)
+from repro.elastic.membership import (DRAINING, REBUILDING, RUNNING,
+                                      Membership, MembershipError,
+                                      RebuildResult)
+from repro.elastic.recover import (IncompleteCoverage, RecoveryResult,
+                                   assemble_from_survivors, pod_devices,
+                                   recover_state, survivor_mesh)
+
+__all__ = [
+    "ChaosAction", "ChaosScript", "ElasticReport", "MembershipSignal",
+    "PodJoinSignal", "PodLostError", "parse_script", "run_elastic",
+    "EVENT_LINK_DEGRADED", "EVENT_LINK_RECOVERED", "EVENT_POD_DEAD",
+    "EVENT_POD_JOINED", "FailureDetector", "HeartbeatMonitor", "PodEvent",
+    "dead_pods",
+    "DRAINING", "REBUILDING", "RUNNING", "Membership", "MembershipError",
+    "RebuildResult",
+    "IncompleteCoverage", "RecoveryResult", "assemble_from_survivors",
+    "pod_devices", "recover_state", "survivor_mesh",
+]

@@ -1,0 +1,296 @@
+"""Deterministic chaos harness + the elastic run loop (DESIGN.md §13).
+
+:class:`ChaosScript` injects faults at scripted steps — kill a pod (all its
+links down), degrade or flap a single link, revive a pod — by mutating the
+same shared :class:`~repro.transport.links.LinkInventory` objects the
+transport layer and :class:`~repro.elastic.detect.FailureDetector` watch.
+Nothing here is random: the same script against the same seed produces the
+same event stream, which is what lets the chaos tests assert *bit-identical*
+loss continuation against an uninterrupted baseline.
+
+:func:`run_elastic` is the epoch-segmented supervisor around
+:func:`repro.train.ft.run_supervised`:
+
+    segment (epoch k) --PodLost/PodJoin--> detector.poll -> Membership
+        -> survivor mesh + rebuilt program -> recover_state
+        -> segment (epoch k+1, ``start_step`` = recovered step)
+
+Link-level faults never leave the segment (transport failover territory);
+membership faults raise out of the step loop — deliberately *not* in
+``run_supervised``'s ``retryable`` tuple — and drive one full epoch
+transition before the loop resumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.elastic import recover as recover_mod
+from repro.elastic.detect import FailureDetector, PodEvent
+from repro.elastic.membership import Membership, RebuildResult
+
+OP_KILL = "kill"
+OP_REVIVE = "revive"
+OP_DEGRADE = "degrade"
+OP_DOWN = "down"
+OP_UP = "up"
+OPS = (OP_KILL, OP_REVIVE, OP_DEGRADE, OP_DOWN, OP_UP)
+
+
+class MembershipSignal(RuntimeError):
+    """Control-flow escape from the step loop: the detector saw membership
+    events at ``step``.  Carries the events; the elastic loop catches it."""
+
+    def __init__(self, step: int, events: list[PodEvent]):
+        self.step = step
+        self.events = list(events)
+        super().__init__(f"membership change at step {step}: "
+                         + ", ".join(f"{e.kind}:{e.pod}" for e in events))
+
+
+class PodLostError(MembershipSignal):
+    """A pod died mid-run (the chaos kill, or a real all-links-down)."""
+
+
+class PodJoinSignal(MembershipSignal):
+    """A pod (re)joined mid-run."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosAction:
+    """One scripted fault: at ``step``, apply ``op`` to ``pod`` (and
+    optionally one ``link`` of it, at ``factor`` of nominal bandwidth)."""
+
+    step: int
+    op: str
+    pod: str
+    link: int | None = None
+    factor: float | None = None
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown chaos op {self.op!r}; expected "
+                             f"one of {OPS}")
+        if self.op == OP_DEGRADE and (self.link is None or self.factor is None):
+            raise ValueError("degrade needs a link index and a factor")
+        if self.op in (OP_DOWN, OP_UP) and self.link is None:
+            raise ValueError(f"{self.op} needs a link index")
+
+
+class ChaosScript:
+    """An ordered fault schedule, applied against a cluster's inventories."""
+
+    def __init__(self, actions: list[ChaosAction]):
+        self.actions = sorted(actions, key=lambda a: a.step)
+
+    def at(self, step: int) -> list[ChaosAction]:
+        return [a for a in self.actions if a.step == step]
+
+    def apply(self, cluster, step: int) -> list[ChaosAction]:
+        """Mutate ``cluster``'s link inventories per the actions scheduled
+        at ``step``; returns the applied actions."""
+        applied = self.at(step)
+        by_name = {p.name: p for p in cluster.pods}
+        for a in applied:
+            inv = cluster.inventory(by_name[a.pod])
+            if a.op == OP_KILL:
+                for link in inv.links:
+                    inv.mark_down(link.index)
+            elif a.op == OP_REVIVE:
+                for link in inv.links:
+                    inv.mark_up(link.index)
+            elif a.op == OP_DEGRADE:
+                inv.mark_degraded(a.link, a.factor)
+            elif a.op == OP_DOWN:
+                inv.mark_down(a.link)
+            else:
+                inv.mark_up(a.link)
+        return applied
+
+
+def parse_script(spec: str) -> ChaosScript:
+    """Parse the ``--chaos`` flag grammar into a :class:`ChaosScript`.
+
+    Grammar (';'-separated actions)::
+
+        kill:POD@STEP            all links of POD down at STEP
+        revive:POD@STEP          all links of POD back up
+        degrade:POD.LINKxFRAC@STEP   one link at FRAC of nominal bw
+        down:POD.LINK@STEP       one link down
+        up:POD.LINK@STEP         one link back up
+
+    Example: ``"degrade:pod0.1x0.25@2;kill:pod1@4;revive:pod1@8"``.
+    """
+    actions = []
+    for part in filter(None, (s.strip() for s in spec.split(";"))):
+        try:
+            head, step_s = part.rsplit("@", 1)
+            op, target = head.split(":", 1)
+            link, factor = None, None
+            if op == OP_DEGRADE:
+                target, factor_s = target.rsplit("x", 1)
+                factor = float(factor_s)
+            if "." in target and op in (OP_DEGRADE, OP_DOWN, OP_UP):
+                target, link_s = target.rsplit(".", 1)
+                link = int(link_s)
+            actions.append(ChaosAction(step=int(step_s), op=op, pod=target,
+                                       link=link, factor=factor))
+        except (ValueError, TypeError) as e:
+            raise ValueError(f"bad chaos action {part!r}: {e}") from e
+    return ChaosScript(actions)
+
+
+@dataclasses.dataclass
+class ElasticReport:
+    """What one elastic run did: merged per-step metric history (a step
+    replayed after a checkpoint fallback keeps its *latest* record),
+    segment boundaries, the detector's event stream, each epoch's
+    :class:`RebuildResult` and recovery method."""
+
+    history: list[dict]
+    segments: list[dict]
+    events: list[PodEvent]
+    rebuilds: list[RebuildResult]
+    recoveries: list[recover_mod.RecoveryResult]
+    final_prog: object = None   # the TrainProgram of the last epoch — the
+                                # handle a caller keeps training with
+
+    @property
+    def recovery_methods(self) -> list[str]:
+        return [r.method for r in self.recoveries]
+
+
+def run_elastic(prog, state, make_batches: Callable, *, cluster,
+                ckpt_dir: str, n_steps: int, script: ChaosScript | None = None,
+                train_plan=None, detector: FailureDetector | None = None,
+                ckpt_every: int = 50, state_bytes: float = 0.0,
+                max_restarts: int = 3, backoff_base: float = 0.0):
+    """Run ``n_steps`` surviving membership changes without a job restart.
+
+    Args:
+        prog: the :class:`~repro.train.trainer.TrainProgram` on the full
+            mesh.  ``cluster``'s pod order must match the mesh's 'pod' axis
+            (as :func:`repro.launch.mesh.cluster_for_mesh` builds it).
+        state: initial (or resumed) train state on ``prog.mesh``.
+        make_batches: ``prog -> (step -> batch)`` factory — rebuilt per
+            epoch so batches match the re-planned program's layout.  Must be
+            deterministic in ``step`` (the bit-exact-continuation contract).
+        script: optional :class:`ChaosScript` injecting faults; omit it to
+            run with detection armed but no injected failures.
+        train_plan: the incumbent autotuner plan; enables the full
+            ``replan_auto`` path on rebuild (fresh shares *and* policies).
+        detector: optional preconfigured :class:`FailureDetector` (e.g.
+            with a heartbeat monitor); defaults to link-health only.
+    Returns:
+        ``(final_state, ElasticReport)``.
+    """
+    from repro.train import ft, trainer as trainer_mod
+
+    detector = detector or FailureDetector(cluster)
+    membership = Membership(cluster, train_plan=train_plan, plan=prog.plan,
+                            detector=detector)
+    full_mesh = prog.mesh       # entry mesh holds every pod's devices
+    by_step: dict[int, dict] = {}
+    segments: list[dict] = []
+    rebuilds: list[RebuildResult] = []
+    recoveries: list[recover_mod.RecoveryResult] = []
+    step, epoch = 0, 0
+
+    while step < n_steps:
+        seg_start = step
+        batches = make_batches(prog)
+        members = {p.name for p in membership.cluster.pods}
+
+        def seg_batches(s, _b=batches, _members=members):
+            if script is not None:
+                script.apply(cluster, s)
+            events = detector.poll(step=s)
+            changes = [e for e in events if e.membership_change]
+            if changes:
+                if any(e.kind == "pod-dead" and e.pod in _members
+                       for e in changes):
+                    raise PodLostError(s, changes)
+                raise PodJoinSignal(s, changes)
+            return _b(s)
+
+        def beat_all(s, _rec, _members=members):
+            by_step[s] = _rec
+            if detector.heartbeat is not None:
+                for name in _members:
+                    detector.heartbeat.beat(name, s)
+
+        # step_fn donates its input state, so the state this scope holds is
+        # deleted after the segment's first step — stash each step's output
+        # so recovery reads the *post-last-completed-step* state, not a
+        # donated buffer
+        latest = {"state": state}
+
+        def seg_step(st, batch, _fn=prog.step_fn):
+            new_st, metrics = _fn(st, batch)
+            latest["state"] = new_st
+            return new_st, metrics
+
+        try:
+            state, _ = ft.run_supervised(
+                seg_step, state, seg_batches, ckpt_dir=ckpt_dir,
+                ckpt_every=ckpt_every, n_steps=n_steps,
+                state_shardings=prog.state_shardings, start_step=step,
+                max_restarts=max_restarts, backoff_base=backoff_base,
+                metrics_cb=beat_all)
+            segments.append({"epoch": epoch, "start": seg_start,
+                             "end": n_steps})
+            step = n_steps
+        except MembershipSignal as sig:
+            state = latest["state"]
+            segments.append({"epoch": epoch, "start": seg_start,
+                             "end": sig.step})
+            result = None
+            for ev in sig.events:
+                if ev.epoch < membership.epoch:
+                    # same-poll concurrent event, observed before an earlier
+                    # event of this batch bumped the epoch — not stale
+                    ev = dataclasses.replace(ev, epoch=membership.epoch)
+                r = membership.on_event(ev, state_bytes)
+                result = r or result
+            if result is None:      # duplicate events, nothing changed
+                step = sig.step
+                continue
+            rebuilds.append(result)
+            old_mesh = prog.mesh
+            new_mesh = _member_mesh(full_mesh, cluster,
+                                    membership.cluster.pods)
+            rc = (result.train_plan.run_config(prog.rc)
+                  if result.train_plan is not None else prog.rc)
+            prog = trainer_mod.rebuild_program(prog, new_mesh, rc=rc,
+                                               plan=result.plan)
+            alive = set(new_mesh.devices.ravel())
+            dead = [d for d in old_mesh.devices.ravel() if d not in alive]
+            rec = recover_mod.recover_state(state, sig.step, prog, dead,
+                                            ckpt_dir=ckpt_dir)
+            recoveries.append(rec)
+            state, step, epoch = rec.state, rec.step, membership.epoch
+
+    history = [by_step[s] for s in sorted(by_step)]
+    return state, ElasticReport(history=history, segments=segments,
+                                events=list(detector.events),
+                                rebuilds=rebuilds, recoveries=recoveries,
+                                final_prog=prog)
+
+
+def _member_mesh(full_mesh, full_cluster, member_pods):
+    """Mesh for the current membership, carved from the *original* full
+    mesh so a revived pod gets its old devices back."""
+    import numpy as np
+
+    from repro.core import compat
+    names = {p.name for p in member_pods}
+    keep = [i for i, p in enumerate(full_cluster.pods) if p.name in names]
+    axis = full_mesh.axis_names.index("pod")
+    devs = np.take(full_mesh.devices, keep, axis=axis)
+    if devs.shape[axis] == 1:
+        devs = np.squeeze(devs, axis=axis)
+        axis_names = tuple(n for n in full_mesh.axis_names if n != "pod")
+    else:
+        axis_names = tuple(full_mesh.axis_names)
+    return compat.make_mesh(devs.shape, axis_names,
+                            devices=list(devs.ravel()))

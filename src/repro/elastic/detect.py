@@ -1,0 +1,201 @@
+"""Failure detection: link health aggregated to pod level, step heartbeats,
+typed membership events (DESIGN.md §13).
+
+The transport layer already makes *links* first-class (``transport.links``:
+up / degraded / down per NIC), and the supervised loop already times steps.
+What was missing is the classification layer a fleet control plane acts on:
+
+  * :class:`HeartbeatMonitor` — per-pod step heartbeats with a configurable
+    timeout and a registration/revival grace period (Holmes-style liveness:
+    a pod that stops completing steps is dead even if its NICs still ack);
+  * :class:`FailureDetector` — polls both signals over the fleet's
+    :class:`~repro.core.topology.ClusterSpec` inventories and emits typed
+    :class:`PodEvent`\\ s on *transitions* only (no event storms):
+
+      - ``link-degraded``  -> transport failover territory (restripe,
+        re-price; numerics unaffected, DESIGN.md §11);
+      - ``link-recovered`` -> the inverse transition, logged for re-pricing;
+      - ``pod-dead``       -> membership change (drain, rebuild, re-plan,
+        recover — ``elastic.membership``);
+      - ``pod-joined``     -> membership change in the other direction.
+
+Every event carries the membership *epoch* it was observed in, so a late
+event from a previous epoch is recognizable as stale.  Pure stdlib — the
+detector must run on a login node next to the numpy-only planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+from repro.transport.links import LINK_UP
+
+EVENT_LINK_DEGRADED = "link-degraded"
+EVENT_LINK_RECOVERED = "link-recovered"
+EVENT_POD_DEAD = "pod-dead"
+EVENT_POD_JOINED = "pod-joined"
+MEMBERSHIP_EVENTS = frozenset({EVENT_POD_DEAD, EVENT_POD_JOINED})
+
+# Pod-level health classifications the detector aggregates link state into.
+POD_UP = "up"
+POD_DEGRADED = "degraded"
+POD_DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class PodEvent:
+    """One classified health transition of one pod.
+
+    kind:   one of the EVENT_* constants above.
+    pod:    the island's name (``PodSpec.name``).
+    epoch:  membership epoch the event was observed in (stale-event fence).
+    step:   training step at observation time (for chaos scripts / logs).
+    detail: free-form cause ("links 0,2 down", "heartbeat timeout", ...).
+    """
+
+    kind: str
+    pod: str
+    epoch: int
+    step: int
+    detail: str = ""
+
+    @property
+    def membership_change(self) -> bool:
+        """True for the events the epoch state machine must act on."""
+        return self.kind in MEMBERSHIP_EVENTS
+
+
+class HeartbeatMonitor:
+    """Step-heartbeat liveness with timeout + grace (DESIGN.md §13).
+
+    A pod beats once per completed step (:meth:`beat`); :meth:`expired`
+    flags pods silent for longer than ``timeout_s``.  ``grace_s`` suspends
+    the timeout after registration or revival (compile + checkpoint load
+    legitimately stall the first beats).  The clock is injectable so chaos
+    tests are deterministic.
+    """
+
+    def __init__(self, timeout_s: float = 30.0, grace_s: float = 60.0,
+                 clock=time.monotonic):
+        if timeout_s <= 0:
+            raise ValueError(f"timeout_s must be > 0, got {timeout_s}")
+        self.timeout_s = timeout_s
+        self.grace_s = grace_s
+        self._clock = clock
+        self._last_beat: dict[str, float] = {}
+        self._last_step: dict[str, int] = {}
+        self._registered: dict[str, float] = {}
+
+    def register(self, pod: str, now: float | None = None) -> None:
+        """(Re-)arm liveness for ``pod``; starts the grace window."""
+        now = self._clock() if now is None else now
+        self._registered[pod] = now
+        self._last_beat.pop(pod, None)
+        self._last_step.pop(pod, None)
+
+    def beat(self, pod: str, step: int, now: float | None = None) -> None:
+        now = self._clock() if now is None else now
+        if pod not in self._registered:
+            self._registered[pod] = now
+        self._last_beat[pod] = now
+        self._last_step[pod] = step
+
+    def last_step(self, pod: str) -> int | None:
+        return self._last_step.get(pod)
+
+    def expired(self, pod: str, now: float | None = None) -> bool:
+        """True when ``pod`` is registered and silent past timeout (grace
+        window excepted)."""
+        if pod not in self._registered:
+            return False
+        now = self._clock() if now is None else now
+        anchor = self._last_beat.get(pod)
+        if anchor is None:
+            anchor = self._registered[pod]
+            return now - anchor > self.grace_s + self.timeout_s
+        if now - self._registered[pod] <= self.grace_s:
+            return False
+        return now - anchor > self.timeout_s
+
+
+class FailureDetector:
+    """Aggregate link health + heartbeats into :class:`PodEvent` streams.
+
+    Owns the *fleet* view: it polls the original cluster's (mutable,
+    shared) link inventories — the same objects the transport layer and
+    chaos injector mutate — so a NIC marked down anywhere is visible here
+    without any plumbing.  The active membership lives in
+    ``elastic.membership``; the detector keeps watching dead pods so a
+    revived one surfaces as ``pod-joined``.
+
+    ``epoch`` is advanced by the membership layer after each rebuild
+    (``Membership.attach_detector``); events are stamped with it.
+    """
+
+    def __init__(self, cluster, heartbeat: HeartbeatMonitor | None = None,
+                 epoch: int = 0):
+        self.cluster = cluster
+        self.heartbeat = heartbeat
+        self.epoch = epoch
+        self.events: list[PodEvent] = []
+        self._last: dict[str, str] = {p.name: POD_UP for p in cluster.pods}
+
+    # -- classification -----------------------------------------------------
+
+    def classify(self, pod, now: float | None = None) -> tuple[str, str]:
+        """(pod-health, cause) from link aggregation + heartbeat."""
+        inv = self.cluster.inventory(pod)
+        if inv.n_healthy() == 0:
+            return POD_DEAD, "all links down"
+        if self.heartbeat is not None and self.heartbeat.expired(pod.name, now):
+            return POD_DEAD, "heartbeat timeout"
+        impaired = [l.index for l in inv.links
+                    if inv.health(l.index).state != LINK_UP]
+        if impaired:
+            return POD_DEGRADED, "links " + ",".join(map(str, impaired))
+        return POD_UP, ""
+
+    def poll(self, step: int = 0, now: float | None = None) -> list[PodEvent]:
+        """Classify every pod; emit events for *transitions* since the last
+        poll (steady state emits nothing).  Returned events are also
+        appended to :attr:`events`."""
+        out: list[PodEvent] = []
+        for pod in self.cluster.pods:
+            health, cause = self.classify(pod, now)
+            prev = self._last.get(pod.name, POD_UP)
+            if health == prev:
+                continue
+            self._last[pod.name] = health
+            if health == POD_DEAD:
+                kind = EVENT_POD_DEAD
+            elif prev == POD_DEAD:
+                # back from the dead: links restored / heartbeats resumed
+                kind = EVENT_POD_JOINED
+                cause = cause or "links restored"
+            elif health == POD_DEGRADED:
+                kind = EVENT_LINK_DEGRADED
+            else:
+                kind = EVENT_LINK_RECOVERED
+            out.append(PodEvent(kind=kind, pod=pod.name, epoch=self.epoch,
+                                step=step, detail=cause))
+        self.events.extend(out)
+        return out
+
+    def notice_join(self, pod_name: str, step: int = 0) -> PodEvent:
+        """Externally announced join (scheduler handed us a replacement pod
+        that was never part of this detector's fleet view)."""
+        ev = PodEvent(kind=EVENT_POD_JOINED, pod=pod_name, epoch=self.epoch,
+                      step=step, detail="scheduler join")
+        self._last[pod_name] = POD_UP
+        self.events.append(ev)
+        return ev
+
+
+def dead_pods(events: Iterable[PodEvent]) -> list[str]:
+    """Pods whose most recent membership event is ``pod-dead``."""
+    state: dict[str, str] = {}
+    for ev in events:
+        if ev.membership_change:
+            state[ev.pod] = ev.kind
+    return [p for p, k in state.items() if k == EVENT_POD_DEAD]

@@ -1,0 +1,133 @@
+"""Checkpointless recovery: reshard optimizer state from surviving replicas
+(DESIGN.md §13).
+
+The insight the elastic path exploits: ZeRO replication often *already*
+holds every shard of the train state on the surviving pods.  With ZeRO-3
+(params and optimizer sharded over intra-pod 'data' only, replicated across
+pods) a pod loss destroys replicas but no unique data — the state can be
+gathered from live peers and re-placed on the survivor mesh without touching
+a checkpoint, turning recovery cost from ``state_bytes / disk_bw`` into an
+inter-pod gather (``simulator.rebuild_time``).  With ZeRO-1 the flat 1/W
+optimizer shards span ('pod','data'): a pod loss destroys unique shards, and
+recovery *must* fall back to the checkpoint chain.
+
+The static prediction is :meth:`TrainProgram.shard_coverage` (a leaf
+survives iff its sharding never splits the pod axis); the ground truth is
+:func:`assemble_from_survivors`, which walks each leaf's addressable shards,
+drops those living on dead devices, and checks the surviving index regions
+tile the full logical array.  Re-placement onto the new mesh reuses
+:func:`repro.train.checkpoint.place_tree` — the same resharding machinery
+restores use, applied to in-memory trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import compat
+from repro.train import checkpoint as ckpt_mod
+
+
+class IncompleteCoverage(RuntimeError):
+    """Surviving replicas do not tile some leaf's full logical array —
+    checkpointless recovery is impossible; fall back to the checkpoint."""
+
+    def __init__(self, missing: list[str]):
+        self.missing = list(missing)
+        super().__init__(
+            f"{len(self.missing)} leaves lost shards with the dead pod "
+            f"(first: {self.missing[0] if self.missing else '?'})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryResult:
+    """state: the recovered tree, placed under the new program's shardings.
+    method: "checkpointless" (gathered from live peers) or "checkpoint".
+    step:   the step the state corresponds to — unchanged for
+            checkpointless, the restored checkpoint's step for fallback.
+    missing: leaf paths that lacked coverage (empty on the checkpointless
+            path; the reason for the fallback otherwise)."""
+
+    state: object
+    method: str
+    step: int
+    missing: tuple[str, ...] = ()
+
+
+def pod_devices(mesh, pod_index: int) -> list:
+    """The devices of one pod (island) of a mesh with a 'pod' axis."""
+    axis = mesh.axis_names.index("pod")
+    return list(np.take(mesh.devices, pod_index, axis=axis).ravel())
+
+
+def survivor_mesh(mesh, pod_index: int):
+    """The mesh minus one pod.  With one pod left the 'pod' axis is
+    squeezed away — the survivor program compiles with no pod axis and the
+    communicator degrades to flat, exactly as ``comm.create`` resolves a
+    single-island topology."""
+    axis = mesh.axis_names.index("pod")
+    devs = np.delete(mesh.devices, pod_index, axis=axis)
+    names = tuple(mesh.axis_names)
+    if devs.shape[axis] == 1:
+        devs = np.squeeze(devs, axis=axis)
+        names = names[:axis] + names[axis + 1:]
+    return compat.make_mesh(devs.shape, names, devices=list(devs.ravel()))
+
+
+def assemble_from_survivors(state, dead: list):
+    """Gather full logical host arrays for every leaf, using only shards
+    that live on surviving devices.
+
+    Returns ``(host_flat, missing)``: the full arrays in flat leaf order
+    (leaves with holes are None) and the keystr paths of leaves whose
+    surviving shards do not tile the array.  In a real fleet the per-shard
+    reads are RDMA gathers from live peers; here addressable shards make
+    the same walk exact on the host.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    dead_set = set(dead)
+    host_flat, missing = [], []
+    for kp, leaf in flat:
+        full = np.zeros(leaf.shape, dtype=leaf.dtype)
+        covered = np.zeros(leaf.shape, dtype=bool)
+        for shard in leaf.addressable_shards:
+            if shard.device in dead_set:
+                continue
+            full[shard.index] = np.asarray(shard.data)
+            covered[shard.index] = True
+        if bool(covered.all()):
+            host_flat.append(full)
+        else:
+            host_flat.append(None)
+            missing.append(jax.tree_util.keystr(kp))
+    return host_flat, missing
+
+
+def recover_state(state, step: int, new_prog, dead: list, *,
+                  ckpt_dir: str | None = None,
+                  verify: bool = True) -> RecoveryResult:
+    """Recover the train state onto ``new_prog``'s mesh after losing the
+    devices in ``dead``.
+
+    Tries the checkpointless path first: assemble every leaf from surviving
+    shards of the in-memory ``state`` and re-place under the new program's
+    shardings — recovery resumes from ``step``, *newer* than any checkpoint.
+    On incomplete coverage (ZeRO-1 flat shards, multi-pod-spanning layouts)
+    falls back to :func:`repro.train.checkpoint.restore_latest` into the new
+    mesh, resuming from the checkpoint's step.  No ``ckpt_dir`` means no
+    fallback: :class:`IncompleteCoverage` propagates.
+    """
+    like = new_prog.abstract_state()
+    host_flat, missing = assemble_from_survivors(state, dead)
+    if not missing:
+        placed = ckpt_mod.place_tree(host_flat, like, new_prog.state_shardings)
+        return RecoveryResult(state=placed, method="checkpointless",
+                              step=step, missing=())
+    if ckpt_dir is None:
+        raise IncompleteCoverage(missing)
+    ckpt_step, placed = ckpt_mod.restore_latest(
+        ckpt_dir, like, new_prog.state_shardings, verify=verify)
+    return RecoveryResult(state=placed, method="checkpoint", step=ckpt_step,
+                          missing=tuple(missing))

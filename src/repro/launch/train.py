@@ -54,6 +54,16 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under the elastic control plane "
+                         "(repro.elastic, DESIGN.md §13): failure detection "
+                         "armed, pod loss survived by communicator rebuild "
+                         "+ checkpointless ZeRO recovery instead of a job "
+                         "restart")
+    ap.add_argument("--chaos", default=None,
+                    help="deterministic fault script (implies --elastic), "
+                         "e.g. 'degrade:pod0.1x0.25@2;kill:pod1@4;"
+                         "revive:pod1@8' — see elastic.parse_script")
     args = ap.parse_args()
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -94,6 +104,7 @@ def main():
                    n_stripes=resolve_stripes(args.stripes, args.backend,
                                              mesh),
                    param_dtype="float32" if args.reduced else "bfloat16")
+    tp = None
     if args.plan == "auto":
         from repro import plan as plan_mod
         from repro.launch.mesh import cluster_for_mesh
@@ -152,11 +163,40 @@ def main():
             print(f"step {step:4d}  loss {m['loss']:.4f}  "
                   f"grad_norm {m['grad_norm']:.3f}", flush=True)
 
-    state, hist = ft.run_supervised(
-        prog.step_fn, state, batches, ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every, n_steps=args.steps,
-        state_shardings=prog.state_shardings,
-        monitor=ft.StragglerMonitor(), metrics_cb=log)
+    if args.elastic or args.chaos:
+        from repro import elastic
+        from repro.launch.mesh import cluster_for_mesh
+        cluster = cluster_for_mesh(mesh)
+        script = elastic.parse_script(args.chaos) if args.chaos else None
+        state_bytes = float(sum(l.nbytes for l in jax.tree.leaves(state)))
+
+        def make_batches(p):
+            pipe_p = DataPipeline(seed=args.seed, plan=p.plan,
+                                  dp_world=p.dp_world(), seq_len=args.seq,
+                                  vocab=cfg.vocab)
+            return lambda s: {k: jnp.asarray(v)
+                              for k, v in pipe_p.batch_at(s).items()}
+
+        state, report = elastic.run_elastic(
+            prog, state, make_batches, cluster=cluster,
+            ckpt_dir=args.ckpt_dir, n_steps=args.steps, script=script,
+            train_plan=tp, ckpt_every=args.ckpt_every,
+            state_bytes=state_bytes)
+        for h in report.history:
+            log(h["step"], h)
+        for r, rec in zip(report.rebuilds, report.recoveries):
+            print(f"epoch {r.epoch}: {r.event.kind}:{r.event.pod} at step "
+                  f"{r.event.step} -> pods={[p.name for p in r.cluster.pods]}"
+                  f" recovery={rec.method}@{rec.step} "
+                  f"modeled {r.modeled_checkpointless_s:.2f}s vs ckpt "
+                  f"{r.modeled_checkpoint_s:.2f}s")
+        hist = report.history
+    else:
+        state, hist = ft.run_supervised(
+            prog.step_fn, state, batches, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, n_steps=args.steps,
+            state_shardings=prog.state_shardings,
+            monitor=ft.StragglerMonitor(), metrics_cb=log)
     print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 
 

@@ -101,16 +101,45 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+def _backoff_s(restarts: int, base: float, cap: float, jitter: float) -> float:
+    """Exponential backoff with deterministic jitter.
+
+    ``base * 2^(restarts-1)`` capped at ``cap``, stretched by up to
+    ``jitter`` fraction.  The jitter term is a golden-ratio hash of the
+    restart count — decorrelated across retries (the point of jitter: no
+    thundering herd when every island retries together) yet reproducible,
+    so recovery tests stay deterministic.
+    """
+    delay = min(base * (2.0 ** max(restarts - 1, 0)), cap)
+    frac = (restarts * 0.6180339887498949) % 1.0
+    return delay * (1.0 + jitter * frac)
+
+
 def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
                    ckpt_every: int = 50, n_steps: int = 100,
                    state_shardings=None, fail_at: int | None = None,
-                   max_restarts: int = 3, monitor: StragglerMonitor | None = None,
+                   max_restarts: int = 3,
+                   retryable: tuple[type[BaseException], ...] = (InjectedFailure,),
+                   backoff_base: float = 0.05, backoff_cap: float = 5.0,
+                   backoff_jitter: float = 0.25,
+                   start_step: int | None = None,
+                   monitor: StragglerMonitor | None = None,
                    log_every: int = 10, metrics_cb: Callable | None = None,
                    drift_cb: Callable | None = None):
     """Run ``n_steps`` with checkpointing and automatic restart.
 
     ``batches``: callable step -> batch (deterministic, seekable).
     ``fail_at``: inject one failure at that step (tests the recovery path).
+    ``retryable``: exception types that take the restore-and-retry path —
+    real transient collective failures (a flapped link mid-all-reduce, a
+    preempted host) recover exactly like injected ones.  Anything outside
+    the tuple propagates (pod loss escalates to the elastic control plane,
+    ``repro.elastic``, DESIGN.md §13).  Each retry backs off exponentially
+    (``backoff_base * 2^k`` capped at ``backoff_cap``) with deterministic
+    jitter, bounded by ``max_restarts``.
+    ``start_step``: trust ``(state, start_step)`` and skip the
+    latest-checkpoint auto-resume — the checkpointless elastic recovery
+    entry point, where the in-memory state is *newer* than any checkpoint.
     ``drift_cb``: called as ``drift_cb(step, step_seconds)`` whenever the
     straggler monitor flags drift — the hook the re-planning control plane
     hangs off (kick a profiling run, then :func:`replan_auto` and restart on
@@ -118,11 +147,15 @@ def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
     Returns (final_state, history list of metric dicts).
     """
     history = []
-    start = ckpt_mod.latest_step(ckpt_dir)
-    step = 0
-    if start is not None:
-        state = ckpt_mod.restore(ckpt_dir, start, state, state_shardings)
-        step = start
+    if start_step is not None:
+        step = start_step
+    else:
+        start = ckpt_mod.latest_step(ckpt_dir)
+        step = 0
+        if start is not None:
+            start, state = ckpt_mod.restore_latest(ckpt_dir, state,
+                                                   state_shardings)
+            step = start
     restarts = 0
     injected = {"done": False}
     while step < n_steps:
@@ -146,15 +179,19 @@ def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
             step += 1
             if step % ckpt_every == 0 or step == n_steps:
                 ckpt_mod.save(ckpt_dir, step, state)
-        except InjectedFailure:
+        except retryable:
             restarts += 1
             if restarts > max_restarts:
                 raise
-            last = ckpt_mod.latest_step(ckpt_dir)
-            if last is None:
+            delay = _backoff_s(restarts, backoff_base, backoff_cap,
+                               backoff_jitter)
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                last, state = ckpt_mod.restore_latest(ckpt_dir, state,
+                                                      state_shardings)
+                step = last
+            except FileNotFoundError:
                 step = 0            # restart from scratch (no ckpt yet)
-                continue
-            state = ckpt_mod.restore(ckpt_dir, last, state, state_shardings)
-            step = last
     ckpt_mod.wait_pending()
     return state, history

@@ -66,6 +66,41 @@ class TrainProgram:
             w *= sizes.get(self.hcfg.pod_axis, 1)
         return w
 
+    def shard_coverage(self):
+        """Per-leaf pod-loss survivability: the optim shard coverage map the
+        elastic recovery path consults (``repro.elastic.recover``,
+        DESIGN.md §13).
+
+        A leaf survives losing one pod iff its sharding never splits over
+        the pod axis — every shard then has a replica on each surviving
+        pod.  ZeRO-3 state (params/m/v/master sharded over 'data' only,
+        replicated across pods) is fully covered; ZeRO-1 optimizer shards
+        (flat 1/W over ('pod','data')) are not — pod loss there must fall
+        back to a checkpoint.
+
+        Returns:
+            (mask_tree, all_covered): a bool tree matching the state and
+            its conjunction.
+        """
+        pod = self.hcfg.pod_axis
+
+        def covered(sharding) -> bool:
+            if pod is None:
+                return True                     # no pod axis, nothing to lose
+            for entry in tuple(sharding.spec):
+                axes = (entry,) if isinstance(entry, str) else tuple(entry or ())
+                if pod in axes:
+                    return False
+            return True
+
+        mask = jax.tree.map(covered, self.state_shardings)
+        return mask, all(jax.tree.leaves(mask))
+
+    def abstract_state(self):
+        """Shape/dtype skeleton of the train state (no allocation) — the
+        ``state_like`` of resharding restores onto this program's mesh."""
+        return jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
+
 
 def _dp_axes_of(mesh) -> tuple[tuple[str, ...], str | None]:
     names = set(mesh.axis_names)
@@ -228,6 +263,24 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
                         comm=comm, rules=rules, step_fn=step_jit,
                         init_fn=init_jit, state_shardings=state_shardings,
                         batch_sharding=batch_shardings)
+
+
+def rebuild_program(prog: TrainProgram, mesh, rc: RunConfig | None = None,
+                    plan: HetPlan | None = None,
+                    extra_batch_specs: dict[str, P] | None = None) -> TrainProgram:
+    """Rebuild a program on a new mesh — the elastic membership-change path
+    (``repro.elastic.membership``, DESIGN.md §13).
+
+    Model and non-planned run knobs carry over from ``prog``; pass the
+    re-planned ``rc``/``plan`` from ``ft.replan_auto`` (fresh shares and
+    policy table for the surviving topology).  The new program's collective
+    axes come from the new mesh, so a 1-pod survivor mesh compiles with no
+    pod axis and the communicator degrades to flat exactly as ``comm.create``
+    resolves it.
+    """
+    return make_train_program(prog.model, mesh, rc or prog.rc,
+                              plan or prog.plan,
+                              extra_batch_specs=extra_batch_specs)
 
 
 def _opt_specs(rc: RunConfig, pspecs, manual_axes):

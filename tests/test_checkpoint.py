@@ -106,3 +106,79 @@ def test_straggler_monitor_and_replan():
     new = ft.replan(plan, [PodProfile("a", 3.0), PodProfile("b", 1.0)])
     assert new.micro_per_pod == (6, 2)
     assert new.total_micro == plan.total_micro
+
+
+def test_corrupt_leaf_detected_and_fallback(tmp_path, mesh3):
+    """A leaf that rots on disk fails its manifest crc: restore raises the
+    typed error, restore_latest falls back to the previous retained step."""
+    prog = _prog(mesh3)
+    state = prog.init_fn(jax.random.PRNGKey(3))
+    ck.save(str(tmp_path), 2, state)
+    ck.save(str(tmp_path), 4, state)
+    victim = tmp_path / "step_00000004" / "arr_00000.npy"
+    arr = np.load(victim)
+    arr.flat[0] += 1.0                       # flip a value, keep shape/dtype
+    np.save(victim, arr)
+    like = jax.tree.map(lambda x: x, state)
+    with pytest.raises(ck.CorruptCheckpointError):
+        ck.restore(str(tmp_path), 4, like, prog.state_shardings)
+    # unverified restore still reads it (the escape hatch)
+    ck.restore(str(tmp_path), 4, like, prog.state_shardings, verify=False)
+    step, restored = ck.restore_latest(str(tmp_path), like,
+                                       prog.state_shardings)
+    assert step == 2                         # fell back past the corruption
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_all_corrupt_raises(tmp_path, mesh3):
+    prog = _prog(mesh3)
+    state = prog.init_fn(jax.random.PRNGKey(3))
+    ck.save(str(tmp_path), 1, state)
+    os.remove(tmp_path / "step_00000001" / "arr_00000.npy")
+    with pytest.raises(ck.CorruptCheckpointError):
+        ck.restore_latest(str(tmp_path), jax.tree.map(lambda x: x, state),
+                          prog.state_shardings)
+    with pytest.raises(FileNotFoundError):   # no checkpoints at all
+        ck.restore_latest(str(tmp_path / "empty"), state)
+
+
+def test_stale_tmp_swept_and_not_restorable(tmp_path, mesh3):
+    """A crash mid-save leaves step_X.tmp: it is never listed as a retained
+    step and the next save sweeps it."""
+    prog = _prog(mesh3)
+    state = prog.init_fn(jax.random.PRNGKey(3))
+    stale = tmp_path / "step_00000009.tmp"
+    stale.mkdir(parents=True)
+    (stale / "garbage").write_text("partial write")
+    assert ck.retained_steps(str(tmp_path)) == []
+    assert ck.latest_step(str(tmp_path)) is None
+    ck.save(str(tmp_path), 1, state)
+    assert not stale.exists()                # swept before publishing
+    assert ck.retained_steps(str(tmp_path)) == [1]
+
+
+def test_save_nonblocking_kwarg(tmp_path, mesh3):
+    """save(blocking=False) is honored: returns the async future instead of
+    silently writing synchronously."""
+    prog = _prog(mesh3)
+    state = prog.init_fn(jax.random.PRNGKey(3))
+    fut = ck.save(str(tmp_path), 5, state, blocking=False)
+    assert fut.result().endswith("step_00000005")
+    ck.wait_pending()
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_background_save_failure_surfaces_at_next_save(tmp_path):
+    """A failed async save must raise at the next save call, not silently
+    vanish into the executor."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("file where the ckpt dir should go")
+    bad = ck.save_async(str(blocker), 1, {"w": np.ones(4, np.float32)})
+    with pytest.raises(Exception):
+        bad.result()                        # the failure itself
+    with pytest.raises(Exception):
+        # next save: _prune_pending re-raises the background failure
+        ck.save_async(str(tmp_path / "ok"), 2,
+                      {"w": np.ones(4, np.float32)})
+    ck.wait_pending()                       # leave the module state clean

@@ -1,0 +1,413 @@
+"""Elastic control plane (repro.elastic, DESIGN.md §13): failure detection,
+membership epochs, checkpointless ZeRO recovery, and the chaos harness's
+bit-exact-continuation contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import elastic
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core import simulator as sim
+from repro.core.balance import PodProfile, uniform_plan
+from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import cluster_for_mesh
+from repro.models import build
+from repro.train import checkpoint as ck
+from repro.train import ft
+from repro.train.trainer import make_train_program, rebuild_program
+
+CFG = get_config("smollm-135m").reduced()
+MODEL = build(CFG)
+SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def prog_z3(mesh3):
+    rc = RunConfig(zero_stage=3, collective_mode="hier",
+                   learning_rate=1e-3, param_dtype="float32")
+    return make_train_program(MODEL, mesh3, rc, uniform_plan(2, 2, 1))
+
+
+@pytest.fixture(scope="module")
+def prog_z1(mesh3):
+    rc = RunConfig(zero_stage=1, collective_mode="hier",
+                   learning_rate=1e-3, param_dtype="float32")
+    return make_train_program(MODEL, mesh3, rc, uniform_plan(2, 2, 1))
+
+
+def _make_batches(prog):
+    pipe = DataPipeline(seed=0, plan=prog.plan, dp_world=prog.dp_world(),
+                        seq_len=SEQ, vocab=CFG.vocab)
+    return lambda s: {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+
+
+# ---------------------------------------------------------------- detection
+
+def test_heartbeat_timeout_and_grace():
+    t = {"now": 0.0}
+    hb = elastic.HeartbeatMonitor(timeout_s=10.0, grace_s=5.0,
+                                  clock=lambda: t["now"])
+    assert not hb.expired("p0")          # unregistered: never expired
+    hb.register("p0")
+    t["now"] = 14.0                      # within grace + timeout
+    assert not hb.expired("p0")
+    t["now"] = 15.5                      # silent past grace + timeout
+    assert hb.expired("p0")
+    hb.beat("p0", step=3)
+    assert hb.last_step("p0") == 3
+    t["now"] = 25.0                      # 9.5s since beat < timeout
+    assert not hb.expired("p0")
+    t["now"] = 26.0                      # 10.5s since beat > timeout
+    assert hb.expired("p0")
+    hb.register("p0")                    # revival re-arms the grace window
+    assert not hb.expired("p0")
+
+
+def test_detector_link_and_pod_transitions(mesh3):
+    cluster = cluster_for_mesh(mesh3)
+    det = elastic.FailureDetector(cluster)
+    assert det.poll(step=0) == []                     # steady state: silent
+    inv1 = cluster.inventory(cluster.pods[1])
+    inv1.mark_degraded(0, 0.25)
+    evs = det.poll(step=1)
+    assert [(e.kind, e.pod) for e in evs] == [("link-degraded", "pod1")]
+    assert not evs[0].membership_change
+    assert det.poll(step=2) == []                     # no event storm
+    for link in inv1.links:
+        inv1.mark_down(link.index)
+    evs = det.poll(step=3)
+    assert [(e.kind, e.pod) for e in evs] == [("pod-dead", "pod1")]
+    assert evs[0].membership_change and evs[0].step == 3
+    for link in inv1.links:
+        inv1.mark_up(link.index)
+    evs = det.poll(step=4)
+    assert [(e.kind, e.pod) for e in evs] == [("pod-joined", "pod1")]
+    assert elastic.dead_pods(det.events) == []        # joined after dead
+
+
+def test_detector_heartbeat_timeout_is_pod_dead(mesh3):
+    cluster = cluster_for_mesh(mesh3)
+    t = {"now": 0.0}
+    hb = elastic.HeartbeatMonitor(timeout_s=10.0, grace_s=0.0,
+                                  clock=lambda: t["now"])
+    det = elastic.FailureDetector(cluster, heartbeat=hb)
+    for p in cluster.pods:
+        hb.beat(p.name, step=0)
+    assert det.poll(step=0) == []
+    t["now"] = 20.0
+    hb.beat("pod0", step=1)              # pod0 keeps stepping, pod1 silent
+    evs = det.poll(step=1)
+    assert [(e.kind, e.pod, e.detail) for e in evs] == \
+        [("pod-dead", "pod1", "heartbeat timeout")]
+
+
+# ------------------------------------------------------------- chaos script
+
+def test_parse_script():
+    s = elastic.parse_script("degrade:pod0.1x0.25@2;kill:pod1@4;"
+                             "revive:pod1@8;down:pod0.0@6")
+    assert [(a.step, a.op, a.pod, a.link, a.factor) for a in s.actions] == [
+        (2, "degrade", "pod0", 1, 0.25), (4, "kill", "pod1", None, None),
+        (6, "down", "pod0", 0, None), (8, "revive", "pod1", None, None)]
+    assert [a.op for a in s.at(4)] == ["kill"]
+    with pytest.raises(ValueError):
+        elastic.parse_script("explode:pod0@1")
+    with pytest.raises(ValueError):
+        elastic.parse_script("degrade:pod0@1")       # factor missing
+
+
+# -------------------------------------------------------- membership epochs
+
+def test_membership_pod_dead_epoch(mesh3):
+    cluster = cluster_for_mesh(mesh3)
+    det = elastic.FailureDetector(cluster)
+    m = elastic.Membership(cluster, plan=uniform_plan(2, 2, 1), detector=det)
+    # pre-existing degradation on the survivor must carry into the new epoch
+    cluster.inventory(cluster.pods[0]).mark_degraded(1, 0.5)
+    ev = elastic.PodEvent(kind="pod-dead", pod="pod1", epoch=0, step=7)
+    link_ev = elastic.PodEvent(kind="link-degraded", pod="pod0", epoch=0,
+                               step=7)
+    assert m.on_event(link_ev) is None               # in-epoch, no rebuild
+    r = m.on_event(ev, state_bytes=1e9)
+    assert m.epoch == det.epoch == 1 and m.state == "RUNNING"
+    assert [s for _, s in m.transitions] == \
+        ["RUNNING", "DRAINING", "REBUILDING", "RUNNING"]
+    assert [p.name for p in r.cluster.pods] == ["pod0"]
+    assert r.pod_axis is None                        # one island left
+    surviving_inv = r.cluster.inventory(r.cluster.pods[0])
+    assert surviving_inv.health(1).bw_fraction == 0.5   # health carried
+    assert r.plan.total_micro == uniform_plan(2, 2, 1).total_micro  # contract
+    assert r.modeled_checkpoint_s > r.modeled_checkpointless_s
+    # duplicate death of an already-removed pod: no-op
+    dup = elastic.PodEvent(kind="pod-dead", pod="pod1", epoch=1, step=8)
+    assert m.on_event(dup) is None
+    # stale event from the pre-rebuild epoch is rejected
+    with pytest.raises(elastic.MembershipError):
+        m.on_event(elastic.PodEvent(kind="pod-dead", pod="pod0", epoch=0,
+                                    step=8))
+    # last pod dying is not survivable
+    with pytest.raises(elastic.MembershipError):
+        m.on_event(elastic.PodEvent(kind="pod-dead", pod="pod0", epoch=1,
+                                    step=9))
+
+
+def test_membership_rejoin_restores_pod_set(mesh3):
+    cluster = cluster_for_mesh(mesh3)
+    m = elastic.Membership(cluster, plan=uniform_plan(2, 2, 1))
+    m.on_event(elastic.PodEvent(kind="pod-dead", pod="pod1", epoch=0, step=3))
+    r = m.on_event(elastic.PodEvent(kind="pod-joined", pod="pod1", epoch=1,
+                                    step=6))
+    assert [p.name for p in r.cluster.pods] == ["pod0", "pod1"]
+    assert r.pod_axis == "pod" and m.epoch == 2
+    with pytest.raises(elastic.MembershipError):     # unknown pod can't join
+        m.on_event(elastic.PodEvent(kind="pod-joined", pod="pod9", epoch=2,
+                                    step=7))
+
+
+def test_rebuild_time_pricing(mesh3):
+    cluster = cluster_for_mesh(mesh3)
+    free = sim.rebuild_time(cluster, 0.0)
+    small = sim.rebuild_time(cluster, 1e9)
+    big = sim.rebuild_time(cluster, 4e9)
+    assert free < small < big                        # monotone in state size
+    assert sim.rebuild_time(cluster, 1e9, checkpointless=False) > small
+
+
+# ----------------------------------------------------------- shard coverage
+
+def test_shard_coverage_zero3_covered_zero1_not(prog_z3, prog_z1):
+    _, all3 = prog_z3.shard_coverage()
+    assert all3                          # pod-replicated: survives pod loss
+    mask1, all1 = prog_z1.shard_coverage()
+    assert not all1                      # flat 1/W shards span the pod axis
+    assert all(jax.tree.leaves(mask1["params"]))     # params DP-replicated
+    assert not any(jax.tree.leaves(mask1["opt"]))    # opt state is not
+
+
+def test_assemble_from_survivors(mesh3, prog_z3, prog_z1):
+    dead = elastic.pod_devices(mesh3, 1)
+    assert len(dead) == 4
+    s3 = prog_z3.init_fn(jax.random.PRNGKey(0))
+    host, missing = elastic.assemble_from_survivors(s3, dead)
+    assert missing == []                 # zero3: full coverage from pod0
+    flat = jax.tree.leaves(s3)
+    for arr, leaf in zip(host, flat):    # assembled == the logical array
+        np.testing.assert_array_equal(arr, np.asarray(jax.device_get(leaf)))
+    s1 = prog_z1.init_fn(jax.random.PRNGKey(0))
+    _, missing1 = elastic.assemble_from_survivors(s1, dead)
+    assert missing1                      # zero1 opt shards died with pod1
+    assert all("opt" in p for p in missing1)
+    with pytest.raises(elastic.IncompleteCoverage):
+        elastic.recover_state(s1, 3, prog_z1, dead)  # no ckpt_dir: no net
+
+
+def test_survivor_mesh_squeezes_pod_axis(mesh3):
+    smesh = elastic.survivor_mesh(mesh3, 1)
+    assert smesh.axis_names == ("data", "model")
+    assert smesh.devices.shape == (2, 2)
+    assert set(smesh.devices.ravel()) == set(mesh3.devices[0].ravel())
+
+
+# -------------------------------------------------- satellite: plan + ckpt
+
+def test_replan_auto_shrunk_cluster_batch_contract(mesh3):
+    from repro import plan as plan_mod
+    cluster = cluster_for_mesh(mesh3)
+    req = plan_mod.plan_request(cluster, CFG, global_batch=8, seq_len=SEQ,
+                                data_axis=2, zero_stage=1)
+    tp = plan_mod.autotune(req)
+    shrunk = dataclasses.replace(cluster, pods=cluster.pods[:1])
+    tp2 = ft.replan_auto(tp, cluster=shrunk)
+    assert tp2.request.cluster is shrunk
+    assert len(tp2.plan.micro_per_pod) == 1
+    # the batch contract: global sequences per optimizer step preserved
+    # (micro-steps x micro-batch x intra-pod data shards)
+    assert tp2.plan.total_micro * tp2.plan.micro_batch * \
+        tp2.request.data_axis == \
+        tp.plan.total_micro * tp.plan.micro_batch * tp.request.data_axis == 8
+
+
+def test_restore_full_tree_to_survivor_mesh_bit_exact(tmp_path, mesh3,
+                                                      prog_z1):
+    """Satellite: a checkpoint written on the N-pod mesh round-trips onto
+    the (N-1)-pod survivor mesh bit-exactly for *every* leaf (params, m, v,
+    master, step) — the fallback path of elastic recovery."""
+    state = prog_z1.init_fn(jax.random.PRNGKey(2))
+    ck.save(str(tmp_path), 3, state)
+    smesh = elastic.survivor_mesh(mesh3, 1)
+    sprog = rebuild_program(prog_z1, smesh,
+                            plan=ft.replan(prog_z1.plan,
+                                           [PodProfile("pod0", 1.0, 4)]))
+    restored = ck.restore(str(tmp_path), 3, sprog.abstract_state(),
+                          sprog.state_shardings)
+    flat_a = jax.tree_util.tree_flatten_with_path(state)[0]
+    flat_b = jax.tree.leaves(restored)
+    assert len(flat_a) == len(flat_b)
+    for (kp, a), b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b)),
+            err_msg=jax.tree_util.keystr(kp))
+
+
+# --------------------------------------------------- chaos: the acceptance
+
+def test_chaos_kill_zero3_checkpointless_bit_exact(tmp_path, mesh3, prog_z3):
+    """Kill a pod mid-run under ZeRO-3: recovery must be checkpointless
+    (no checkpoint even exists before the kill) and the continued loss
+    trajectory bit-identical to an uninterrupted baseline from the same
+    state."""
+    cluster = cluster_for_mesh(mesh3)
+    state = prog_z3.init_fn(jax.random.PRNGKey(1))
+    state, report = elastic.run_elastic(
+        prog_z3, state, _make_batches, cluster=cluster,
+        ckpt_dir=str(tmp_path / "e"), n_steps=8,
+        script=elastic.parse_script("kill:pod1@4"), ckpt_every=50)
+    assert report.recovery_methods == ["checkpointless"]
+    assert report.recoveries[0].step == 4            # resumed where it died
+    assert [h["step"] for h in report.history] == list(range(8))
+    assert len(report.rebuilds) == 1
+    assert [p.name for p in report.rebuilds[0].cluster.pods] == ["pod0"]
+
+    # pre-kill segment == uninterrupted full-mesh run, bit for bit
+    truth = prog_z3.init_fn(jax.random.PRNGKey(1))
+    truth, hist_full = ft.run_supervised(
+        prog_z3.step_fn, truth, _make_batches(prog_z3),
+        ckpt_dir=str(tmp_path / "t"), ckpt_every=100, n_steps=4,
+        state_shardings=prog_z3.state_shardings)
+    for h_e, h_f in zip(report.history[:4], hist_full):
+        assert h_e["loss"] == h_f["loss"], h_e["step"]
+
+    # post-kill segment == the true step-4 state placed on the survivor
+    # program and stepped with the same batches, bit for bit
+    sprog = report.final_prog
+    assert "pod" not in sprog.mesh.axis_names
+    host, missing = elastic.assemble_from_survivors(truth, [])
+    assert not missing
+    base = ck.place_tree(host, sprog.abstract_state(), sprog.state_shardings)
+    _, hist_cont = ft.run_supervised(
+        sprog.step_fn, base, _make_batches(sprog),
+        ckpt_dir=str(tmp_path / "c"), ckpt_every=100, n_steps=8,
+        start_step=4, state_shardings=sprog.state_shardings)
+    assert [h["loss"] for h in report.history[4:]] == \
+        [h["loss"] for h in hist_cont]
+
+
+def test_chaos_kill_zero1_checkpoint_fallback_bit_exact(tmp_path, mesh3,
+                                                        prog_z1):
+    """Kill a pod mid-run under ZeRO-1: the flat optimizer shards die with
+    the pod, so recovery falls back to the checkpoint chain — and the
+    replayed-and-continued trajectory is bit-identical to a baseline
+    restored from the same checkpoint onto the same survivor program."""
+    cluster = cluster_for_mesh(mesh3)
+    ckpt_dir = str(tmp_path / "e")
+    state = prog_z1.init_fn(jax.random.PRNGKey(1))
+    state, report = elastic.run_elastic(
+        prog_z1, state, _make_batches, cluster=cluster, ckpt_dir=ckpt_dir,
+        n_steps=8, script=elastic.parse_script("kill:pod1@5"), ckpt_every=2)
+    rec = report.recoveries[0]
+    assert report.recovery_methods == ["checkpoint"]
+    assert rec.step == 4                 # the last full-mesh checkpoint
+    assert rec.missing                   # why checkpointless was impossible
+    assert [h["step"] for h in report.history] == list(range(8))
+
+    # the baseline: restore the same step-4 checkpoint onto the same
+    # survivor program and continue — must match the elastic run bit for bit
+    sprog = report.final_prog
+    step, base = ck.restore_latest(ckpt_dir, sprog.abstract_state(),
+                                   sprog.state_shardings)
+    assert step == 8                     # the elastic run kept checkpointing
+    base = ck.restore(ckpt_dir, 4, sprog.abstract_state(),
+                      sprog.state_shardings)
+    _, hist_cont = ft.run_supervised(
+        sprog.step_fn, base, _make_batches(sprog),
+        ckpt_dir=str(tmp_path / "c"), ckpt_every=100, n_steps=8,
+        start_step=4, state_shardings=sprog.state_shardings)
+    assert [h["loss"] for h in report.history[4:]] == \
+        [h["loss"] for h in hist_cont]
+
+
+def test_chaos_kill_then_rejoin(tmp_path, mesh3, prog_z3):
+    """Pod dies at step 3, revives at step 6: two epochs, both recoveries
+    checkpointless (ZeRO-3), final program back on the full mesh."""
+    cluster = cluster_for_mesh(mesh3)
+    state = prog_z3.init_fn(jax.random.PRNGKey(3))
+    state, report = elastic.run_elastic(
+        prog_z3, state, _make_batches, cluster=cluster,
+        ckpt_dir=str(tmp_path), n_steps=9,
+        script=elastic.parse_script("kill:pod1@3;revive:pod1@6"),
+        ckpt_every=50)
+    assert report.recovery_methods == ["checkpointless", "checkpointless"]
+    assert [e.kind for e in report.events if e.membership_change] == \
+        ["pod-dead", "pod-joined"]
+    assert [h["step"] for h in report.history] == list(range(9))
+    assert "pod" in report.final_prog.mesh.axis_names    # grew back
+    assert len(report.rebuilds) == 2 and report.rebuilds[-1].epoch == 2
+    assert all(np.isfinite(h["loss"]) for h in report.history)
+
+
+def test_chaos_link_degrade_stays_in_epoch(tmp_path, mesh3, prog_z3):
+    """A degraded link is transport-failover territory: events are logged,
+    but no membership change, no rebuild, and the run completes."""
+    cluster = cluster_for_mesh(mesh3)
+    state = prog_z3.init_fn(jax.random.PRNGKey(4))
+    state, report = elastic.run_elastic(
+        prog_z3, state, _make_batches, cluster=cluster,
+        ckpt_dir=str(tmp_path), n_steps=4,
+        script=elastic.parse_script("degrade:pod0.1x0.25@2"), ckpt_every=50)
+    assert report.recovery_methods == [] and report.rebuilds == []
+    assert [e.kind for e in report.events] == ["link-degraded"]
+    assert [h["step"] for h in report.history] == list(range(4))
+    assert cluster.inventory(cluster.pods[0]).health(1).bw_fraction == 0.25
+
+
+# ------------------------------------------- satellite: retryable + backoff
+
+def test_backoff_deterministic_and_capped():
+    assert ft._backoff_s(3, 0.05, 5.0, 0.0) == pytest.approx(0.2)  # 0.05*2^2
+    assert ft._backoff_s(10, 0.05, 5.0, 0.0) == 5.0                # capped
+    d = ft._backoff_s(2, 0.05, 5.0, 0.25)
+    assert d == ft._backoff_s(2, 0.05, 5.0, 0.25)                  # no RNG
+    assert 0.1 <= d <= 0.1 * 1.25                                  # jittered
+
+
+def test_custom_retryable_exception(tmp_path):
+    """Transient failures outside InjectedFailure recover through the same
+    restore-and-retry path once listed in ``retryable`` — and propagate
+    when they are not."""
+
+    class FlakyCollective(RuntimeError):
+        pass
+
+    def step_fn(state, batch):
+        return state + 1, {"loss": 0.0}
+
+    def flaky_batches(trip):
+        tripped = {"done": False}
+
+        def batches(step):
+            if step == 3 and not tripped["done"]:
+                tripped["done"] = True
+                raise FlakyCollective("link flapped mid-all-reduce")
+            return step
+        return batches
+
+    with pytest.raises(FlakyCollective):     # not retryable by default
+        ft.run_supervised(step_fn, 0, flaky_batches(3),
+                          ckpt_dir=str(tmp_path / "a"), n_steps=5)
+    final, hist = ft.run_supervised(
+        step_fn, 0, flaky_batches(3), ckpt_dir=str(tmp_path / "b"),
+        n_steps=5, ckpt_every=1, retryable=(FlakyCollective,),
+        backoff_base=0.0)
+    assert int(np.asarray(final)) == 5
+    assert [h["step"] for h in hist] == list(range(5))
+
+    def always(step):
+        raise FlakyCollective("hard down")
+    with pytest.raises(FlakyCollective):     # max_restarts still bounds it
+        ft.run_supervised(step_fn, 0, always, ckpt_dir=str(tmp_path / "c"),
+                          n_steps=5, retryable=(FlakyCollective,),
+                          max_restarts=2, backoff_base=0.0)

@@ -1,0 +1,190 @@
+"""Variance-aware bench regression gate (DESIGN.md §14).
+
+Compares a current ``BENCH_*.json`` run against the committed baseline and
+fails **only** when a case's median regresses by more than ``--threshold``
+*and* the two runs' IQRs don't overlap — a slow case must be both large and
+statistically separated from the baseline's noise band to trip the gate, so
+ordinary CI jitter (which widens the IQRs) loosens the gate automatically
+instead of flaking it.
+
+Within-run IQRs underestimate *between-process* variance, and how badly
+depends on duration: on CPU meshes, sub-millisecond collectives drift tens
+of percent between runs (dispatch/cache state), while 100ms+ cases are
+stable within ~15%.  Each side's IQR band is therefore inflated to at least
+a duration-scaled noise floor (±35% under 2ms, ±25% under 20ms, ±10%
+above) before testing overlap — so the effective bar for a tiny case is
+"well beyond plausible run-to-run noise", while long-running cases are
+gated tightly.
+
+Because the committed baseline was measured on some other machine, raw
+medians are incomparable across hosts.  The gate therefore normalizes by a
+*host factor*: the geometric median of current/baseline median ratios across
+all shared cases.  A uniformly slower host moves every ratio together — the
+factor absorbs it.  A genuine regression moves only its own cases, sticks
+out above the (robust) factor, and still fails.  ``--no-normalize`` compares
+raw seconds (same-host A/B runs).  Corollary: normalization needs breadth —
+with a single shared case (``BENCH_train.json``) the factor *is* that case's
+ratio and the normalized gate reduces to a schema/join check; cross-run
+train-step drift is caught by the 81-case comm record, not the 1-case train
+record.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH_comm.json /tmp/bench/BENCH_comm.json [--threshold 0.25]
+
+Exit codes: 0 pass (including missing-baseline, which warns — a brand-new
+bench trajectory must not fail its own bootstrap PR), 1 regression, 2 bad
+input (unreadable/invalid record).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import pathlib
+import sys
+from typing import Mapping, Sequence
+
+DEFAULT_THRESHOLD = 0.25    # fail at >25% normalized median regression
+
+# Duration-scaled between-run noise floors: each run's IQR band is widened
+# to at least ±floor around its median before the overlap test.  Calibrated
+# against observed same-host run-to-run drift of the CPU-mesh harness
+# (sub-2ms cases drift up to ~1.8x between processes; >100ms cases <1.15x).
+NOISE_FLOOR_STEPS = ((2e-3, 0.35), (20e-3, 0.25), (float("inf"), 0.10))
+
+
+def noise_floor(median_s: float) -> float:
+    """Minimum relative half-width of a case's noise band, by duration."""
+    for limit, floor in NOISE_FLOOR_STEPS:
+        if median_s < limit:
+            return floor
+    return NOISE_FLOOR_STEPS[-1][1]
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseResult:
+    """Verdict for one shared case name."""
+
+    name: str
+    baseline_median_s: float
+    current_median_s: float
+    ratio: float                # current / (baseline * host_factor)
+    regressed: bool             # ratio > 1 + threshold
+    iqr_overlap: bool           # scaled baseline IQR ∩ current IQR
+    fail: bool                  # regressed AND not iqr_overlap
+
+    def line(self) -> str:
+        verdict = "FAIL" if self.fail else \
+            ("slow (IQR overlap)" if self.regressed else "ok")
+        return (f"{self.name}: x{self.ratio:.3f} "
+                f"({self.baseline_median_s * 1e6:.0f}us -> "
+                f"{self.current_median_s * 1e6:.0f}us) {verdict}")
+
+
+def _entry_map(record: Mapping) -> dict[str, Mapping]:
+    return {e["name"]: e for e in record["entries"]}
+
+
+def host_factor(baseline: Mapping, current: Mapping) -> float:
+    """Geometric median of per-case current/baseline median ratios — the
+    robust 'how much slower is this host overall' estimate.  A minority of
+    genuinely-regressed cases can't drag it (median), so they still stand
+    out after normalization."""
+    base, cur = _entry_map(baseline), _entry_map(current)
+    logs = sorted(
+        math.log10(cur[n]["median_s"] / base[n]["median_s"])
+        for n in base.keys() & cur.keys()
+        if base[n]["median_s"] > 0 and cur[n]["median_s"] > 0)
+    if not logs:
+        return 1.0
+    mid = len(logs) // 2
+    med = logs[mid] if len(logs) % 2 else (logs[mid - 1] + logs[mid]) / 2
+    return 10.0 ** med
+
+
+def compare(baseline: Mapping, current: Mapping,
+            threshold: float = DEFAULT_THRESHOLD,
+            normalize: bool = True) -> list[CaseResult]:
+    """Per-case verdicts over the names both records share.  New cases
+    (no baseline) and removed cases (no current) never fail — the gate
+    guards timings, renames are the review's job."""
+    base, cur = _entry_map(baseline), _entry_map(current)
+    factor = host_factor(baseline, current) if normalize else 1.0
+    results = []
+    for name in sorted(base.keys() & cur.keys()):
+        b, c = base[name], cur[name]
+        scaled_median = b["median_s"] * factor
+        ratio = c["median_s"] / scaled_median if scaled_median > 0 \
+            else float("inf")
+        regressed = ratio > 1.0 + threshold
+        # IQR overlap in the normalized (current-host) time scale, each
+        # band widened to at least the duration-scaled noise floor.
+        bf, cf = noise_floor(b["median_s"]), noise_floor(c["median_s"])
+        b_lo = min(b["iqr_lo_s"], b["median_s"] * (1 - bf)) * factor
+        b_hi = max(b["iqr_hi_s"], b["median_s"] * (1 + bf)) * factor
+        c_lo = min(c["iqr_lo_s"], c["median_s"] * (1 - cf))
+        c_hi = max(c["iqr_hi_s"], c["median_s"] * (1 + cf))
+        overlap = b_lo <= c_hi and c_lo <= b_hi
+        results.append(CaseResult(
+            name=name, baseline_median_s=b["median_s"],
+            current_median_s=c["median_s"], ratio=ratio,
+            regressed=regressed, iqr_overlap=overlap,
+            fail=regressed and not overlap))
+    return results
+
+
+def _load(path: pathlib.Path) -> dict:
+    from benchmarks.measure import validate
+    return validate(json.loads(path.read_text()))
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=pathlib.Path,
+                    help="committed BENCH_*.json snapshot")
+    ap.add_argument("current", type=pathlib.Path,
+                    help="freshly measured BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="median regression fraction that (with disjoint "
+                         f"IQRs) fails the gate (default "
+                         f"{DEFAULT_THRESHOLD})")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare raw seconds (same-host A/B) instead of "
+                         "host-factor-normalized ratios")
+    args = ap.parse_args(argv)
+
+    if not args.baseline.exists():
+        print(f"check_regression: no baseline at {args.baseline} — "
+              "nothing to gate against (pass)", file=sys.stderr)
+        return 0
+    try:
+        baseline = _load(args.baseline)
+        current = _load(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"check_regression: bad input: {e}", file=sys.stderr)
+        return 2
+
+    normalize = not args.no_normalize
+    results = compare(baseline, current, args.threshold, normalize)
+    if not results:
+        print("check_regression: no shared case names — nothing to compare "
+              "(pass)", file=sys.stderr)
+        return 0
+    factor = host_factor(baseline, current) if normalize else 1.0
+    print(f"check_regression: {len(results)} shared cases, host factor "
+          f"x{factor:.3f}, threshold {args.threshold:.0%}")
+    failed = [r for r in results if r.fail]
+    for r in results:
+        if r.fail or r.regressed:
+            print("  " + r.line())
+    if failed:
+        print(f"check_regression: {len(failed)} regression(s) over "
+              f"{args.threshold:.0%} with disjoint IQRs", file=sys.stderr)
+        return 1
+    print("check_regression: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

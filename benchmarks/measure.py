@@ -1,0 +1,502 @@
+"""Measured-performance harness (DESIGN.md §14): real wall-clock benchmarks
+of the collective paths and the train step, with variance statistics.
+
+Every number in ``results/perf_log.jsonl`` is *modeled* (the α-β simulator);
+this harness is the measured side of the loop.  It times actual
+interpret/CPU-mesh executions of the collective stack — flat/hier/pipelined ×
+xla/pallas × stripe counts, per payload size class, plus every row of the
+mesh's active per-op policy table — and a reduced train-step microbench,
+each with warmup, ``repeats >= 5`` samples on a monotonic clock, and
+median/IQR variance stats.  Output is schema-versioned:
+
+    PYTHONPATH=src python -m benchmarks.measure [--smoke] [--repeats 7] \
+        [--out-dir .] [--history results/bench_history.jsonl] \
+        [--only comm|train] [--calibrate]
+
+writes ``BENCH_comm.json`` / ``BENCH_train.json`` (the repo-root copies are
+the committed baseline ``benchmarks/check_regression.py`` gates against),
+appends every run to ``results/bench_history.jsonl``, and ``--calibrate``
+closes the modeled↔measured loop: ``repro.plan.measured`` converts the
+measurements into per-(op, size_class, backend) error rows, effective α-β
+fits, and measured ``PodProfile``s fed through ``plan.refine`` /
+``plan.calibrate`` (report: ``results/calibration_report.json``).
+
+Wall times here characterize the *functional* implementation on this host —
+they are real, monotonic, and regression-gateable, but they are not TPU
+performance (that remains §Roofline's job).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import platform
+import time
+from typing import Callable, Sequence
+
+SCHEMA_VERSION = 1
+
+# Bench mesh: (pod=4, data=2) so the cross-island ring is a real 4-ring
+# (2-rank rings degenerate, same reasoning as make_production_mesh).
+BENCH_MESH_SHAPE = (4, 2)
+# Train microbench mesh: the test suite's (pod, data, model) = (2, 2, 2).
+TRAIN_MESH_SHAPE = (2, 2, 2)
+
+# Representative payloads per size class (logical collective payload, the
+# size the policy table and the simulator key on).  "large" is measured at
+# 16 MiB — still in the >8 MiB class, but CPU-affordable.
+SIZE_CLASS_BYTES = {"small": 16 * 1024, "medium": 1024 * 1024,
+                    "large": 16 * 1024 * 1024}
+
+# The gradient-path ops swept across the full (mode, backend, stripes) grid;
+# the remaining POLICY_OPS are covered by the policy-table rows.
+SWEEP_OPS = ("all_reduce", "all_gather", "reduce_scatter")
+SWEEP_MODES = ("flat", "hier", "pipelined")
+SWEEP_BACKENDS = ("xla", "pallas")
+SWEEP_STRIPES = (1, 2)
+SWEEP_CHANNELS = 2          # pipelined channel budget of the sweep cases
+
+DEFAULT_REPEATS = 7
+SMOKE_REPEATS = 5
+MIN_REPEATS = 5             # schema floor: median/IQR need real samples
+WARMUP = 2                  # first call compiles; one more warms caches
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """One fully-specified measured configuration (deterministic identity:
+    the ``name`` is the regression-gate join key across runs)."""
+
+    name: str
+    op: str
+    mode: str
+    backend: str
+    n_channels: int
+    n_stripes: int
+    nbytes: int
+    size_class: str
+    group: str = "sweep"        # "sweep" | "policy"
+
+
+def comm_cases(sizes: Sequence[str] = ("small", "medium", "large"),
+               include_policy: bool = True) -> list[BenchCase]:
+    """Deterministic enumeration of the measured collective configurations.
+
+    Sweep group: ``SWEEP_OPS`` × modes × backends × stripes with the same
+    dimension pruning as the planner's ``_comm_candidates`` (backends only
+    vary hier/pipelined, stripes only pallas).  Policy group: one case per
+    (op, size_class) row of the bench mesh's active policy table
+    (``plan.policy_table_for`` on the modeled bench cluster), measured under
+    exactly that row's policy — the rows the communicator would really run.
+    """
+    cases: list[BenchCase] = []
+    for cls in sizes:
+        nbytes = SIZE_CLASS_BYTES[cls]
+        for op in SWEEP_OPS:
+            for mode in SWEEP_MODES:
+                backends = SWEEP_BACKENDS if mode != "flat" else ("xla",)
+                for backend in backends:
+                    stripes = SWEEP_STRIPES if backend == "pallas" else (1,)
+                    chans = SWEEP_CHANNELS if mode == "pipelined" else 1
+                    for k in stripes:
+                        name = (f"comm/{op}/{mode}-{backend}-c{chans}-k{k}/"
+                                f"{cls}")
+                        cases.append(BenchCase(
+                            name=name, op=op, mode=mode, backend=backend,
+                            n_channels=chans, n_stripes=k, nbytes=nbytes,
+                            size_class=cls, group="sweep"))
+    if include_policy:
+        for (op, cls), pol in active_policy_table().rows:
+            nbytes = SIZE_CLASS_BYTES[cls]
+            name = f"policy/{op}/{cls}/{pol.label()}"
+            cases.append(BenchCase(
+                name=name, op=op, mode=pol.mode, backend=pol.backend,
+                n_channels=int(pol.n_channels), n_stripes=int(pol.n_stripes),
+                nbytes=nbytes, size_class=cls, group="policy"))
+    return cases
+
+
+def active_policy_table():
+    """The per-op, size-classed policy table the planner emits for the bench
+    mesh's modeled cluster (DESIGN.md §12) — the calibration report must
+    cover every one of its rows."""
+    from repro import plan
+    return plan.policy_table_for(bench_cluster())
+
+
+def bench_cluster():
+    """The modeled topology of the bench mesh (the pricing side of every
+    modeled-vs-measured row).  Mirrors ``launch.mesh.cluster_for_mesh``:
+    v5e islands, one per 'pod' rank, ``data``-axis chips each — but built
+    jax-free so ``repro.plan.measured`` can rebuild it from the record."""
+    from repro.plan.measured import bench_cluster as _bc
+    return _bc(BENCH_MESH_SHAPE[0], BENCH_MESH_SHAPE[1])
+
+
+# ---------------------------------------------------------------------------
+# Timing core: monotonic clock, per-call samples, median/IQR stats
+# ---------------------------------------------------------------------------
+
+def sample_times(fn: Callable[[], object], repeats: int = DEFAULT_REPEATS,
+                 warmup: int = WARMUP) -> list[float]:
+    """Per-call wall-time samples of ``fn`` (which must return a JAX value;
+    each sample blocks on it).  ``warmup`` calls are discarded — the first
+    pays compilation.  Uses ``time.perf_counter`` (monotonic) and one sample
+    per call, never a single aggregate region, so downstream stats can take
+    medians instead of trusting one noisy number."""
+    import jax
+    if repeats < MIN_REPEATS:
+        raise ValueError(f"repeats must be >= {MIN_REPEATS}, got {repeats}")
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def stats(samples: Sequence[float]) -> dict:
+    """Median/IQR variance digest of one case's samples.  The IQR endpoints
+    (25th/75th percentile) are what the regression gate overlaps — a noisy
+    host widens them and automatically loosens the gate (DESIGN.md §14)."""
+    import numpy as np
+    s = np.sort(np.asarray(list(samples), dtype=np.float64))
+    if s.size < MIN_REPEATS:
+        raise ValueError(f"need >= {MIN_REPEATS} samples, got {s.size}")
+    return {
+        "repeats": int(s.size),
+        "median_s": float(np.median(s)),
+        "iqr_lo_s": float(np.percentile(s, 25)),
+        "iqr_hi_s": float(np.percentile(s, 75)),
+        "min_s": float(s[0]),
+        "mean_s": float(s.mean()),
+    }
+
+
+def host_fingerprint() -> dict:
+    """Enough host identity for the gate to notice a machine change and
+    switch to normalized (host-factor) comparison."""
+    import jax
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Collective microbench
+# ---------------------------------------------------------------------------
+
+def _bench_mesh():
+    from repro.core import compat
+    return compat.make_mesh(BENCH_MESH_SHAPE, ("pod", "data"))
+
+
+def _case_input_rows(case: BenchCase, world: int) -> int:
+    """Local-shard rows (x 16 f32 columns) realizing the case's *logical*
+    payload: the buffer each rank reduces (all_reduce/reduce_scatter/...)
+    or the gathered buffer (all_gather — the size the policy table keys on,
+    ``hetccl._payload_bytes``)."""
+    cols = 16
+    local_bytes = case.nbytes // world if case.op == "all_gather" \
+        else case.nbytes
+    rows = max(local_bytes // (4 * cols), world)
+    return rows - rows % world if rows % world else rows    # divisibility
+
+
+def _case_fn(case: BenchCase, mesh):
+    """Build the jitted shard_map callable executing this case's collective
+    under its policy (the same dispatch path the trainer uses)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import compat, hetccl
+
+    world = int(np.prod(mesh.devices.shape))
+    rows = _case_input_rows(case, world)
+    cfg = hetccl.HetCCLConfig(
+        mode=case.mode, local_axes=("data",), pod_axis="pod",
+        backend=case.backend, n_channels=max(case.n_channels, 1),
+        n_stripes=max(case.n_stripes, 1))
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(world * rows, 16), jnp.float32)
+
+    kw = {}
+    if case.op == "all_to_all":
+        kw = dict(split_axis=0, concat_axis=0)
+    elif case.op in ("broadcast", "reduce"):
+        kw = dict(root=0)
+
+    def f(v):
+        return getattr(hetccl, case.op)(v, cfg, **kw)
+
+    out_specs = P(None) if case.op in ("all_reduce", "all_gather",
+                                       "broadcast") else P(("pod", "data"))
+    sm = compat.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+                          out_specs=out_specs, axis_names={"pod", "data"},
+                          check_vma=False)
+    jitted = jax.jit(sm)
+    return lambda: jitted(x)
+
+
+def run_comm_bench(repeats: int = DEFAULT_REPEATS,
+                   sizes: Sequence[str] = ("small", "medium", "large"),
+                   include_policy: bool = True, smoke: bool = False) -> dict:
+    """Measure every enumerated collective case; returns the schema-versioned
+    ``BENCH_comm`` record."""
+    mesh = _bench_mesh()
+    entries = []
+    for case in comm_cases(sizes, include_policy):
+        samples = sample_times(_case_fn(case, mesh), repeats)
+        entries.append({**dataclasses.asdict(case), **stats(samples)})
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "kind": "comm",
+        "host": host_fingerprint(),
+        "config": {"repeats": repeats, "warmup": WARMUP, "smoke": smoke,
+                   "mesh": list(BENCH_MESH_SHAPE),
+                   "mesh_axes": ["pod", "data"], "sizes": list(sizes),
+                   "include_policy": include_policy},
+        "entries": entries,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train-step microbench
+# ---------------------------------------------------------------------------
+
+TRAIN_ARCH = "smollm-135m"
+TRAIN_SEQ = 64
+TRAIN_ZERO = 1
+TRAIN_MODE = "hier"
+TRAIN_BACKEND = "xla"
+
+
+def _train_modeled_step_s() -> tuple[float, dict]:
+    """Price the microbench configuration with the planner's simulator — the
+    modeled twin of the measured step (DESIGN.md §14 calibration flow).
+    Returns (modeled seconds, the jax-free request parameters
+    ``repro.plan.measured`` rebuilds the pricing from)."""
+    from repro.plan.measured import train_request, modeled_train_step_s
+    params = {
+        "arch": TRAIN_ARCH, "reduced": True, "seq_len": TRAIN_SEQ,
+        "zero_stage": TRAIN_ZERO, "mode": TRAIN_MODE,
+        "backend": TRAIN_BACKEND,
+        "n_pods": TRAIN_MESH_SHAPE[0], "data_axis": TRAIN_MESH_SHAPE[1],
+        "model_axis": TRAIN_MESH_SHAPE[2],
+        "global_batch": TRAIN_MESH_SHAPE[0] * TRAIN_MESH_SHAPE[1],
+    }
+    return modeled_train_step_s(train_request(params), params), params
+
+
+def run_train_bench(repeats: int = DEFAULT_REPEATS,
+                    smoke: bool = False) -> dict:
+    """Time real optimizer steps of a reduced model on the CPU mesh.
+
+    Per-step samples (monotonic clock, warmup discarded) → median/IQR; the
+    entry also records the simulator's modeled step time for the same
+    configuration, so the calibration loop can attribute the residual
+    (``plan.calibrate``) without re-deriving the model."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.core import compat
+    from repro.core.balance import uniform_plan
+    from repro.data.pipeline import DataPipeline
+    from repro.models import build
+    from repro.train.trainer import make_train_program
+
+    mesh = compat.make_mesh(TRAIN_MESH_SHAPE, ("pod", "data", "model"))
+    cfg = get_config(TRAIN_ARCH).reduced()
+    model = build(cfg)
+    rc = RunConfig(zero_stage=TRAIN_ZERO, collective_mode=TRAIN_MODE,
+                   backend=TRAIN_BACKEND, learning_rate=1e-3,
+                   param_dtype="float32")
+    n_pods, data_axis = TRAIN_MESH_SHAPE[0], TRAIN_MESH_SHAPE[1]
+    prog = make_train_program(model, mesh, rc,
+                              uniform_plan(n_pods, n_pods, 1))
+    state = prog.init_fn(jax.random.PRNGKey(0))
+    pipe = DataPipeline(seed=0, plan=prog.plan, dp_world=prog.dp_world(),
+                        seq_len=TRAIN_SEQ, vocab=cfg.vocab)
+    tokens_per_step = prog.plan.total_micro * prog.plan.micro_batch * \
+        data_axis * TRAIN_SEQ
+
+    step_i = {"i": 0}
+
+    def one_step():
+        b = {k: jnp.asarray(v)
+             for k, v in pipe.batch_at(step_i["i"]).items()}
+        step_i["i"] += 1
+        nonlocal state
+        state, m = prog.step_fn(state, b)
+        return m["loss"]
+
+    samples = sample_times(one_step, repeats, warmup=WARMUP + 1)
+    modeled_s, params = _train_modeled_step_s()
+    st = stats(samples)
+    entry = {
+        "name": f"train/{TRAIN_ARCH}/zero{TRAIN_ZERO}-{TRAIN_MODE}-"
+                f"{TRAIN_BACKEND}/step",
+        "op": "train_step", "mode": TRAIN_MODE, "backend": TRAIN_BACKEND,
+        "n_channels": 1, "n_stripes": 1, "nbytes": 0, "size_class": "step",
+        "group": "train", **st,
+        "tokens_per_step": int(tokens_per_step),
+        "tokens_per_s_median": tokens_per_step / st["median_s"],
+        "modeled_step_s": modeled_s,
+        "request": params,
+    }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "kind": "train",
+        "host": host_fingerprint(),
+        "config": {"repeats": repeats, "warmup": WARMUP + 1, "smoke": smoke,
+                   "mesh": list(TRAIN_MESH_SHAPE),
+                   "mesh_axes": ["pod", "data", "model"]},
+        "entries": [entry],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Schema validation + persistence
+# ---------------------------------------------------------------------------
+
+_ENTRY_FIELDS = ("name", "op", "mode", "backend", "n_channels", "n_stripes",
+                 "nbytes", "size_class", "repeats", "median_s", "iqr_lo_s",
+                 "iqr_hi_s", "min_s", "mean_s")
+
+
+def validate(record: dict) -> dict:
+    """Schema check of one BENCH record; raises ``ValueError`` on violation.
+    The contract the regression gate, the calibration loop, and
+    ``tests/test_bench.py`` all lean on."""
+    if not isinstance(record, dict):
+        raise ValueError(f"BENCH record must be a dict, got {type(record)}")
+    if record.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(f"unsupported schema_version "
+                         f"{record.get('schema_version')!r} "
+                         f"(harness speaks {SCHEMA_VERSION})")
+    for key in ("kind", "host", "config", "entries"):
+        if key not in record:
+            raise ValueError(f"BENCH record missing {key!r}")
+    if record["kind"] not in ("comm", "train"):
+        raise ValueError(f"unknown BENCH kind {record['kind']!r}")
+    entries = record["entries"]
+    if not entries:
+        raise ValueError("BENCH record has no entries")
+    seen = set()
+    for e in entries:
+        for f in _ENTRY_FIELDS:
+            if f not in e:
+                raise ValueError(f"entry {e.get('name', '?')!r} missing {f!r}")
+        if e["repeats"] < MIN_REPEATS:
+            raise ValueError(f"entry {e['name']!r} has {e['repeats']} repeats "
+                             f"(< {MIN_REPEATS})")
+        if not (e["iqr_lo_s"] <= e["median_s"] <= e["iqr_hi_s"]):
+            raise ValueError(f"entry {e['name']!r}: median outside IQR")
+        if e["name"] in seen:
+            raise ValueError(f"duplicate entry name {e['name']!r}")
+        seen.add(e["name"])
+    return record
+
+
+def write_bench(record: dict, path: str | pathlib.Path) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(validate(record), indent=1, sort_keys=True)
+                 + "\n")
+
+
+def append_history(record: dict, path: str | pathlib.Path) -> None:
+    """One JSONL line per harness run: the repo's measured trajectory
+    (``results/bench_history.jsonl``), separate from the committed baseline
+    snapshot the gate compares against."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    line = {"ts": time.time(), "kind": record["kind"],
+            "host": record["host"], "config": record["config"],
+            "entries": {e["name"]: {k: e[k] for k in
+                                    ("median_s", "iqr_lo_s", "iqr_hi_s",
+                                     "repeats")}
+                        for e in record["entries"]}}
+    with open(p, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small/medium sweep sizes, "
+                         f"{SMOKE_REPEATS} repeats (policy rows keep all "
+                         "size classes so calibration coverage holds)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help=f"samples per case (>= {MIN_REPEATS}; default "
+                         f"{DEFAULT_REPEATS}, smoke {SMOKE_REPEATS})")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_comm.json / BENCH_train.json land "
+                         "(default: repo root — the committed baseline)")
+    ap.add_argument("--history", default="results/bench_history.jsonl",
+                    help="JSONL trajectory to append to ('' disables)")
+    ap.add_argument("--only", choices=["comm", "train"], default=None)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="also write results/calibration_report.json: "
+                         "modeled-vs-measured error per (op, size_class, "
+                         "backend), α-β fits, and the plan.refine/"
+                         "plan.calibrate round-trip (DESIGN.md §14)")
+    args = ap.parse_args(argv)
+
+    repeats = args.repeats or (SMOKE_REPEATS if args.smoke
+                               else DEFAULT_REPEATS)
+    sizes = ("small", "medium") if args.smoke else \
+        ("small", "medium", "large")
+    out = pathlib.Path(args.out_dir)
+    records = {}
+    if args.only in (None, "comm"):
+        rec = run_comm_bench(repeats, sizes, smoke=args.smoke)
+        write_bench(rec, out / "BENCH_comm.json")
+        records["comm"] = rec
+        print(f"BENCH_comm.json: {len(rec['entries'])} entries, "
+              f"{repeats} repeats each")
+    if args.only in (None, "train"):
+        rec = run_train_bench(repeats, smoke=args.smoke)
+        write_bench(rec, out / "BENCH_train.json")
+        records["train"] = rec
+        e = rec["entries"][0]
+        print(f"BENCH_train.json: median {e['median_s']*1e3:.1f} ms/step, "
+              f"IQR [{e['iqr_lo_s']*1e3:.1f}, {e['iqr_hi_s']*1e3:.1f}] ms, "
+              f"{e['tokens_per_s_median']:.0f} tokens/s")
+    if args.history:
+        for rec in records.values():
+            append_history(rec, args.history)
+    if args.calibrate:
+        from repro.plan.measured import calibration_record
+        report = calibration_record(records.get("comm"),
+                                    records.get("train"))
+        p = pathlib.Path("results/calibration_report.json")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+        print(f"calibration_report.json: {len(report['rows'])} "
+              f"modeled-vs-measured rows, comm_scale "
+              f"{report['comm_scale']:.3g}, compute_scale "
+              f"{report['train']['compute_scale']:.3g}, planner choice "
+              f"{'unchanged' if report['planner_check']['unchanged'] else 'CHANGED'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,11 @@ def _mesh3():
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)                                   # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+    """Median of per-call wall times (each call blocked) — one scheduler
+    hiccup can't skew the row, same discipline as ``benchmarks.measure``."""
+    from benchmarks.measure import sample_times
+    return float(np.median(sample_times(lambda: fn(*args), repeats=iters,
+                                        warmup=1)))
 
 
 def collectives_microbench():

@@ -161,7 +161,8 @@ def profile_throughput(step_fn: Callable[[], object], tokens_per_step: int,
             ``jax.block_until_ready``).
         tokens_per_step: live tokens one step processes here.
         warmup: steps discarded (compile + cache warming).
-        iters: measured steps averaged over.
+        iters: measured steps; the *median* per-step time is used, so one
+            scheduler hiccup can't skew the speed fed to :func:`make_plan`.
     Returns:
         ``(tokens_per_s, profiling_seconds)`` — the speed that seeds
         :func:`make_plan` (or the refinement loop, ``repro.plan.refine``)
@@ -170,10 +171,12 @@ def profile_throughput(step_fn: Callable[[], object], tokens_per_step: int,
     t_start = time.perf_counter()
     for _ in range(warmup):
         step_fn()
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         step_fn()
-    dt = (time.perf_counter() - t0) / iters
+        samples.append(time.perf_counter() - t0)
+    dt = float(np.median(samples))
     return tokens_per_step / dt, time.perf_counter() - t_start
 
 

@@ -10,7 +10,8 @@ bucket size, ZeRO stage, per-pod micro-batch shares):
     rc  = tp.run_config()           # -> RunConfig for make_train_program
 
 See ``autotuner`` for the search, ``refine`` for the measured-profile
-feedback loop, and DESIGN.md §9 for the cost model and re-plan contract.
+feedback loop, ``measured`` for the bench-record calibration (DESIGN.md
+§14), and DESIGN.md §9 for the cost model and re-plan contract.
 """
 from repro.plan.autotuner import (CLASS_REP_BYTES, DEFAULT_BUCKET,
                                   DEFAULT_SPACE, MiB, POLICY_OPS,
@@ -21,12 +22,23 @@ from repro.plan.autotuner import (CLASS_REP_BYTES, DEFAULT_BUCKET,
                                   plan_request,
                                   pod_profiles, policy_table_for, rank,
                                   workload_for)
+from repro.plan.measured import (AlphaBetaFit, CalibrationRow, bench_cluster,
+                                 calibrated_plan, calibration_record,
+                                 calibration_report, comm_scale_from_report,
+                                 fit_alpha_beta, missing_table_rows,
+                                 modeled_train_step_s, planner_check,
+                                 profiles_from_train, train_request)
 from repro.plan.refine import calibrate, refine, refined_frontier
 
 __all__ = [
-    "CLASS_REP_BYTES", "DEFAULT_BUCKET", "DEFAULT_SPACE", "MiB",
+    "AlphaBetaFit", "CLASS_REP_BYTES", "CalibrationRow", "DEFAULT_BUCKET",
+    "DEFAULT_SPACE", "MiB",
     "POLICY_OPS", "RING_BACKED_OPS", "PlanRequest", "SearchSpace", "TrainPlan", "autotune",
-    "autotune_policies", "best_policy", "calibrate", "estimate_hbm_bytes",
-    "grad_payload_bytes", "plan_request", "pod_profiles", "policy_table_for", "rank", "refine",
-    "refined_frontier", "workload_for",
+    "autotune_policies", "bench_cluster", "best_policy", "calibrate",
+    "calibrated_plan", "calibration_record", "calibration_report",
+    "comm_scale_from_report", "estimate_hbm_bytes", "fit_alpha_beta",
+    "grad_payload_bytes", "missing_table_rows", "modeled_train_step_s",
+    "plan_request", "planner_check", "pod_profiles", "policy_table_for",
+    "profiles_from_train", "rank", "refine",
+    "refined_frontier", "train_request", "workload_for",
 ]

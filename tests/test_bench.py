@@ -1,0 +1,393 @@
+"""Measured-benchmark harness, regression gate, and calibration loop
+(DESIGN.md §14): schema contract, deterministic enumeration, variance-aware
+gating, and the measured→planner round trip."""
+import copy
+import json
+import pathlib
+
+import pytest
+
+from benchmarks import check_regression as gate
+from benchmarks import measure
+from repro import plan
+from repro.plan import measured
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# Synthetic records (no jax, no timing): the schema is the contract
+# ---------------------------------------------------------------------------
+
+def _entry(name, median, lo=None, hi=None, **over):
+    lo = median * 0.9 if lo is None else lo
+    hi = median * 1.1 if hi is None else hi
+    e = {"name": name, "op": "all_reduce", "mode": "hier", "backend": "xla",
+         "n_channels": 1, "n_stripes": 1, "nbytes": 1 << 20,
+         "size_class": "medium", "group": "sweep", "repeats": 5,
+         "median_s": median, "iqr_lo_s": lo, "iqr_hi_s": hi,
+         "min_s": lo, "mean_s": median}
+    e.update(over)
+    return e
+
+
+def _record(entries, kind="comm"):
+    return {"schema_version": measure.SCHEMA_VERSION, "kind": kind,
+            "host": {"platform": "test", "machine": "x", "cpu_count": 1,
+                     "jax": "0", "jax_backend": "cpu", "n_devices": 8},
+            "config": {"repeats": 5, "warmup": 2, "smoke": True,
+                       "mesh": [4, 2], "mesh_axes": ["pod", "data"],
+                       "sizes": ["medium"], "include_policy": False},
+            "entries": entries}
+
+
+class TestSchema:
+    def test_valid_record_passes(self):
+        measure.validate(_record([_entry("a", 1e-3), _entry("b", 2e-3)]))
+
+    def test_wrong_schema_version(self):
+        rec = _record([_entry("a", 1e-3)])
+        rec["schema_version"] = 999
+        with pytest.raises(ValueError, match="schema_version"):
+            measure.validate(rec)
+
+    def test_missing_field(self):
+        e = _entry("a", 1e-3)
+        del e["iqr_hi_s"]
+        with pytest.raises(ValueError, match="iqr_hi_s"):
+            measure.validate(_record([e]))
+
+    def test_too_few_repeats(self):
+        with pytest.raises(ValueError, match="repeats"):
+            measure.validate(_record([_entry("a", 1e-3, repeats=3)]))
+
+    def test_median_outside_iqr(self):
+        with pytest.raises(ValueError, match="IQR"):
+            measure.validate(_record([_entry("a", 1e-3, lo=2e-3, hi=3e-3)]))
+
+    def test_duplicate_names(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            measure.validate(_record([_entry("a", 1e-3), _entry("a", 2e-3)]))
+
+    def test_empty_entries(self):
+        with pytest.raises(ValueError, match="no entries"):
+            measure.validate(_record([]))
+
+    def test_committed_baselines_validate(self):
+        """The repo-root BENCH files are themselves schema-valid with >=5
+        repeats — the acceptance floor of the measured trajectory."""
+        for fname in ("BENCH_comm.json", "BENCH_train.json"):
+            p = ROOT / fname
+            assert p.exists(), f"{fname} missing at repo root"
+            rec = measure.validate(json.loads(p.read_text()))
+            for e in rec["entries"]:
+                assert e["repeats"] >= measure.MIN_REPEATS
+                assert e["iqr_lo_s"] <= e["median_s"] <= e["iqr_hi_s"]
+
+    def test_stats_median_iqr(self):
+        st = measure.stats([5.0, 1.0, 3.0, 2.0, 4.0])
+        assert st["median_s"] == 3.0
+        assert st["iqr_lo_s"] == 2.0 and st["iqr_hi_s"] == 4.0
+        assert st["repeats"] == 5 and st["min_s"] == 1.0
+
+    def test_stats_needs_min_repeats(self):
+        with pytest.raises(ValueError):
+            measure.stats([1.0, 2.0])
+
+
+class TestEnumeration:
+    def test_deterministic(self):
+        """Two enumerations are identical — names are the regression-gate
+        join key, so ordering and identity must be reproducible."""
+        assert measure.comm_cases() == measure.comm_cases()
+
+    def test_names_unique(self):
+        names = [c.name for c in measure.comm_cases()]
+        assert len(names) == len(set(names))
+
+    def test_dimension_pruning(self):
+        """Mirrors the planner's ``_comm_candidates``: flat is xla-only,
+        stripes only vary on pallas."""
+        for c in measure.comm_cases(include_policy=False):
+            if c.mode == "flat":
+                assert c.backend == "xla"
+            if c.backend != "pallas":
+                assert c.n_stripes == 1
+
+    def test_policy_rows_cover_active_table(self):
+        table = measure.active_policy_table()
+        cases = [c for c in measure.comm_cases() if c.group == "policy"]
+        assert {(c.op, c.size_class) for c in cases} == \
+            {key for key, _ in table.rows}
+        by_key = {(c.op, c.size_class): c for c in cases}
+        for (op, cls), pol in table.rows:
+            c = by_key[(op, cls)]
+            assert (c.mode, c.backend) == (pol.mode, pol.backend)
+
+
+# ---------------------------------------------------------------------------
+# Regression gate: variance-aware verdicts
+# ---------------------------------------------------------------------------
+
+class TestGate:
+    # >=0.1s cases sit in the tight (+-10%) noise-floor regime, so the
+    # verdicts below are pure threshold/IQR semantics; the duration-scaled
+    # floor for fast cases is covered separately.
+    def _base(self):
+        return _record([_entry("x", 0.1), _entry("y", 0.2),
+                        _entry("z", 0.4)])
+
+    def test_identical_passes(self):
+        res = gate.compare(self._base(), copy.deepcopy(self._base()))
+        assert res and not any(r.fail for r in res)
+
+    def test_noise_overlap_passes(self):
+        """+30% median but overlapping IQRs: slow, not a failure."""
+        cur = self._base()
+        cur["entries"][0] = _entry("x", 0.13, lo=0.095, hi=0.15)
+        res = gate.compare(self._base(), cur, threshold=0.25,
+                           normalize=False)
+        rx = next(r for r in res if r.name == "x")
+        assert rx.regressed and rx.iqr_overlap and not rx.fail
+
+    def test_clear_regression_fails(self):
+        """2x median, disjoint IQRs: the gate must fire."""
+        cur = self._base()
+        cur["entries"][0] = _entry("x", 0.2, lo=0.19, hi=0.21)
+        res = gate.compare(self._base(), cur, threshold=0.25,
+                           normalize=False)
+        assert next(r for r in res if r.name == "x").fail
+        assert not any(r.fail for r in res if r.name != "x")
+
+    def test_duration_scaled_noise_floor(self):
+        """The same 1.9x ratio with tight IQRs passes for a sub-2ms case
+        (between-run CPU noise regime, +-35% floor) but fails for a 0.1s
+        case (+-10% floor) — the floor scales with how trustworthy the
+        timing is."""
+        assert gate.noise_floor(1e-3) == 0.35
+        assert gate.noise_floor(5e-3) == 0.25
+        assert gate.noise_floor(0.1) == 0.10
+        for median, should_fail in ((1e-3, False), (0.1, True)):
+            base = _record([_entry("f", median), _entry("s", 0.2),
+                            _entry("t", 0.4)])
+            cur = _record([_entry("f", median * 1.9, lo=median * 1.85,
+                                  hi=median * 1.95),
+                           _entry("s", 0.2), _entry("t", 0.4)])
+            res = gate.compare(base, cur, normalize=False)
+            rf = next(r for r in res if r.name == "f")
+            assert rf.regressed and rf.fail == should_fail, (median, rf)
+
+    def test_uniform_slowdown_normalized_away(self):
+        """3x slower on every case = a slower host, not a regression: the
+        host factor absorbs it and the gate passes."""
+        cur = self._base()
+        cur["entries"] = [_entry(e["name"], e["median_s"] * 3,
+                                 lo=e["iqr_lo_s"] * 3, hi=e["iqr_hi_s"] * 3)
+                          for e in cur["entries"]]
+        assert abs(gate.host_factor(self._base(), cur) - 3.0) < 1e-9
+        assert not any(r.fail for r in gate.compare(self._base(), cur))
+        # ...but without normalization the same runs all fail.
+        raw = gate.compare(self._base(), cur, normalize=False)
+        assert all(r.fail for r in raw)
+
+    def test_single_regression_survives_normalization(self):
+        """One 4x case among stable peers: the median-of-ratios host factor
+        stays ~1 and the regression still fails."""
+        cur = self._base()
+        cur["entries"][2] = _entry("z", 1.6, lo=1.5, hi=1.7)
+        assert gate.host_factor(self._base(), cur) == pytest.approx(1.0)
+        res = gate.compare(self._base(), cur)
+        assert next(r for r in res if r.name == "z").fail
+
+    def test_new_and_removed_cases_ignored(self):
+        cur = self._base()
+        cur["entries"][0]["name"] = "brand_new"
+        res = gate.compare(self._base(), cur)
+        names = {r.name for r in res}
+        assert "x" not in names and "brand_new" not in names
+
+    def test_cli_missing_baseline_passes(self, tmp_path):
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(self._base()))
+        assert gate.main([str(tmp_path / "nope.json"), str(cur)]) == 0
+
+    def test_cli_bad_input_exit_2(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text("{\"schema_version\": 999}")
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(self._base()))
+        assert gate.main([str(bad), str(cur)]) == 2
+
+    def test_cli_regression_exit_1(self, tmp_path):
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(self._base()))
+        cur_rec = self._base()
+        cur_rec["entries"][0] = _entry("x", 0.2, lo=0.19, hi=0.21)
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(cur_rec))
+        assert gate.main([str(base), str(cur), "--no-normalize"]) == 1
+        # with host-factor normalization a minority regression still fails
+        assert gate.main([str(base), str(cur)]) == 1
+
+    def test_committed_baseline_gates_itself(self):
+        """The committed baseline vs itself must exit 0 (the acceptance
+        criterion CI's bench job relies on)."""
+        assert gate.main([str(ROOT / "BENCH_comm.json"),
+                          str(ROOT / "BENCH_comm.json")]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Calibration: measured rows -> PodProfiles -> plan.refine / plan.calibrate
+# ---------------------------------------------------------------------------
+
+def _synthetic_comm_record():
+    """A fake measured record covering every row of the active policy table
+    plus a two-size sweep, with measured = 3x modeled (uniform host)."""
+    from repro.core import simulator as sim
+    cluster = measured.bench_cluster(4, 2)
+    entries = []
+    for op in ("all_reduce", "all_gather"):
+        for cls, nbytes in (("small", 16 * 1024), ("medium", 1 << 20)):
+            t = 3.0 * sim.collective_time(op, nbytes, cluster, "hier",
+                                          n_channels=1)
+            entries.append(_entry(f"comm/{op}/hier-xla-c1-k1/{cls}",
+                                  t, op=op, nbytes=nbytes, size_class=cls))
+    table = plan.policy_table_for(cluster)
+    for (op, cls), pol in table.rows:
+        nbytes = measure.SIZE_CLASS_BYTES[cls]
+        t = 3.0 * sim.collective_time(
+            op, nbytes, cluster, pol.mode,
+            n_channels=max(pol.n_channels, 1), backend=pol.backend,
+            n_stripes=max(pol.n_stripes, 1))
+        entries.append(_entry(
+            f"policy/{op}/{cls}/{pol.label()}", t, op=op, mode=pol.mode,
+            backend=pol.backend, n_channels=pol.n_channels,
+            n_stripes=pol.n_stripes, nbytes=nbytes, size_class=cls,
+            group="policy"))
+    return _record(entries), table
+
+
+class TestCalibration:
+    def test_report_covers_active_table(self):
+        """Every (op, size_class) row of the active policy table gets a
+        modeled-vs-measured error row — the coverage contract."""
+        rec, table = _synthetic_comm_record()
+        report = measured.calibration_report(rec)
+        assert len(report) == len(rec["entries"])
+        assert measured.missing_table_rows(report, table) == []
+        for r in report:
+            assert r.modeled_s > 0 and r.measured_s > 0
+            assert r.ratio == pytest.approx(r.measured_s / r.modeled_s)
+
+    def test_comm_scale_recovers_uniform_factor(self):
+        rec, _ = _synthetic_comm_record()
+        report = measured.calibration_report(rec)
+        assert measured.comm_scale_from_report(report) == pytest.approx(
+            3.0, rel=1e-6)
+
+    def test_missing_rows_detected(self):
+        rec, table = _synthetic_comm_record()
+        rec["entries"] = [e for e in rec["entries"]
+                          if not (e["group"] == "policy"
+                                  and e["op"] == "broadcast")]
+        report = measured.calibration_report(rec)
+        missing = measured.missing_table_rows(report, table)
+        assert missing and all(op == "broadcast" for op, _ in missing)
+
+    def test_alpha_beta_fit(self):
+        """Sweep cells with two sizes get a finite β (slope recovered);
+        the fit reproduces the synthetic t = 3x modeled points."""
+        rec, _ = _synthetic_comm_record()
+        report = measured.calibration_report(rec)
+        fits = measured.fit_alpha_beta(report)
+        assert fits
+        by_key = {(f.op, f.mode, f.backend, f.n_stripes): f for f in fits}
+        f = by_key[("all_reduce", "hier", "xla", 1)]
+        assert f.n_points == 2 and f.beta_bytes_per_s > 0
+        assert f.beta_bytes_per_s != float("inf")
+
+    def test_profiles_uniform_factor_preserves_shares(self):
+        """A uniform host factor rescales every PodProfile identically, so
+        the balancer's shares — ratios only — are untouched."""
+        from repro.core.balance import make_plan
+        cluster = measured.bench_cluster(4, 2)
+        entry = {"median_s": 0.4, "modeled_step_s": 0.1}
+        profs = measured.profiles_from_train(entry, cluster)
+        base = plan.pod_profiles(cluster)
+        for p, b in zip(profs, base):
+            assert p.tokens_per_s == pytest.approx(b.tokens_per_s * 0.25)
+        assert make_plan(profs, 16, 2).micro_per_pod == \
+            make_plan(base, 16, 2).micro_per_pod
+
+    def test_refine_reranks_and_calibrate_clamps(self):
+        """Measured evidence through plan.refine: re-ranked plan is a valid
+        TrainPlan carrying the profiles; plan.calibrate's residual stays in
+        its clamp window even for absurd observations."""
+        req = measured.default_planner_request()
+        tp = plan.autotune(req)
+        entry = {"median_s": tp.modeled_step_s * 5,
+                 "modeled_step_s": tp.modeled_step_s,
+                 "tokens_per_s_median": 1.0}
+        cal = measured.calibrated_plan(tp, entry)
+        assert cal.profiles is not None
+        assert cal.compute_scale == plan.calibrate(tp, entry["median_s"])
+        for observed in (tp.modeled_step_s * 1e6,
+                         tp.modeled_step_s * 1e-6):
+            assert 0.25 <= plan.calibrate(tp, observed) <= 8.0
+
+    def test_planner_choice_unchanged_on_mixed_fleet(self):
+        """Acceptance criterion: feeding the measured step through
+        plan.refine must not change the planner's choice on the unperturbed
+        mixed fleet (uniform factor => same ranking)."""
+        entry = {"median_s": 0.15, "modeled_step_s": 4e-5,
+                 "tokens_per_s_median": 1000.0}
+        chk = measured.planner_check(entry)
+        assert chk["unchanged"], (chk["before"], chk["after"])
+        assert 0.25 <= chk["compute_scale"] <= 8.0
+
+    def test_calibration_record_structure(self):
+        rec, table = _synthetic_comm_record()
+        train = {"schema_version": measure.SCHEMA_VERSION, "kind": "train",
+                 "host": rec["host"], "config": rec["config"],
+                 "entries": [{**_entry("train/step", 0.15),
+                              "modeled_step_s": 4e-5,
+                              "tokens_per_s_median": 1000.0}]}
+        out = measured.calibration_record(rec, train)
+        assert out["schema_version"] == measured.REPORT_SCHEMA_VERSION
+        assert len(out["rows"]) == len(rec["entries"])
+        assert out["coverage"]["missing"] == []
+        assert out["coverage"]["policy_rows"] == len(table.rows)
+        assert out["planner_check"]["unchanged"]
+        assert out["comm_scale"] == pytest.approx(3.0, rel=1e-6)
+        triples = {(r["op"], r["size_class"], r["backend"])
+                   for r in out["rows"]}
+        for (op, cls), pol in table.rows:
+            assert (op, cls, pol.backend) in triples
+
+    def test_committed_calibration_report(self):
+        """The committed results/calibration_report.json covers the active
+        table and records a stable planner choice."""
+        p = ROOT / "results" / "calibration_report.json"
+        assert p.exists()
+        rep = json.loads(p.read_text())
+        assert rep["coverage"]["missing"] == []
+        assert rep["planner_check"]["unchanged"]
+        assert 0.25 <= rep["train"]["compute_scale"] <= 8.0
+
+
+# ---------------------------------------------------------------------------
+# One real measurement: the timing core end-to-end on a cheap case
+# ---------------------------------------------------------------------------
+
+def test_sample_times_real_case():
+    """sample_times on the cheapest collective case: right count, positive
+    monotonic-clock samples, stats within schema invariants."""
+    mesh = measure._bench_mesh()
+    case = next(c for c in measure.comm_cases(sizes=("small",),
+                                              include_policy=False))
+    samples = measure.sample_times(measure._case_fn(case, mesh), repeats=5)
+    assert len(samples) == 5 and all(s > 0 for s in samples)
+    st = measure.stats(samples)
+    assert st["iqr_lo_s"] <= st["median_s"] <= st["iqr_hi_s"]
+    with pytest.raises(ValueError):
+        measure.sample_times(lambda: None, repeats=2)

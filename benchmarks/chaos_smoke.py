@@ -1,6 +1,7 @@
 """Chaos smoke: kill a pod mid-run and assert the elastic control plane
 recovers with loss bit-identical to an uninterrupted baseline (DESIGN.md
-§13 acceptance, CI `chaos` job).
+§13 acceptance, CI `chaos` job) — plus the gray-failure acceptance
+(DESIGN.md §15).
 
 Matrix:
   zero3  kill pod1 @ step 4, no checkpoint available
@@ -9,10 +10,22 @@ Matrix:
              -> recovery MUST fall back to the step-4 checkpoint
   zero3  degrade one link @ step 2
              -> no rebuild at all (transport failover territory)
+  zero3  hang pod1 @ step 4
+             -> watchdog ladder retry -> retry -> communicator rebuild,
+                no restart, no state recovery, the WHOLE trajectory
+                bit-identical to an uninterrupted run
+  zero3  slow pod1 x2.5 sustained
+             -> quarantined (not evicted), DP shares de-weighted, and the
+                simulator prices the quarantined plan strictly better than
+                both no-action and immediate eviction
+  (logic) oscillating slow/fast script
+             -> at most one quarantine transition (hysteresis + flap
+                damping); a sustained recovery reinstates
 
-In every case the post-recovery loss trajectory must equal — exactly, not
-approximately — a baseline run of the same survivor program from the same
-state, and the pre-fault prefix must equal an uninterrupted full-mesh run.
+In every kill case the post-recovery loss trajectory must equal — exactly,
+not approximately — a baseline run of the same survivor program from the
+same state, and the pre-fault prefix must equal an uninterrupted full-mesh
+run.
 
     PYTHONPATH=src python -m benchmarks.chaos_smoke
 """
@@ -120,6 +133,88 @@ def main() -> None:
                  expect_methods=[], n_steps=4)
     assert [e.kind for e in r.events] == ["link-degraded"]
     print("chaos link degrade: in-epoch, no rebuild, run completed")
+
+    # -- gray failures (DESIGN.md §15) --------------------------------------
+
+    # hang: the watchdog ladder converts a collective stall to recovery with
+    # no human in the loop and no restart: bounded retries, then a
+    # communicator rebuild; the state never moves, so the WHOLE trajectory
+    # (scenario() compares all n_steps when there are no recoveries) is
+    # bit-identical to an uninterrupted run.
+    r = scenario(3, "hang:pod1@4", ckpt_every=50, expect_methods=[])
+    assert r.hang_actions == ["retry", "retry", "rebuild"], r.hang_actions
+    assert [rb.event.kind for rb in r.rebuilds] == ["comm-rebuild"]
+    assert not r.recoveries        # comm rebuild, never a state recovery
+    print(f"chaos hang: ladder {'->'.join(r.hang_actions)}, comm rebuild at "
+          f"step {r.rebuilds[0].event.step}, loss bit-identical to baseline")
+
+    # slow: sustained 2.5x slowdown -> quarantine de-weights the pod's DP
+    # share instead of evicting it, and the simulator prices that verdict.
+    from repro.core import simulator as sim
+    from repro.core.balance import PodProfile, make_plan, uniform_plan as up
+    from repro.core.topology import ClusterSpec
+
+    prog = make_train_program(
+        model, mesh,
+        RunConfig(zero_stage=3, collective_mode="hier", learning_rate=1e-3,
+                  param_dtype="float32"),
+        up(2, 6, 1))       # 6 micro-steps: room for shares to actually move
+    cluster = cluster_for_mesh(mesh)
+    with tempfile.TemporaryDirectory() as d:
+        state = prog.init_fn(jax.random.PRNGKey(1))
+        state, rep = elastic.run_elastic(
+            prog, state, make_batches, cluster=cluster,
+            ckpt_dir=os.path.join(d, "s"), n_steps=12,
+            script=elastic.parse_script("slow:pod1x2.5@3-30"))
+    assert [e.kind for e in rep.events] == ["pod-slow", "pod-quarantined"], \
+        [e.kind for e in rep.events]
+    assert not rep.recoveries      # de-weighted, not evicted
+    plan_quar = rep.rebuilds[0].plan
+    assert plan_quar.micro_per_pod[1] < plan_quar.micro_per_pod[0], plan_quar
+    assert [h["step"] for h in rep.history] == list(range(12))
+
+    # the pricing: modeled step time of the quarantined plan must beat both
+    # leaving the slow pod at full share and evicting it outright.
+    pod0 = cluster.pods[0]
+    wl = sim.TrainWorkload(
+        "gray", flops_per_token=pod0.effective_flops / (seq * pod0.n_chips),
+        param_bytes=1e6, seq_len=seq, micro_batch=1, zero_stage=1)
+    factors = {"pod1": 2.5}
+    price = lambda c, p, f: sim.planned_step_time(
+        wl, c, p, "auto", n_channels=4, bucket_bytes=1 << 20,
+        compute_factors=f)
+    t_none = price(cluster, up(2, 6, 1), factors)
+    t_quar = price(cluster, plan_quar, factors)
+    survivor = ClusterSpec((pod0,), inter_pod_bw=cluster.inter_pod_bw,
+                           inter_pod_alpha=cluster.inter_pod_alpha)
+    t_evict = price(survivor, make_plan([PodProfile(pod0.name, 1.0)], 6, 1),
+                    None)
+    assert t_quar < t_evict and t_quar < t_none, (t_quar, t_evict, t_none)
+    print(f"chaos slow: quarantined shares={plan_quar.micro_per_pod}, "
+          f"modeled {t_quar:.2f}s < evict {t_evict:.2f}s < "
+          f"no-action {t_none:.2f}s")
+
+    # oscillating pod: hysteresis + flap damping admit at most ONE
+    # quarantine transition, and short fast windows never reinstate...
+    osc = elastic.parse_script(
+        "slow:pod1x2@3-8;slow:pod1x2@11-14;slow:pod1x2@17-20")
+    tracker = elastic.StragglerTracker()
+    for s in range(24):
+        tracker.observe("pod1", s, osc.compute_factor("pod1", s))
+    quar_edges = [t for t in tracker.transitions
+                  if t.to == elastic.POD_QUARANTINED]
+    assert len(quar_edges) == 1, tracker.transitions
+    assert tracker.state("pod1") == elastic.POD_QUARANTINED
+    # ...while a sustained recovery does reinstate.
+    rec_script = elastic.parse_script("slow:pod1x2@3-8")
+    tracker2 = elastic.StragglerTracker()
+    for s in range(16):
+        tracker2.observe("pod1", s, rec_script.compute_factor("pod1", s))
+    assert tracker2.state("pod1") == elastic.POD_HEALTHY
+    assert [t.to for t in tracker2.transitions] == [
+        elastic.POD_SUSPECT, elastic.POD_QUARANTINED, elastic.POD_HEALTHY]
+    print("chaos flap: oscillating pod -> 1 quarantine transition, "
+          "sustained recovery -> reinstated")
     print("chaos smoke OK")
 
 

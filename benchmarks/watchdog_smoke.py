@@ -1,0 +1,75 @@
+"""Watchdog smoke: derived collective deadlines must cover every row of the
+active policy table and clear every measured median (DESIGN.md §15
+acceptance, CI `chaos` job).
+
+Coverage-enforced like ``plan.measured.missing_table_rows``: an (op, size
+class) the autotuner emits but the watchdog cannot price would be an
+unwatched collective — exactly the gray failure the ladder exists to catch —
+so it fails CI here, not in production.  Against the committed
+``BENCH_comm.json`` the smoke additionally asserts the derivation contract:
+every deadline with measured evidence sits at >= tolerance x the measured
+median of its (op, size_class, backend) cell, and the derivation records
+modeled time, calibration scale and noise for auditability.
+
+    PYTHONPATH=src python -m benchmarks.watchdog_smoke
+"""
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    from repro.elastic.watchdog import derive_deadlines, load_bench
+    from repro.plan import measured as meas
+    from repro.plan.autotuner import policy_table_for
+
+    bench = load_bench()
+    assert bench is not None, "committed BENCH_comm.json not found"
+    cluster = meas._record_cluster(bench)
+    table = policy_table_for(cluster)
+    dt = derive_deadlines(cluster, table, bench)
+
+    # 1. coverage: every (op, size class) row the planner can emit has a
+    #    deadline — no unwatched collectives.
+    missing = dt.missing_rows(table)
+    assert missing == [], f"policy rows without deadlines: {missing}"
+
+    # 2. evidence floor: a deadline never undercuts measured reality, with
+    #    the full tolerance as headroom.
+    measured = [r for r in dt.rows if r.measured_median_s is not None]
+    assert measured, "no deadline has measured evidence — calibration broken"
+    for r in dt.rows:
+        assert r.deadline_s > 0 and r.modeled_s > 0, r
+        if r.measured_median_s is not None:
+            assert r.deadline_s >= r.measured_median_s * dt.tolerance, r
+
+    # 3. derivation is priced, not guessed: modeled time and calibration
+    #    scale are recorded per rule, and scaling is cell-specific (the
+    #    measured/modeled ratio genuinely varies across cells).
+    scales = {r.scale for r in measured}
+    assert len(scales) >= 2, f"calibration collapsed to one scale: {scales}"
+
+    n_cells = len({(r.op, r.size_class) for r in dt.rows})
+    print(f"watchdog smoke OK: {len(dt.rows)} deadlines over {n_cells} "
+          f"(op, size class) cells, {len(measured)} measured-calibrated, "
+          f"tolerance {dt.tolerance}x; representative "
+          f"{dt.representative().op}/{dt.representative().size_class} = "
+          f"{dt.representative().deadline_s:.2f}s")
+    out = {
+        "tolerance": dt.tolerance,
+        "rules": [{
+            "op": r.op, "size_class": r.size_class, "backend": r.backend,
+            "modeled_s": r.modeled_s, "scale": r.scale, "noise": r.noise,
+            "measured_median_s": r.measured_median_s,
+            "deadline_s": r.deadline_s,
+        } for r in sorted(dt.rows, key=lambda r: (r.op, r.size_class))],
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/watchdog_deadlines.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote results/watchdog_deadlines.json")
+
+
+if __name__ == "__main__":
+    main()

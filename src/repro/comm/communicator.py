@@ -128,6 +128,18 @@ class Communicator:
         prefer :meth:`policy`/:meth:`class_policy` in new code."""
         return self.class_policy("all_reduce", "large").mode
 
+    def deadline_table(self, cluster, bench_comm=None, *, tolerance=None):
+        """Derive this communicator's collective deadlines on ``cluster``
+        (DESIGN.md §15): every row of the policy table priced by the
+        simulator, calibrated against ``bench_comm`` (the committed
+        ``BENCH_comm.json`` record) when given.  Convenience front door to
+        :func:`repro.elastic.watchdog.derive_deadlines` — lazily imported,
+        the comm layer stays free of elastic dependencies."""
+        from repro.elastic.watchdog import DEFAULT_TOLERANCE, derive_deadlines
+        return derive_deadlines(cluster, self.table, bench_comm,
+                                tolerance=(DEFAULT_TOLERANCE if tolerance
+                                           is None else tolerance))
+
 
 def create(local_axes: tuple[str, ...] = ("data",),
            pod_axis: str | None = "pod", *,

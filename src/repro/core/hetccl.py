@@ -271,16 +271,45 @@ def _payload_bytes(op: str, x, c: Communicator) -> int:
     return nbytes
 
 
+# Armed collective watchdog (DESIGN.md §15), or None.  Module-global like
+# the _CURRENT communicator: the dispatch path must not thread a watchdog
+# argument through every collective call site.
+_WATCHDOG = None
+
+
+def arm_watchdog(wd) -> None:
+    """Install a :class:`repro.elastic.watchdog.CollectiveWatchdog` on the
+    dispatch path: every *eagerly executed* collective is timed against its
+    model-derived deadline and a breach raises ``CollectiveHangError``.
+    Traced dispatches (inside jit — the train step compiles once and the
+    per-call wall time belongs to XLA, not to one collective) pass through
+    unwatched; step-level stalls there are the elastic loop's
+    ``watchdog.stall`` territory."""
+    global _WATCHDOG
+    _WATCHDOG = wd
+
+
+def disarm_watchdog() -> None:
+    global _WATCHDOG
+    _WATCHDOG = None
+
+
 def _call(op: str, x, cfg, **kw):
     """Communicator-scoped dispatch (DESIGN.md §12): resolve this payload's
     policy from the active communicator's (op, size class) table, then let
     tacc.dispatch map exactly the policy fields the resolved variant
-    declared."""
+    declared.  An armed watchdog times eager dispatches against their
+    derived deadline (DESIGN.md §15)."""
     c = _as_communicator(cfg)
-    pol = c.policy(op, _payload_bytes(op, x, c))
+    nbytes = _payload_bytes(op, x, c)
+    pol = c.policy(op, nbytes)
     variant = c.variant_for(op, pol)
     if variant == "pipelined" and c.pipeline_chunk_bytes:
         kw.setdefault("pipeline_chunk_bytes", c.pipeline_chunk_bytes)
+    if _WATCHDOG is not None and not isinstance(x, jax.core.Tracer):
+        with _WATCHDOG.watch(op, nbytes):
+            return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
+                                 variant=variant, policy=pol, **kw)
     return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
                          variant=variant, policy=pol, **kw)
 

@@ -382,9 +382,31 @@ class TrainWorkload:
         return self.micro_batch * self.seq_len
 
 
+def pod_compute_seconds(workload: TrainWorkload, cluster: ClusterSpec,
+                        plan: HetPlan,
+                        compute_factors=None) -> tuple[float, ...]:
+    """Per-pod compute seconds for one step: pod i runs
+    ``plan.micro_per_pod[i]`` micro-steps at its effective FLOP/s.
+
+    ``compute_factors``: optional ``pod name -> slowdown multiple`` (>= 1)
+    modeling a gray-degraded island (thermal throttling, the chaos ``slow:``
+    injection, DESIGN.md §15).  The synchronous step pays the *max* over
+    pods — which is exactly why one slow island sets the fleet's pace and
+    why quarantine de-weights it (``plan.refine.deweighted_profiles``).
+    """
+    factors = compute_factors or {}
+    out = []
+    for pod, n_micro in zip(cluster.pods, plan.micro_per_pod):
+        per_micro = (workload.tokens_per_micro * pod.n_chips *
+                     workload.flops_per_token) / pod.effective_flops
+        out.append(n_micro * per_micro * float(factors.get(pod.name, 1.0)))
+    return tuple(out)
+
+
 def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
               mode: str = "auto", overlap: float = 0.0,
-              comm_scale: float = 1.0, backend: str = "xla") -> float:
+              comm_scale: float = 1.0, backend: str = "xla",
+              compute_factors=None) -> float:
     """One optimizer step: max-over-pods compute + collective traffic.
 
     ZeRO-1: grads AllReduce'd once per step (bucketed);
@@ -395,13 +417,10 @@ def step_time(workload: TrainWorkload, cluster: ClusterSpec, plan: HetPlan,
     contention effects the bulk α-β terms miss (paper ZeRO-3 on PCIe: layers
     × 3 blocking collectives sharing one link with gradient traffic; ~20 on
     the paper testbed, 1.0 for bulk-synchronous TPU estimates).
+    ``compute_factors``: per-pod slowdown multiples
+    (:func:`pod_compute_seconds`).
     """
-    # compute: pod i runs micro_per_pod[i] micro-steps
-    comp = 0.0
-    for pod, n_micro in zip(cluster.pods, plan.micro_per_pod):
-        per_micro = (workload.tokens_per_micro * pod.n_chips *
-                     workload.flops_per_token) / pod.effective_flops
-        comp = max(comp, n_micro * per_micro)
+    comp = max(pod_compute_seconds(workload, cluster, plan, compute_factors))
     if workload.zero_stage >= 3:
         comm = collective_time("all_gather", 2 * workload.param_bytes, cluster,
                                mode, backend=backend)
@@ -497,7 +516,7 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
                       comm_scale: float = 1.0,
                       compute_scale: float = 1.0,
                       backend: str = "xla", n_stripes=1,
-                      policies=None) -> float:
+                      policies=None, compute_factors=None) -> float:
     """Step time of one fully-specified plan candidate (DESIGN.md §9).
 
     Same compute model as :func:`step_time` (max over pods of each pod's
@@ -508,16 +527,14 @@ def planned_step_time(workload: TrainWorkload, cluster: ClusterSpec,
     calibration factor (observed/modeled; ``repro.plan.refine``).
     ``policies``: optional per-op ``PolicyTable`` (DESIGN.md §12) — each op
     class is then priced under its own policy instead of the single
-    mode/backend/channels/stripes tuple.
+    mode/backend/channels/stripes tuple.  ``compute_factors``: per-pod
+    slowdown multiples — what prices the quarantine-vs-evict verdicts of
+    ``benchmarks/chaos_smoke.py`` (DESIGN.md §15).
 
     Returns:
         Modeled seconds per optimizer step for this candidate.
     """
-    comp = 0.0
-    for pod, n_micro in zip(cluster.pods, plan.micro_per_pod):
-        per_micro = (workload.tokens_per_micro * pod.n_chips *
-                     workload.flops_per_token) / pod.effective_flops
-        comp = max(comp, n_micro * per_micro)
+    comp = max(pod_compute_seconds(workload, cluster, plan, compute_factors))
     if workload.zero_stage >= 3:
         comm = zero3_comm_time(workload.param_bytes, n_layers, cluster, mode,
                                n_channels=n_channels, backend=backend,

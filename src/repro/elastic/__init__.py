@@ -1,4 +1,5 @@
-"""repro.elastic: pod-loss survival without a job restart (DESIGN.md §13).
+"""repro.elastic: pod-loss survival without a job restart (DESIGN.md §13),
+plus the gray-failure ladder (DESIGN.md §15).
 
 The fault-domain control plane that closes the detect -> rebuild -> re-plan
 -> recover loop in one place:
@@ -7,38 +8,59 @@ The fault-domain control plane that closes the detect -> rebuild -> re-plan
     membership.py  epoch state machine (RUNNING -> DRAINING -> REBUILDING)
     recover.py     checkpointless ZeRO resharding from surviving replicas
     chaos.py       deterministic fault injector + the elastic run loop
+    watchdog.py    model-derived collective deadlines + the hang ladder
+                   (retry -> communicator rebuild -> evict)
+    quarantine.py  per-pod straggler hysteresis (healthy -> suspect ->
+                   quarantined -> evicted), DP de-weighting over eviction
 
 Quick start::
 
     from repro import elastic
-    script = elastic.parse_script("kill:pod1@3")
+    script = elastic.parse_script("slow:pod1x2.5@3-10;kill:pod1@20")
     state, report = elastic.run_elastic(
         prog, state, make_batches, cluster=cluster, script=script,
-        ckpt_dir=ckpt_dir, n_steps=10, train_plan=tp)
+        ckpt_dir=ckpt_dir, n_steps=30, train_plan=tp)
     assert report.recovery_methods  # "checkpointless" under ZeRO-3
 """
 from repro.elastic.chaos import (ChaosAction, ChaosScript, ElasticReport,
-                                 MembershipSignal, PodJoinSignal,
+                                 MembershipSignal, PlanSignal, PodJoinSignal,
                                  PodLostError, parse_script, run_elastic)
-from repro.elastic.detect import (EVENT_LINK_DEGRADED, EVENT_LINK_RECOVERED,
-                                  EVENT_POD_DEAD, EVENT_POD_JOINED,
+from repro.elastic.detect import (EVENT_COMM_REBUILD, EVENT_LINK_DEGRADED,
+                                  EVENT_LINK_RECOVERED, EVENT_POD_DEAD,
+                                  EVENT_POD_JOINED, EVENT_POD_QUARANTINED,
+                                  EVENT_POD_REINSTATED, EVENT_POD_SLOW,
                                   FailureDetector, HeartbeatMonitor, PodEvent,
                                   dead_pods)
 from repro.elastic.membership import (DRAINING, REBUILDING, RUNNING,
                                       Membership, MembershipError,
                                       RebuildResult)
+from repro.elastic.quarantine import (POD_EVICTED, POD_HEALTHY,
+                                      POD_QUARANTINED, POD_SUSPECT,
+                                      QuarantinePolicy, StragglerTracker,
+                                      StragglerTransition)
 from repro.elastic.recover import (IncompleteCoverage, RecoveryResult,
                                    assemble_from_survivors, pod_devices,
                                    recover_state, survivor_mesh)
+from repro.elastic.watchdog import (CollectiveHangError, CollectiveHangSignal,
+                                    CollectiveWatchdog, DeadlineRule,
+                                    DeadlineTable, HangEvent,
+                                    derive_deadlines, load_bench)
 
 __all__ = [
     "ChaosAction", "ChaosScript", "ElasticReport", "MembershipSignal",
-    "PodJoinSignal", "PodLostError", "parse_script", "run_elastic",
-    "EVENT_LINK_DEGRADED", "EVENT_LINK_RECOVERED", "EVENT_POD_DEAD",
-    "EVENT_POD_JOINED", "FailureDetector", "HeartbeatMonitor", "PodEvent",
-    "dead_pods",
+    "PlanSignal", "PodJoinSignal", "PodLostError", "parse_script",
+    "run_elastic",
+    "EVENT_COMM_REBUILD", "EVENT_LINK_DEGRADED", "EVENT_LINK_RECOVERED",
+    "EVENT_POD_DEAD", "EVENT_POD_JOINED", "EVENT_POD_QUARANTINED",
+    "EVENT_POD_REINSTATED", "EVENT_POD_SLOW",
+    "FailureDetector", "HeartbeatMonitor", "PodEvent", "dead_pods",
     "DRAINING", "REBUILDING", "RUNNING", "Membership", "MembershipError",
     "RebuildResult",
+    "POD_EVICTED", "POD_HEALTHY", "POD_QUARANTINED", "POD_SUSPECT",
+    "QuarantinePolicy", "StragglerTracker", "StragglerTransition",
     "IncompleteCoverage", "RecoveryResult", "assemble_from_survivors",
     "pod_devices", "recover_state", "survivor_mesh",
+    "CollectiveHangError", "CollectiveHangSignal", "CollectiveWatchdog",
+    "DeadlineRule", "DeadlineTable", "HangEvent", "derive_deadlines",
+    "load_bench",
 ]

@@ -19,6 +19,14 @@ Link-level faults never leave the segment (transport failover territory);
 membership faults raise out of the step loop — deliberately *not* in
 ``run_supervised``'s ``retryable`` tuple — and drive one full epoch
 transition before the loop resumes.
+
+Gray failures (DESIGN.md §15) ride the same machinery with two more ops:
+``slow`` (a priced compute slowdown the straggler ladder must quarantine)
+and ``hang`` (a collective stall the watchdog must convert to recovery).
+Both are *modeled*, never slept: ``slow`` synthesizes the per-pod
+step-time attributions the detector consumes, ``hang`` drives
+``CollectiveWatchdog.stall`` — so gray-failure tests stay exactly as
+deterministic as the kill/revive ones.
 """
 from __future__ import annotations
 
@@ -26,15 +34,21 @@ import dataclasses
 from typing import Callable
 
 from repro.elastic import recover as recover_mod
-from repro.elastic.detect import FailureDetector, PodEvent
+from repro.elastic.detect import (EVENT_COMM_REBUILD, FailureDetector,
+                                  PodEvent)
 from repro.elastic.membership import Membership, RebuildResult
+from repro.elastic.watchdog import (ACTION_EVICT, ACTION_REBUILD,
+                                    CollectiveHangSignal, CollectiveWatchdog,
+                                    HangEvent)
 
 OP_KILL = "kill"
 OP_REVIVE = "revive"
 OP_DEGRADE = "degrade"
 OP_DOWN = "down"
 OP_UP = "up"
-OPS = (OP_KILL, OP_REVIVE, OP_DEGRADE, OP_DOWN, OP_UP)
+OP_SLOW = "slow"
+OP_HANG = "hang"
+OPS = (OP_KILL, OP_REVIVE, OP_DEGRADE, OP_DOWN, OP_UP, OP_SLOW, OP_HANG)
 
 
 class MembershipSignal(RuntimeError):
@@ -56,16 +70,25 @@ class PodJoinSignal(MembershipSignal):
     """A pod (re)joined mid-run."""
 
 
+class PlanSignal(MembershipSignal):
+    """The straggler ladder crossed a plan-changing edge (quarantine or
+    reinstatement): DP shares must be re-weighted in place
+    (``Membership.rebuild_in_place``), membership unchanged."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ChaosAction:
     """One scripted fault: at ``step``, apply ``op`` to ``pod`` (and
-    optionally one ``link`` of it, at ``factor`` of nominal bandwidth)."""
+    optionally one ``link`` of it, at ``factor`` of nominal bandwidth —
+    or, for ``slow``, ``factor``× compute slowdown through step ``until``
+    inclusive, open-ended when ``until`` is None)."""
 
     step: int
     op: str
     pod: str
     link: int | None = None
     factor: float | None = None
+    until: int | None = None
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -75,6 +98,26 @@ class ChaosAction:
             raise ValueError("degrade needs a link index and a factor")
         if self.op in (OP_DOWN, OP_UP) and self.link is None:
             raise ValueError(f"{self.op} needs a link index")
+        if self.op == OP_SLOW:
+            if self.factor is None or self.factor < 1.0:
+                raise ValueError(f"slow needs a factor >= 1, got {self.factor}")
+        elif self.until is not None:
+            raise ValueError(f"{self.op} takes no step range")
+        if self.until is not None and self.until < self.step:
+            raise ValueError(f"step range {self.step}-{self.until} is empty")
+
+    def spec(self) -> str:
+        """Render back to the ``--chaos`` grammar (``parse_script``'s
+        inverse — the round-trip the grammar tests pin)."""
+        if self.op == OP_SLOW:
+            rng = f"{self.step}" + (f"-{self.until}"
+                                    if self.until is not None else "")
+            return f"{self.op}:{self.pod}x{self.factor:g}@{rng}"
+        if self.op == OP_DEGRADE:
+            return f"{self.op}:{self.pod}.{self.link}x{self.factor:g}@{self.step}"
+        if self.op in (OP_DOWN, OP_UP):
+            return f"{self.op}:{self.pod}.{self.link}@{self.step}"
+        return f"{self.op}:{self.pod}@{self.step}"
 
 
 class ChaosScript:
@@ -82,17 +125,27 @@ class ChaosScript:
 
     def __init__(self, actions: list[ChaosAction]):
         self.actions = sorted(actions, key=lambda a: a.step)
+        self._hangs_cleared: set[tuple[str, int]] = set()
 
     def at(self, step: int) -> list[ChaosAction]:
         return [a for a in self.actions if a.step == step]
 
     def apply(self, cluster, step: int) -> list[ChaosAction]:
         """Mutate ``cluster``'s link inventories per the actions scheduled
-        at ``step``; returns the applied actions."""
+        at ``step``; returns the applied actions.  Raises :class:`ValueError`
+        naming the offending pod when an action references one not in
+        ``cluster``."""
         applied = self.at(step)
         by_name = {p.name: p for p in cluster.pods}
         for a in applied:
-            inv = cluster.inventory(by_name[a.pod])
+            pod = by_name.get(a.pod)
+            if pod is None:
+                raise ValueError(
+                    f"chaos action {a.spec()!r} references unknown pod "
+                    f"{a.pod!r}; cluster has {sorted(by_name)}")
+            if a.op in (OP_SLOW, OP_HANG):
+                continue    # priced faults: no link-inventory mutation
+            inv = cluster.inventory(pod)
             if a.op == OP_KILL:
                 for link in inv.links:
                     inv.mark_down(link.index)
@@ -107,6 +160,38 @@ class ChaosScript:
                 inv.mark_up(a.link)
         return applied
 
+    # -- priced gray faults (DESIGN.md §15) ---------------------------------
+
+    def compute_factor(self, pod: str, step: int) -> float:
+        """Product of ``pod``'s active ``slow`` factors at ``step`` — the
+        deterministic per-pod step-time attribution the straggler ladder
+        consumes (in place of real per-pod timing in this modeled
+        environment)."""
+        f = 1.0
+        for a in self.actions:
+            if (a.op == OP_SLOW and a.pod == pod and a.step <= step
+                    and (a.until is None or step <= a.until)):
+                f *= a.factor
+        return f
+
+    def has_hangs(self) -> bool:
+        return any(a.op == OP_HANG for a in self.actions)
+
+    def active_hangs(self, step: int) -> list[str]:
+        """Pods with an injected collective stall pending at ``step``.  A
+        hang persists (a wedged channel does not heal itself) until
+        :meth:`clear_hangs` — the communicator-rebuild rung."""
+        return [a.pod for a in self.actions
+                if a.op == OP_HANG and a.step <= step
+                and (a.pod, a.step) not in self._hangs_cleared]
+
+    def clear_hangs(self, upto_step: int | None = None) -> None:
+        """A communicator rebuild reset the wedged channel: injected hangs
+        scheduled at or before ``upto_step`` (all, when None) stop firing."""
+        for a in self.actions:
+            if a.op == OP_HANG and (upto_step is None or a.step <= upto_step):
+                self._hangs_cleared.add((a.pod, a.step))
+
 
 def parse_script(spec: str) -> ChaosScript:
     """Parse the ``--chaos`` flag grammar into a :class:`ChaosScript`.
@@ -118,23 +203,31 @@ def parse_script(spec: str) -> ChaosScript:
         degrade:POD.LINKxFRAC@STEP   one link at FRAC of nominal bw
         down:POD.LINK@STEP       one link down
         up:POD.LINK@STEP         one link back up
+        slow:PODxFACTOR@STEP[-STEP]  FACTORx compute slowdown over the
+                                     (inclusive) step range; no range =
+                                     sustained from STEP on
+        hang:POD@STEP            collective stall at STEP (persists until
+                                 the watchdog's communicator rebuild)
 
-    Example: ``"degrade:pod0.1x0.25@2;kill:pod1@4;revive:pod1@8"``.
+    Example: ``"slow:pod1x2.5@3-10;hang:pod0@12;kill:pod1@20"``.
     """
     actions = []
     for part in filter(None, (s.strip() for s in spec.split(";"))):
         try:
             head, step_s = part.rsplit("@", 1)
             op, target = head.split(":", 1)
-            link, factor = None, None
-            if op == OP_DEGRADE:
+            link, factor, until = None, None, None
+            if op == OP_SLOW and "-" in step_s:
+                step_s, until_s = step_s.split("-", 1)
+                until = int(until_s)
+            if op in (OP_DEGRADE, OP_SLOW):
                 target, factor_s = target.rsplit("x", 1)
                 factor = float(factor_s)
             if "." in target and op in (OP_DEGRADE, OP_DOWN, OP_UP):
                 target, link_s = target.rsplit(".", 1)
                 link = int(link_s)
             actions.append(ChaosAction(step=int(step_s), op=op, pod=target,
-                                       link=link, factor=factor))
+                                       link=link, factor=factor, until=until))
         except (ValueError, TypeError) as e:
             raise ValueError(f"bad chaos action {part!r}: {e}") from e
     return ChaosScript(actions)
@@ -154,15 +247,28 @@ class ElasticReport:
     recoveries: list[recover_mod.RecoveryResult]
     final_prog: object = None   # the TrainProgram of the last epoch — the
                                 # handle a caller keeps training with
+    hang_events: list[HangEvent] = dataclasses.field(default_factory=list)
 
     @property
     def recovery_methods(self) -> list[str]:
         return [r.method for r in self.recoveries]
 
+    @property
+    def hang_actions(self) -> list[str]:
+        """The watchdog's ladder walk (retry/rebuild/evict per breach)."""
+        return [e.action for e in self.hang_events]
+
+
+# Nominal per-unit-of-work seconds the chaos injector synthesizes per-pod
+# step attributions from (only *ratios* to each pod's own frozen baseline
+# matter to the quarantine ladder, so the unit is arbitrary).
+BASE_STEP_S = 1.0
+
 
 def run_elastic(prog, state, make_batches: Callable, *, cluster,
                 ckpt_dir: str, n_steps: int, script: ChaosScript | None = None,
                 train_plan=None, detector: FailureDetector | None = None,
+                watchdog: CollectiveWatchdog | None = None,
                 ckpt_every: int = 50, state_bytes: float = 0.0,
                 max_restarts: int = 3, backoff_base: float = 0.0):
     """Run ``n_steps`` surviving membership changes without a job restart.
@@ -180,13 +286,32 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
         train_plan: the incumbent autotuner plan; enables the full
             ``replan_auto`` path on rebuild (fresh shares *and* policies).
         detector: optional preconfigured :class:`FailureDetector` (e.g.
-            with a heartbeat monitor); defaults to link-health only.
+            with a heartbeat monitor or a
+            :class:`~repro.elastic.quarantine.StragglerTracker`); defaults
+            to link-health only — plus a straggler tracker when the script
+            injects ``slow`` faults.
+        watchdog: optional :class:`CollectiveWatchdog`; auto-derived from
+            the program's policy table (calibrated by the committed
+            ``BENCH_comm.json`` when present) when the script injects
+            ``hang`` faults.  Armed on the ``hetccl`` dispatch path for the
+            duration of the run.
     Returns:
         ``(final_state, ElasticReport)``.
     """
+    from repro.core import hetccl
     from repro.train import ft, trainer as trainer_mod
 
-    detector = detector or FailureDetector(cluster)
+    if detector is None:
+        straggler = None
+        if script is not None and any(a.op == OP_SLOW
+                                      for a in script.actions):
+            from repro.elastic.quarantine import StragglerTracker
+            straggler = StragglerTracker()
+        detector = FailureDetector(cluster, straggler=straggler)
+    if watchdog is None and script is not None and script.has_hangs():
+        from repro.elastic.watchdog import derive_deadlines, load_bench
+        watchdog = CollectiveWatchdog(
+            derive_deadlines(cluster, prog.comm.table, load_bench()))
     membership = Membership(cluster, train_plan=train_plan, plan=prog.plan,
                             detector=detector)
     full_mesh = prog.mesh       # entry mesh holds every pod's devices
@@ -194,6 +319,29 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
     segments: list[dict] = []
     rebuilds: list[RebuildResult] = []
     recoveries: list[recover_mod.RecoveryResult] = []
+    pending_plan: list[PodEvent] = []
+    if watchdog is not None:
+        hetccl.arm_watchdog(watchdog)
+    try:
+        state, report = _elastic_loop(
+            prog, state, make_batches, cluster=cluster, ckpt_dir=ckpt_dir,
+            n_steps=n_steps, script=script, detector=detector,
+            watchdog=watchdog, membership=membership, full_mesh=full_mesh,
+            by_step=by_step, segments=segments, rebuilds=rebuilds,
+            recoveries=recoveries, pending_plan=pending_plan,
+            ckpt_every=ckpt_every, state_bytes=state_bytes,
+            max_restarts=max_restarts, backoff_base=backoff_base,
+            ft=ft, trainer_mod=trainer_mod)
+    finally:
+        if watchdog is not None:
+            hetccl.disarm_watchdog()
+    return state, report
+
+
+def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
+                  script, detector, watchdog, membership, full_mesh, by_step,
+                  segments, rebuilds, recoveries, pending_plan, ckpt_every,
+                  state_bytes, max_restarts, backoff_base, ft, trainer_mod):
     step, epoch = 0, 0
 
     while step < n_steps:
@@ -211,13 +359,29 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
                        for e in changes):
                     raise PodLostError(s, changes)
                 raise PodJoinSignal(s, changes)
+            if pending_plan:
+                raise PlanSignal(s, list(pending_plan))
+            if watchdog is not None and script is not None:
+                for pod in script.active_hangs(s):
+                    if pod in _members:
+                        ev = watchdog.stall(pod=pod, step=s)
+                        raise CollectiveHangSignal(s, ev)
             return _b(s)
 
         def beat_all(s, _rec, _members=members):
             by_step[s] = _rec
+            if watchdog is not None:
+                watchdog.clear()        # the step's collectives completed
             if detector.heartbeat is not None:
                 for name in _members:
                     detector.heartbeat.beat(name, s)
+            if detector.straggler is not None:
+                for name in _members:
+                    f = (script.compute_factor(name, s)
+                         if script is not None else 1.0)
+                    ev = detector.observe_step(name, s, BASE_STEP_S * f)
+                    if ev is not None and ev.plan_change:
+                        pending_plan.append(ev)
 
         # step_fn donates its input state, so the state this scope holds is
         # deleted after the segment's first step — stash each step's output
@@ -240,6 +404,57 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
             segments.append({"epoch": epoch, "start": seg_start,
                              "end": n_steps})
             step = n_steps
+        except CollectiveHangSignal as sig:
+            # the watchdog ladder: retry -> communicator rebuild -> evict
+            state = latest["state"]
+            segments.append({"epoch": epoch, "start": seg_start,
+                             "end": sig.step})
+            ev = sig.event
+            if ev.action == ACTION_REBUILD:
+                pe = PodEvent(kind=EVENT_COMM_REBUILD, pod=ev.pod or "",
+                              epoch=membership.epoch, step=sig.step,
+                              detail=f"hang {ev.op}/{ev.size_class} "
+                                     f"breach #{ev.breaches}")
+                detector.events.append(pe)
+                result = membership.rebuild_in_place(pe, state_bytes)
+                rebuilds.append(result)
+                # same mesh, same plan: recompiling the program IS the
+                # communicator rebuild (communicators bind at creation,
+                # DESIGN.md §12); state stays valid, no recovery needed
+                prog = trainer_mod.rebuild_program(prog, prog.mesh,
+                                                   rc=prog.rc,
+                                                   plan=result.plan)
+                if script is not None:
+                    script.clear_hangs(sig.step)
+                watchdog.clear()
+                epoch = membership.epoch
+            elif ev.action == ACTION_EVICT and ev.pod:
+                # even a fresh communicator hangs on this pod: amputate.
+                # ban -> next poll classifies it dead -> the existing
+                # membership path does the rest
+                detector.ban(ev.pod)
+            step = sig.step     # ACTION_RETRY: just re-enter at the step
+            continue
+        except PlanSignal as sig:
+            # quarantine / reinstatement: re-weight DP shares in place
+            state = latest["state"]
+            segments.append({"epoch": epoch, "start": seg_start,
+                             "end": sig.step})
+            ev = sig.events[-1]
+            if ev.epoch < membership.epoch:
+                ev = dataclasses.replace(ev, epoch=membership.epoch)
+            factors = (detector.straggler.replan_factors()
+                       if detector.straggler is not None else {})
+            result = membership.rebuild_in_place(ev, state_bytes,
+                                                 factors=factors)
+            rebuilds.append(result)
+            rc = (result.train_plan.run_config(prog.rc)
+                  if result.train_plan is not None else prog.rc)
+            prog = trainer_mod.rebuild_program(prog, prog.mesh, rc=rc,
+                                               plan=result.plan)
+            pending_plan.clear()
+            step, epoch = sig.step, membership.epoch
+            continue
         except MembershipSignal as sig:
             state = latest["state"]
             segments.append({"epoch": epoch, "start": seg_start,
@@ -274,7 +489,9 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
     return state, ElasticReport(history=history, segments=segments,
                                 events=list(detector.events),
                                 rebuilds=rebuilds, recoveries=recoveries,
-                                final_prog=prog)
+                                final_prog=prog,
+                                hang_events=(list(watchdog.events)
+                                             if watchdog is not None else []))
 
 
 def _member_mesh(full_mesh, full_cluster, member_pods):

@@ -37,6 +37,15 @@ EVENT_POD_DEAD = "pod-dead"
 EVENT_POD_JOINED = "pod-joined"
 MEMBERSHIP_EVENTS = frozenset({EVENT_POD_DEAD, EVENT_POD_JOINED})
 
+# Gray-failure events (DESIGN.md §15): the straggler ladder's edges and the
+# watchdog's communicator rebuild.  Plan events change the *plan* (DP
+# de-weighting), not the membership — the epoch machine stays in RUNNING.
+EVENT_POD_SLOW = "pod-slow"
+EVENT_POD_QUARANTINED = "pod-quarantined"
+EVENT_POD_REINSTATED = "pod-reinstated"
+EVENT_COMM_REBUILD = "comm-rebuild"
+PLAN_EVENTS = frozenset({EVENT_POD_QUARANTINED, EVENT_POD_REINSTATED})
+
 # Pod-level health classifications the detector aggregates link state into.
 POD_UP = "up"
 POD_DEGRADED = "degraded"
@@ -64,6 +73,12 @@ class PodEvent:
     def membership_change(self) -> bool:
         """True for the events the epoch state machine must act on."""
         return self.kind in MEMBERSHIP_EVENTS
+
+    @property
+    def plan_change(self) -> bool:
+        """True for the events that re-plan DP shares in place
+        (quarantine / reinstatement — DESIGN.md §15)."""
+        return self.kind in PLAN_EVENTS
 
 
 class HeartbeatMonitor:
@@ -131,20 +146,70 @@ class FailureDetector:
 
     ``epoch`` is advanced by the membership layer after each rebuild
     (``Membership.attach_detector``); events are stamped with it.
+
+    The gray middle (DESIGN.md §15): an optional
+    :class:`~repro.elastic.quarantine.StragglerTracker` receives per-pod
+    step-time attributions via :meth:`observe_step` and its ladder edges
+    surface here as typed plan events (``pod-slow`` / ``pod-quarantined`` /
+    ``pod-reinstated``); an eviction verdict lands the pod on the *ban*
+    list, which classifies as dead on the next poll — re-using the
+    membership path instead of growing a second one.
     """
 
     def __init__(self, cluster, heartbeat: HeartbeatMonitor | None = None,
-                 epoch: int = 0):
+                 epoch: int = 0, straggler=None):
         self.cluster = cluster
         self.heartbeat = heartbeat
+        self.straggler = straggler
         self.epoch = epoch
         self.events: list[PodEvent] = []
         self._last: dict[str, str] = {p.name: POD_UP for p in cluster.pods}
+        self._banned: set[str] = set()
+
+    # -- gray failures (straggler ladder) -----------------------------------
+
+    def observe_step(self, pod_name: str, step: int,
+                     seconds: float) -> PodEvent | None:
+        """Attribute one per-unit-of-work step time to ``pod_name`` and run
+        the quarantine ladder; emits the typed event for a crossed edge.
+        No-op when no straggler tracker is attached."""
+        if self.straggler is None:
+            return None
+        from repro.elastic import quarantine as q
+        tr = self.straggler.observe(pod_name, step, seconds)
+        if tr is None:
+            return None
+        if tr.to == q.POD_SUSPECT:
+            kind = EVENT_POD_SLOW
+        elif tr.to == q.POD_QUARANTINED:
+            kind = EVENT_POD_QUARANTINED
+        elif tr.to == q.POD_EVICTED:
+            # Too slow to keep even de-weighted: amputate via the existing
+            # membership path — ban makes the next poll say pod-dead.
+            self.ban(pod_name)
+            return None
+        else:
+            kind = EVENT_POD_REINSTATED
+        ev = PodEvent(kind=kind, pod=pod_name, epoch=self.epoch, step=step,
+                      detail=f"{tr.frm}->{tr.to} at {tr.ratio:.2f}x baseline")
+        self.events.append(ev)
+        return ev
+
+    def ban(self, pod_name: str) -> None:
+        """Administratively declare ``pod_name`` dead (straggler eviction /
+        post-rebuild hang): classified dead until :meth:`unban`, so link
+        revival can't bounce it back in as ``pod-joined``."""
+        self._banned.add(pod_name)
+
+    def unban(self, pod_name: str) -> None:
+        self._banned.discard(pod_name)
 
     # -- classification -----------------------------------------------------
 
     def classify(self, pod, now: float | None = None) -> tuple[str, str]:
         """(pod-health, cause) from link aggregation + heartbeat."""
+        if pod.name in self._banned:
+            return POD_DEAD, "banned (straggler eviction)"
         inv = self.cluster.inventory(pod)
         if inv.n_healthy() == 0:
             return POD_DEAD, "all links down"

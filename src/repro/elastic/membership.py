@@ -168,6 +168,85 @@ class Membership:
         self.results.append(result)
         return result
 
+    def rebuild_in_place(self, ev: PodEvent, state_bytes: float = 0.0, *,
+                         factors: dict[str, float] | None = None
+                         ) -> RebuildResult:
+        """Epoch transition with the *same* pod set (DESIGN.md §15).
+
+        The gray-failure rungs change the communicator or the plan, never
+        the membership: a watchdog ``rebuild`` verdict needs fresh
+        communicators (a wedged channel is reset by re-initialization, the
+        NCCL-communicator-abort analogue), and a quarantine/reinstatement
+        edge re-weights DP shares in place.  Both still walk
+        DRAINING -> REBUILDING -> RUNNING and bump the epoch — in-flight
+        work against the old communicators must be fenced exactly like a
+        membership change, and the stale-event guard must cover them.
+
+        Args:
+            ev: the triggering event (``comm-rebuild`` / ``pod-quarantined``
+                / ``pod-reinstated``), stamped with the current epoch.
+            factors: ``None`` keeps the incumbent plan (pure communicator
+                rebuild); a ``pod -> slowdown multiple`` mapping re-plans
+                DP shares through de-weighted profiles
+                (:func:`repro.plan.refine.deweighted_profiles`) — pass
+                ``{}`` to re-plan on *base* profiles (the reinstatement
+                path, restoring healthy shares).
+        """
+        from repro import comm as comm_mod
+        from repro.train import ft
+        if ev.epoch < self.epoch:
+            raise MembershipError(
+                f"stale event from epoch {ev.epoch} (now {self.epoch}): {ev}")
+        self._to(DRAINING)
+        self._to(REBUILDING)
+        cluster = self._snapshot(tuple(self.cluster.pods))
+        pod_axis = "pod" if len(cluster.pods) > 1 else None
+        new_tp = None
+        if factors is None:
+            plan = self.plan
+            if self.train_plan is not None:
+                comm = comm_mod.create(self.local_axes, pod_axis,
+                                       table=self.train_plan.policy_table(),
+                                       bucket_bytes=self.train_plan.bucket_bytes,
+                                       topology_slice=cluster)
+            else:
+                comm = comm_mod.create(self.local_axes, pod_axis,
+                                       topology_slice=cluster)
+        else:
+            from repro.plan.refine import deweighted_profiles
+            base = [PodProfile(p.name, p.effective_flops, p.n_chips)
+                    for p in cluster.pods]
+            profiles = deweighted_profiles(base, factors)
+            if self.train_plan is not None:
+                new_tp = ft.replan_auto(self.train_plan, profiles=profiles,
+                                        cluster=cluster)
+                plan = new_tp.plan
+                comm = comm_mod.create(self.local_axes, pod_axis,
+                                       table=new_tp.policy_table(),
+                                       bucket_bytes=new_tp.bucket_bytes,
+                                       topology_slice=cluster)
+            else:
+                plan = ft.replan(self.plan, profiles)
+                comm = comm_mod.create(self.local_axes, pod_axis,
+                                       topology_slice=cluster)
+        result = RebuildResult(
+            epoch=self.epoch + 1, event=ev, cluster=cluster, comm=comm,
+            plan=plan, train_plan=new_tp, state_bytes=state_bytes,
+            modeled_checkpointless_s=sim.rebuild_time(
+                cluster, state_bytes, checkpointless=True),
+            modeled_checkpoint_s=sim.rebuild_time(
+                cluster, state_bytes, checkpointless=False))
+        self.cluster = cluster
+        self.plan = plan
+        if new_tp is not None:
+            self.train_plan = new_tp
+        self.epoch = result.epoch
+        if self.detector is not None:
+            self.detector.epoch = self.epoch
+        self._to(RUNNING)
+        self.results.append(result)
+        return result
+
     # -- rebuild internals --------------------------------------------------
 
     def _snapshot(self, pods: tuple[PodSpec, ...]) -> ClusterSpec:

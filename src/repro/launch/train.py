@@ -63,7 +63,16 @@ def main():
     ap.add_argument("--chaos", default=None,
                     help="deterministic fault script (implies --elastic), "
                          "e.g. 'degrade:pod0.1x0.25@2;kill:pod1@4;"
-                         "revive:pod1@8' — see elastic.parse_script")
+                         "revive:pod1@8' or the gray-failure ops "
+                         "'slow:pod1x2.5@3-10;hang:pod0@12' "
+                         "(DESIGN.md §15) — see elastic.parse_script")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="arm the collective hang watchdog (implies "
+                         "--elastic): per-(op, size class) deadlines derived "
+                         "from the simulator's modeled times, calibrated by "
+                         "the committed BENCH_comm.json; breaches escalate "
+                         "retry -> communicator rebuild -> evict "
+                         "(DESIGN.md §15)")
     args = ap.parse_args()
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -163,11 +172,21 @@ def main():
             print(f"step {step:4d}  loss {m['loss']:.4f}  "
                   f"grad_norm {m['grad_norm']:.3f}", flush=True)
 
-    if args.elastic or args.chaos:
+    if args.elastic or args.chaos or args.watchdog:
         from repro import elastic
         from repro.launch.mesh import cluster_for_mesh
         cluster = cluster_for_mesh(mesh)
         script = elastic.parse_script(args.chaos) if args.chaos else None
+        # detection armed for the gray middle too: per-pod step attribution
+        # feeding the quarantine ladder (DESIGN.md §15)
+        detector = elastic.FailureDetector(
+            cluster, straggler=elastic.StragglerTracker())
+        watchdog = None
+        if args.watchdog:
+            watchdog = elastic.CollectiveWatchdog(elastic.derive_deadlines(
+                cluster, prog.comm.table, elastic.load_bench()))
+            print(f"watchdog armed: {len(watchdog.deadlines.rows)} derived "
+                  f"deadlines, tolerance {watchdog.deadlines.tolerance}x")
         state_bytes = float(sum(l.nbytes for l in jax.tree.leaves(state)))
 
         def make_batches(p):
@@ -180,16 +199,21 @@ def main():
         state, report = elastic.run_elastic(
             prog, state, make_batches, cluster=cluster,
             ckpt_dir=args.ckpt_dir, n_steps=args.steps, script=script,
-            train_plan=tp, ckpt_every=args.ckpt_every,
-            state_bytes=state_bytes)
+            train_plan=tp, detector=detector, watchdog=watchdog,
+            ckpt_every=args.ckpt_every, state_bytes=state_bytes)
         for h in report.history:
             log(h["step"], h)
-        for r, rec in zip(report.rebuilds, report.recoveries):
+        for ev in report.hang_events:
+            print(f"hang: {ev.op}/{ev.size_class} at step {ev.step} "
+                  f"(pod={ev.pod}) breach #{ev.breaches} -> {ev.action}")
+        for r in report.rebuilds:
             print(f"epoch {r.epoch}: {r.event.kind}:{r.event.pod} at step "
                   f"{r.event.step} -> pods={[p.name for p in r.cluster.pods]}"
-                  f" recovery={rec.method}@{rec.step} "
+                  f" shares={r.plan.micro_per_pod} "
                   f"modeled {r.modeled_checkpointless_s:.2f}s vs ckpt "
                   f"{r.modeled_checkpoint_s:.2f}s")
+        for rec in report.recoveries:
+            print(f"recovery: {rec.method}@{rec.step}")
         hist = report.history
     else:
         state, hist = ft.run_supervised(

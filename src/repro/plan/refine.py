@@ -21,7 +21,8 @@ change.  ``train.ft.replan_auto`` wires this into elastic restarts.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Mapping, Sequence
 
 from repro.core.balance import PodProfile
 from repro.plan.autotuner import (DEFAULT_SPACE, SearchSpace, TrainPlan,
@@ -85,6 +86,31 @@ def refine(tp: TrainPlan, profiles: Sequence[PodProfile] | None = None,
         rc2 = tp2.run_config(rc)        # restart the trainer on the new plan
     """
     return refined_frontier(tp, profiles, observed_step_s, space)[0]
+
+
+def deweighted_profiles(profiles: Sequence[PodProfile],
+                        factors: Mapping[str, float]) -> list[PodProfile]:
+    """Scale pod throughputs down by measured slowdown multiples.
+
+    The quarantine response (DESIGN.md §15): a pod observed running at
+    ``factors[pod]`` × its healthy step time keeps training on
+    ``tokens_per_s / factors[pod]`` — the balancer then shifts DP shares
+    off it proportionally instead of evicting working (if slow) hardware.
+    Pods absent from ``factors`` (and an empty mapping — the reinstatement
+    path) keep their base throughput.  Factors must be >= 1: speeding a pod
+    *up* is a profiling update (:func:`refine` with measured profiles),
+    not a de-weighting.
+    """
+    bad = {p: f for p, f in factors.items() if f < 1.0}
+    if bad:
+        raise ValueError(f"de-weight factors must be >= 1, got {bad}")
+    unknown = set(factors) - {p.name for p in profiles}
+    if unknown:
+        raise ValueError(f"de-weight factors for unknown pods {sorted(unknown)}; "
+                         f"profiles cover {[p.name for p in profiles]}")
+    return [dataclasses.replace(p, tokens_per_s=p.tokens_per_s
+                                / factors.get(p.name, 1.0))
+            for p in profiles]
 
 
 def refined_frontier(tp: TrainPlan,

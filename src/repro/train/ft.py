@@ -32,12 +32,20 @@ from repro.train import checkpoint as ckpt_mod
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    """EMA of step time; flags drift beyond ``tolerance`` (e.g. 20%).
+    """EMA of *healthy* step time; flags drift beyond ``tolerance``.
 
     The smoothed estimate (:attr:`ema`) is the measured step time the plan
     autotuner's refinement loop consumes (``repro.plan.refine`` /
     :func:`replan_auto`, DESIGN.md §9): a drift flag triggers re-profiling,
     the EMA calibrates the planner's compute model.
+
+    Drifted samples are excluded from the EMA: the reference tracks the
+    healthy regime only, so a *sustained* slowdown stays flagged every step
+    instead of being absorbed into the baseline after a few observations
+    (which would both silence the flag and mis-calibrate the planner with
+    degraded step times).  Per-pod attribution and the graded
+    quarantine response live in ``repro.elastic.quarantine`` (DESIGN.md
+    §15); this monitor is the fleet-aggregate tripwire.
     """
 
     alpha: float = 0.1
@@ -49,12 +57,14 @@ class StragglerMonitor:
             self._ema = step_time
             return False
         drifted = step_time > self._ema * (1 + self.tolerance)
-        self._ema = (1 - self.alpha) * self._ema + self.alpha * step_time
+        if not drifted:
+            self._ema = (1 - self.alpha) * self._ema + self.alpha * step_time
         return drifted
 
     @property
     def ema(self) -> float | None:
-        """Smoothed step seconds (None until the first observation)."""
+        """Smoothed healthy step seconds (None until the first
+        observation)."""
         return self._ema
 
 

@@ -364,6 +364,62 @@ def test_chaos_link_degrade_stays_in_epoch(tmp_path, mesh3, prog_z3):
     assert cluster.inventory(cluster.pods[0]).health(1).bw_fraction == 0.25
 
 
+# ------------------------------------ chaos: gray failures (DESIGN.md §15)
+
+def test_chaos_hang_ladder_bit_exact(tmp_path, mesh3, prog_z3):
+    """A hung collective at step 4: the watchdog ladder retries twice, then
+    rebuilds the communicator in place — no restart, no state recovery, and
+    since the state never moves, the WHOLE trajectory is bit-identical to an
+    uninterrupted run."""
+    cluster = cluster_for_mesh(mesh3)
+    state = prog_z3.init_fn(jax.random.PRNGKey(1))
+    state, report = elastic.run_elastic(
+        prog_z3, state, _make_batches, cluster=cluster,
+        ckpt_dir=str(tmp_path / "e"), n_steps=8,
+        script=elastic.parse_script("hang:pod1@4"), ckpt_every=50)
+    assert report.hang_actions == ["retry", "retry", "rebuild"]
+    assert report.recovery_methods == []     # comm rebuild, never recovery
+    assert [rb.event.kind for rb in report.rebuilds] == ["comm-rebuild"]
+    assert [p.name for p in report.rebuilds[0].cluster.pods] == \
+        ["pod0", "pod1"]                     # membership untouched
+    assert [h["step"] for h in report.history] == list(range(8))
+    assert all(ev.pod == "pod1" and ev.step == 4
+               for ev in report.hang_events)
+
+    truth = prog_z3.init_fn(jax.random.PRNGKey(1))
+    truth, hist_full = ft.run_supervised(
+        prog_z3.step_fn, truth, _make_batches(prog_z3),
+        ckpt_dir=str(tmp_path / "t"), ckpt_every=100, n_steps=8,
+        state_shardings=prog_z3.state_shardings)
+    assert [h["loss"] for h in report.history] == \
+        [h["loss"] for h in hist_full]
+
+
+def test_chaos_slow_quarantine_replan(tmp_path, mesh3):
+    """A sustained 2.5x-slow pod walks healthy -> suspect -> quarantined and
+    the replan de-weights its DP share instead of evicting it; the run
+    completes every step with both pods still members."""
+    rc = RunConfig(zero_stage=3, collective_mode="hier",
+                   learning_rate=1e-3, param_dtype="float32")
+    prog = make_train_program(MODEL, mesh3, rc, uniform_plan(2, 6, 1))
+    cluster = cluster_for_mesh(mesh3)
+    state = prog.init_fn(jax.random.PRNGKey(2))
+    state, report = elastic.run_elastic(
+        prog, state, _make_batches, cluster=cluster,
+        ckpt_dir=str(tmp_path), n_steps=10,
+        script=elastic.parse_script("slow:pod1x2.5@3-30"), ckpt_every=50)
+    assert [e.kind for e in report.events] == ["pod-slow", "pod-quarantined"]
+    assert report.recovery_methods == []     # de-weighted, not evicted
+    rb = report.rebuilds[0]
+    assert rb.event.kind == "pod-quarantined"
+    assert [p.name for p in rb.cluster.pods] == ["pod0", "pod1"]
+    assert rb.plan.micro_per_pod == (4, 2)   # shares shifted off pod1
+    assert rb.plan.total_micro == 6          # batch contract preserved
+    assert [h["step"] for h in report.history] == list(range(10))
+    assert report.final_prog.plan.micro_per_pod == (4, 2)
+    assert all(np.isfinite(h["loss"]) for h in report.history)
+
+
 # ------------------------------------------- satellite: retryable + backoff
 
 def test_backoff_deterministic_and_capped():

@@ -1,0 +1,504 @@
+"""Gray-failure fault domain (DESIGN.md §15): model-derived collective
+deadlines + the hang watchdog ladder, per-pod straggler quarantine with
+hysteresis, the chaos grammar's gray ops, and the heartbeat edge cases.
+
+Everything here is pure logic (no jit, injectable clocks, synthesized
+observations) — the end-to-end runs live in ``tests/test_elastic.py`` and
+``benchmarks/chaos_smoke.py``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro import elastic
+from repro.core import simulator as sim
+from repro.core.balance import PodProfile, make_plan, uniform_plan
+from repro.elastic import watchdog as wd_mod
+from repro.elastic.detect import (EVENT_COMM_REBUILD, EVENT_POD_QUARANTINED,
+                                  EVENT_POD_SLOW, PodEvent)
+from repro.elastic.quarantine import QuarantinePolicy, StragglerTracker
+from repro.plan.autotuner import policy_table_for
+from repro.plan.measured import bench_cluster
+from repro.plan.refine import deweighted_profiles
+from repro.train import ft
+
+
+# ------------------------------------------------------- deadline derivation
+
+def test_derive_deadlines_covers_active_table_and_clears_medians():
+    # the acceptance contract: against the committed BENCH_comm.json, every
+    # (op, size class) row of the active policy table gets a deadline, and
+    # every deadline with measured evidence is >= the measured median
+    bench = elastic.load_bench()
+    assert bench is not None, "committed BENCH_comm.json missing"
+    from repro.plan.measured import _record_cluster
+    cluster = _record_cluster(bench)
+    table = policy_table_for(cluster)
+    dt = elastic.derive_deadlines(cluster, table, bench)
+    assert dt.missing_rows(table) == []
+    measured = [r for r in dt.rows if r.measured_median_s is not None]
+    assert measured
+    for r in dt.rows:
+        assert r.modeled_s > 0 and r.deadline_s > 0
+        if r.measured_median_s is not None:
+            assert r.deadline_s >= r.measured_median_s * dt.tolerance
+
+
+def test_derive_deadlines_without_bench_is_modeled_times_tolerance():
+    cluster = bench_cluster(2, 2)
+    table = policy_table_for(cluster)
+    dt = elastic.derive_deadlines(cluster, table, tolerance=3.0)
+    for r in dt.rows:
+        assert r.scale == 1.0 and r.noise == 1.0
+        assert r.measured_median_s is None
+        assert r.deadline_s == pytest.approx(r.modeled_s * 3.0)
+    # lookup by payload size and by class agree
+    small = dt.lookup("all_reduce", nbytes=1024)
+    assert small is not None and small.size_class == "small"
+    assert dt.lookup("all_reduce", cls="small") is small
+    # representative = the largest deadline (the bandwidth-dominant rule)
+    rep = dt.representative()
+    assert rep.deadline_s == max(r.deadline_s for r in dt.rows)
+
+
+def test_derive_deadlines_expands_facade_tables():
+    # a one-row legacy facade (rows == ()) still yields full coverage
+    from repro import comm as comm_mod
+    cluster = bench_cluster(2, 2)
+    c = comm_mod.create(("data",), None)
+    assert c.table.rows == ()
+    dt = elastic.derive_deadlines(cluster, c.table)
+    ops = {r.op for r in dt.rows}
+    assert "all_reduce" in ops and "all_to_all" in ops
+    assert {r.size_class for r in dt.rows} == {"small", "medium", "large"}
+
+
+def test_derive_deadlines_rejects_bad_tolerance():
+    cluster = bench_cluster(2, 2)
+    with pytest.raises(ValueError, match="tolerance"):
+        elastic.derive_deadlines(cluster, policy_table_for(cluster),
+                                 tolerance=1.0)
+
+
+def test_deadline_lookup_needs_size():
+    dt = elastic.derive_deadlines(bench_cluster(2, 2),
+                                  policy_table_for(bench_cluster(2, 2)))
+    with pytest.raises(ValueError, match="nbytes or cls"):
+        dt.lookup("all_reduce")
+
+
+# ----------------------------------------------------------- watchdog ladder
+
+def _watchdog(max_retries=2):
+    dt = elastic.derive_deadlines(bench_cluster(2, 2),
+                                  policy_table_for(bench_cluster(2, 2)))
+    t = {"now": 0.0}
+    return (wd_mod.CollectiveWatchdog(dt, max_retries=max_retries,
+                                      clock=lambda: t["now"]), t, dt)
+
+
+def test_watchdog_ladder_escalates_and_clears():
+    wd, _, dt = _watchdog(max_retries=2)
+    rule = dt.lookup("all_reduce", cls="large")
+    nbytes = 64 * 1024 * 1024
+    # in-deadline dispatch: no event, breach counter stays clear
+    assert wd.observe("all_reduce", nbytes, rule.deadline_s * 0.5) is None
+    assert wd.breaches == 0
+    # consecutive breaches walk retry -> retry -> rebuild -> evict
+    over = rule.deadline_s * 2
+    actions = [wd.observe("all_reduce", nbytes, over).action
+               for _ in range(4)]
+    assert actions == ["retry", "retry", "rebuild", "evict"]
+    # any completed collective resets the incident
+    wd.clear()
+    assert wd.breaches == 0
+    assert wd.observe("all_reduce", nbytes, over).action == "retry"
+    assert len(wd.events) == 5
+
+
+def test_watchdog_stall_is_unbounded_breach():
+    wd, _, dt = _watchdog()
+    ev = wd.stall(pod="pod1", step=7)
+    assert math.isinf(ev.elapsed_s) and ev.pod == "pod1" and ev.step == 7
+    assert ev.deadline_s == dt.representative().deadline_s
+    ev2 = wd.stall(pod="pod1", step=7, op="all_reduce")
+    assert ev2.op == "all_reduce" and ev2.size_class == "large"
+    assert ev2.breaches == 2
+
+
+def test_watchdog_watch_context_raises_on_breach():
+    wd, t, dt = _watchdog()
+    rule = dt.lookup("all_gather", cls="small")
+    with wd.watch("all_gather", 1024):      # fast dispatch: fine
+        t["now"] += rule.deadline_s * 0.1
+    assert wd.breaches == 0
+    with pytest.raises(wd_mod.CollectiveHangError) as ei:
+        with wd.watch("all_gather", 1024, step=3, pod="pod0"):
+            t["now"] += rule.deadline_s * 2
+    assert ei.value.event.op == "all_gather"
+    assert ei.value.event.step == 3 and ei.value.event.pod == "pod0"
+
+
+def test_watchdog_rejects_negative_retries():
+    dt = elastic.derive_deadlines(bench_cluster(2, 2),
+                                  policy_table_for(bench_cluster(2, 2)))
+    with pytest.raises(ValueError, match="max_retries"):
+        wd_mod.CollectiveWatchdog(dt, max_retries=-1)
+
+
+def test_hetccl_dispatch_hook_times_eager_collectives(monkeypatch):
+    from repro import comm as comm_mod
+    from repro.core import hetccl
+    c = comm_mod.create(("data",), None)
+    dt = elastic.derive_deadlines(bench_cluster(2, 2), c.table)
+    t = {"now": 0.0}
+    wd = wd_mod.CollectiveWatchdog(dt, clock=lambda: t["now"])
+    x = np.ones((4,), np.float32)          # 16 bytes -> small class
+    slow_dl = dt.lookup("all_reduce", cls="small").deadline_s
+
+    def hung_dispatch(op, arr, local_axes, pod_axis, **kw):
+        t["now"] += slow_dl * 2
+        return arr
+
+    monkeypatch.setattr(hetccl.tacc, "dispatch", hung_dispatch)
+    hetccl.arm_watchdog(wd)
+    try:
+        with pytest.raises(wd_mod.CollectiveHangError) as ei:
+            hetccl.all_reduce(x, c)
+        assert ei.value.event.op == "all_reduce"
+        assert ei.value.event.size_class == "small"
+        assert wd.breaches == 1
+        # an in-deadline dispatch completes and clears the incident
+        monkeypatch.setattr(hetccl.tacc, "dispatch",
+                            lambda op, arr, *a, **kw: arr)
+        np.testing.assert_array_equal(hetccl.all_reduce(x, c), x)
+        assert wd.breaches == 0
+    finally:
+        hetccl.disarm_watchdog()
+    # disarmed: the hung dispatch goes unwatched again
+    monkeypatch.setattr(hetccl.tacc, "dispatch", hung_dispatch)
+    np.testing.assert_array_equal(hetccl.all_reduce(x, c), x)
+
+
+# ------------------------------------------------------- quarantine tracker
+
+def test_tracker_frozen_baseline_and_ladder():
+    tr = StragglerTracker()
+    for s in range(3):                      # baseline window
+        assert tr.observe("pod1", s, 1.0) is None
+    assert tr.state("pod1") == elastic.POD_HEALTHY
+    # sustained 2x: suspect after 2, quarantined after 3 more
+    edges = [tr.observe("pod1", 3 + i, 2.0) for i in range(5)]
+    assert [e.to for e in edges if e] == [elastic.POD_SUSPECT,
+                                          elastic.POD_QUARANTINED]
+    # the baseline did NOT chase the slowdown: ratio still reads 2x
+    assert tr.ratio("pod1") == pytest.approx(2.0)
+    assert tr.quarantined() == ["pod1"]
+    assert tr.replan_factors() == {"pod1": pytest.approx(2.0)}
+
+
+def test_tracker_suspect_is_advisory_not_replanned():
+    tr = StragglerTracker()
+    for s in range(3):
+        tr.observe("pod1", s, 1.0)
+    tr.observe("pod1", 3, 1.3)
+    tr.observe("pod1", 4, 1.3)
+    assert tr.state("pod1") == elastic.POD_SUSPECT
+    assert tr.replan_factors() == {}        # only quarantine moves the plan
+
+
+def test_tracker_gray_band_resets_streaks():
+    # between suspect_ratio and quarantine_ratio: neither edge fires, ever
+    tr = StragglerTracker()
+    for s in range(3):
+        tr.observe("pod1", s, 1.0)
+    tr.observe("pod1", 3, 1.3)
+    tr.observe("pod1", 4, 1.3)              # -> suspect
+    for s in range(5, 30):
+        assert tr.observe("pod1", s, 1.4) is None
+    assert tr.state("pod1") == elastic.POD_SUSPECT
+
+
+def test_tracker_extreme_slowdown_evicts():
+    tr = StragglerTracker()
+    for s in range(3):
+        tr.observe("pod1", s, 1.0)
+    steps = iter(range(3, 40))
+    while tr.state("pod1") != elastic.POD_QUARANTINED:
+        tr.observe("pod1", next(steps), 2.0)
+    for _ in range(3):                      # evict_ratio=8, evict_after=3
+        tr.observe("pod1", next(steps), 9.0)
+    assert tr.state("pod1") == elastic.POD_EVICTED
+    assert tr.observe("pod1", next(steps), 1.0) is None   # terminal
+
+
+def test_tracker_flap_penalty_ratchets_reinstatement():
+    pol = QuarantinePolicy()
+    tr = StragglerTracker(pol)
+    for s in range(3):
+        tr.observe("pod1", s, 1.0)
+    step = iter(range(3, 200))
+
+    def drive_to_quarantine():
+        while tr.state("pod1") != elastic.POD_QUARANTINED:
+            tr.observe("pod1", next(step), 2.0)
+
+    def drive_healthy(n):
+        for _ in range(n):
+            tr.observe("pod1", next(step), 1.0)
+
+    drive_to_quarantine()
+    drive_healthy(pol.reinstate_after)              # 4 clears: reinstated
+    assert tr.state("pod1") == elastic.POD_HEALTHY
+    drive_to_quarantine()
+    drive_healthy(pol.reinstate_after)              # 4 is no longer enough
+    assert tr.state("pod1") == elastic.POD_QUARANTINED
+    drive_healthy(pol.reinstate_after * pol.flap_penalty
+                  - pol.reinstate_after)            # 8 total now required
+    assert tr.state("pod1") == elastic.POD_HEALTHY
+
+
+def test_tracker_and_policy_validation():
+    tr = StragglerTracker()
+    with pytest.raises(ValueError, match="seconds"):
+        tr.observe("pod1", 0, 0.0)
+    with pytest.raises(ValueError, match="clear_ratio"):
+        QuarantinePolicy(clear_ratio=2.0)
+
+
+def test_detector_observe_step_emits_typed_events_and_bans():
+    cluster = bench_cluster(2, 2)
+    det = elastic.FailureDetector(cluster, straggler=StragglerTracker())
+    kinds = []
+    for s in range(3):
+        det.observe_step("pod1", s, 1.0)
+    for s in range(3, 9):
+        ev = det.observe_step("pod1", s, 2.0)
+        if ev is not None:
+            kinds.append(ev.kind)
+    assert kinds == [EVENT_POD_SLOW, EVENT_POD_QUARANTINED]
+    assert all(ev.plan_change for ev in det.events
+               if ev.kind == EVENT_POD_QUARANTINED)
+    # extreme slowdown: the tracker evicts, the detector bans, and the
+    # next poll routes it down the existing pod-dead membership path
+    for s in range(9, 12):
+        assert det.observe_step("pod1", s, 9.0) is None
+    evs = det.poll(step=12)
+    assert [(e.kind, e.pod) for e in evs] == [("pod-dead", "pod1")]
+    assert "banned" in evs[0].detail
+    # link revival can't bounce a banned pod back in
+    assert det.poll(step=13) == []
+    det.unban("pod1")
+    assert [(e.kind, e.pod) for e in det.poll(step=14)] == \
+        [("pod-joined", "pod1")]
+
+
+def test_detector_observe_step_without_tracker_is_noop():
+    det = elastic.FailureDetector(bench_cluster(2, 2))
+    assert det.observe_step("pod1", 0, 99.0) is None
+    assert det.events == []
+
+
+# ---------------------------------------- ft.StragglerMonitor regression fix
+
+def test_straggler_monitor_sustained_slowdown_stays_flagged():
+    # the PR-8 satellite fix: the EMA must not chase a degraded step time —
+    # a persistent 1.5x slowdown keeps the flag up instead of going quiet
+    mon = ft.StragglerMonitor(alpha=0.3, tolerance=0.2)
+    for _ in range(5):
+        assert not mon.observe(1.0)
+    flags = [mon.observe(1.5) for _ in range(10)]
+    assert all(flags), flags
+    assert mon.ema == pytest.approx(1.0)    # healthy reference frozen
+    # recovery: healthy samples resume updating the reference
+    assert not mon.observe(1.05)
+    assert mon.ema > 1.0
+
+
+# --------------------------------------------------- chaos grammar, gray ops
+
+def test_parse_script_roundtrip_every_op():
+    specs = [
+        "kill:pod1@4",
+        "revive:pod1@8",
+        "degrade:pod0.1x0.25@2",
+        "down:pod0.0@6",
+        "up:pod0.0@7",
+        "slow:pod1x2.5@3-10",
+        "slow:pod0x1.5@12",
+        "hang:pod1@14",
+    ]
+    s = elastic.parse_script(";".join(specs))
+    assert sorted(a.op for a in s.actions) == sorted(
+        ["kill", "revive", "degrade", "down", "up", "slow", "slow", "hang"])
+    # spec() is parse_script's inverse on every action
+    assert sorted(a.spec() for a in s.actions) == sorted(specs)
+    reparsed = elastic.parse_script(";".join(a.spec() for a in s.actions))
+    assert reparsed.actions == s.actions
+    ranged = next(a for a in s.actions if a.until is not None)
+    assert (ranged.step, ranged.until, ranged.factor) == (3, 10, 2.5)
+
+
+def test_chaos_action_validation():
+    with pytest.raises(ValueError, match="factor"):
+        elastic.ChaosAction(step=1, op="slow", pod="pod0")
+    with pytest.raises(ValueError, match="factor"):
+        elastic.ChaosAction(step=1, op="slow", pod="pod0", factor=0.5)
+    with pytest.raises(ValueError, match="range"):
+        elastic.ChaosAction(step=1, op="kill", pod="pod0", until=4)
+    with pytest.raises(ValueError, match="empty"):
+        elastic.ChaosAction(step=5, op="slow", pod="pod0", factor=2.0,
+                            until=3)
+
+
+def test_chaos_apply_unknown_pod_is_typed_valueerror():
+    script = elastic.parse_script("kill:podX@0")
+    with pytest.raises(ValueError, match="podX"):
+        script.apply(bench_cluster(2, 2), 0)
+
+
+def test_chaos_compute_factor_windows_and_stacking():
+    s = elastic.parse_script("slow:pod1x2@3-5;slow:pod1x3@5-6;slow:pod0x4@8")
+    assert s.compute_factor("pod1", 2) == 1.0
+    assert s.compute_factor("pod1", 3) == 2.0
+    assert s.compute_factor("pod1", 5) == 6.0      # overlapping windows stack
+    assert s.compute_factor("pod1", 6) == 3.0
+    assert s.compute_factor("pod1", 7) == 1.0      # range end is inclusive
+    assert s.compute_factor("pod0", 100) == 4.0    # no range: sustained
+    # slow/hang mutate no link inventories
+    cluster = bench_cluster(2, 2)
+    s.apply(cluster, 3)
+    assert cluster.inventory(cluster.pods[1]).n_healthy() == \
+        len(cluster.inventory(cluster.pods[1]).links)
+
+
+def test_chaos_hangs_persist_until_cleared():
+    s = elastic.parse_script("hang:pod1@4")
+    assert s.active_hangs(3) == []
+    assert s.active_hangs(4) == ["pod1"]
+    assert s.active_hangs(9) == ["pod1"]    # a wedged channel stays wedged
+    s.clear_hangs(4)                        # ...until the comm rebuild
+    assert s.active_hangs(9) == []
+
+
+# --------------------------------------------- heartbeat + epoch edge cases
+
+def test_heartbeat_grace_expiry_exact_boundary():
+    t = {"now": 0.0}
+    hb = elastic.HeartbeatMonitor(timeout_s=10.0, grace_s=5.0,
+                                  clock=lambda: t["now"])
+    hb.register("p0", now=0.0)
+    t["now"] = 15.0                 # exactly grace + timeout: NOT expired
+    assert not hb.expired("p0")
+    t["now"] = 15.0 + 1e-9          # strictly past: expired
+    assert hb.expired("p0")
+
+
+def test_heartbeat_beat_boundary_is_strict():
+    t = {"now": 0.0}
+    hb = elastic.HeartbeatMonitor(timeout_s=10.0, grace_s=0.0,
+                                  clock=lambda: t["now"])
+    hb.beat("p0", step=0, now=0.0)
+    t["now"] = 10.0                 # exactly timeout since beat: alive
+    assert not hb.expired("p0")
+    t["now"] = 10.0 + 1e-9
+    assert hb.expired("p0")
+
+
+def test_heartbeat_revival_rearms_grace():
+    t = {"now": 0.0}
+    hb = elastic.HeartbeatMonitor(timeout_s=10.0, grace_s=5.0,
+                                  clock=lambda: t["now"])
+    hb.beat("p0", step=0, now=0.0)
+    t["now"] = 20.0
+    assert hb.expired("p0")
+    hb.register("p0")               # revival: grace window re-armed
+    assert not hb.expired("p0")
+    t["now"] = 35.0                 # 15s after revival = grace + timeout
+    assert not hb.expired("p0")
+    t["now"] = 35.5
+    assert hb.expired("p0")
+    hb.beat("p0", step=1)           # a beat after revival re-anchors
+    t["now"] = 45.0
+    assert not hb.expired("p0")
+
+
+def test_stale_epoch_events_are_fenced():
+    cluster = bench_cluster(2, 2)
+    det = elastic.FailureDetector(cluster)
+    m = elastic.Membership(cluster, plan=uniform_plan(2, 6, 1), detector=det)
+    stale = PodEvent(kind=EVENT_COMM_REBUILD, pod="pod1", epoch=0, step=5)
+    m.rebuild_in_place(stale)               # epoch 0 -> 1
+    assert m.epoch == 1 and det.epoch == 1
+    with pytest.raises(elastic.MembershipError, match="stale"):
+        m.rebuild_in_place(stale)           # same event again: fenced
+    with pytest.raises(elastic.MembershipError, match="stale"):
+        m.on_event(PodEvent(kind="pod-dead", pod="pod1", epoch=0, step=6))
+
+
+# -------------------------------------------------- in-place epoch rebuilds
+
+def test_rebuild_in_place_keeps_membership_and_plan():
+    cluster = bench_cluster(2, 2)
+    m = elastic.Membership(cluster, plan=uniform_plan(2, 6, 1))
+    old_plan = m.plan
+    ev = PodEvent(kind=EVENT_COMM_REBUILD, pod="pod1", epoch=0, step=4)
+    r = m.rebuild_in_place(ev, state_bytes=1e6)
+    assert r.epoch == 1 and m.epoch == 1
+    assert [p.name for p in r.cluster.pods] == ["pod0", "pod1"]
+    assert r.plan is old_plan               # factors=None: plan untouched
+    assert r.comm is not None and r.train_plan is None
+    assert r.modeled_checkpointless_s > 0
+    # the full DRAINING -> REBUILDING -> RUNNING walk happened
+    assert [s for _, s in m.transitions[-3:]] == [
+        elastic.DRAINING, elastic.REBUILDING, elastic.RUNNING]
+
+
+def test_rebuild_in_place_deweights_then_reinstates():
+    cluster = bench_cluster(2, 2)
+    m = elastic.Membership(cluster, plan=uniform_plan(2, 6, 1))
+    ev = PodEvent(kind=EVENT_POD_QUARANTINED, pod="pod1", epoch=0, step=7)
+    r = m.rebuild_in_place(ev, factors={"pod1": 2.5})
+    assert r.plan.micro_per_pod == (4, 2)   # shares shifted off the straggler
+    assert r.plan.total_micro == 6          # batch contract preserved
+    ev2 = PodEvent(kind="pod-reinstated", pod="pod1", epoch=m.epoch, step=20)
+    r2 = m.rebuild_in_place(ev2, factors={})
+    assert r2.plan.micro_per_pod == (3, 3)  # base profiles: healthy shares
+
+
+# ------------------------------------------------- simulator + planner glue
+
+def test_pod_compute_seconds_and_factors():
+    cluster = bench_cluster(2, 4)
+    wl = sim.TrainWorkload("t", flops_per_token=1e9, param_bytes=1e6,
+                           seq_len=64, micro_batch=1, zero_stage=1)
+    plan = uniform_plan(2, 6, 1)
+    base = sim.pod_compute_seconds(wl, cluster, plan)
+    assert base[0] == pytest.approx(base[1])
+    slowed = sim.pod_compute_seconds(wl, cluster, plan,
+                                     compute_factors={"pod1": 2.5})
+    assert slowed[0] == pytest.approx(base[0])
+    assert slowed[1] == pytest.approx(base[1] * 2.5)
+    # the synchronous step pays the max: slowing one pod slows the fleet
+    t0 = sim.planned_step_time(wl, cluster, plan, "auto")
+    t1 = sim.planned_step_time(wl, cluster, plan, "auto",
+                               compute_factors={"pod1": 2.5})
+    assert t1 > t0
+    assert sim.step_time(wl, cluster, plan,
+                         compute_factors={"pod1": 2.5}) > \
+        sim.step_time(wl, cluster, plan)
+
+
+def test_deweighted_profiles():
+    base = [PodProfile("pod0", 1000.0), PodProfile("pod1", 1000.0)]
+    out = deweighted_profiles(base, {"pod1": 2.5})
+    assert out[0].tokens_per_s == 1000.0
+    assert out[1].tokens_per_s == pytest.approx(400.0)
+    assert deweighted_profiles(base, {}) == list(base)
+    plan = make_plan(out, 6, 1)
+    assert plan.micro_per_pod == (4, 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        deweighted_profiles(base, {"pod1": 0.5})
+    with pytest.raises(ValueError, match="unknown"):
+        deweighted_profiles(base, {"podX": 2.0})

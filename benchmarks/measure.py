@@ -422,17 +422,20 @@ def write_bench(record: dict, path: str | pathlib.Path) -> None:
 def append_history(record: dict, path: str | pathlib.Path) -> None:
     """One JSONL line per harness run: the repo's measured trajectory
     (``results/bench_history.jsonl``), separate from the committed baseline
-    snapshot the gate compares against."""
-    p = pathlib.Path(path)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    line = {"ts": time.time(), "kind": record["kind"],
-            "host": record["host"], "config": record["config"],
-            "entries": {e["name"]: {k: e[k] for k in
-                                    ("median_s", "iqr_lo_s", "iqr_hi_s",
-                                     "repeats")}
-                        for e in record["entries"]}}
-    with open(p, "a") as f:
-        f.write(json.dumps(line, sort_keys=True) + "\n")
+    snapshot the gate compares against.  Written in the unified obs
+    metric-line schema (``repro.obs.metrics``, DESIGN.md §16);
+    ``read_metric_lines`` still parses the pre-unification line shape."""
+    from repro.obs import append_metric_line, metric_line
+    entries = {e["name"]: {k: e[k] for k in
+                           ("median_s", "iqr_lo_s", "iqr_hi_s", "repeats")}
+               for e in record["entries"]}
+    append_metric_line(path, metric_line(
+        f"bench_{record['kind']}",
+        labels={"mesh": record["config"].get("mesh"),
+                "smoke": record["config"].get("smoke")},
+        metrics=entries,
+        meta={"ts": time.time(), "host": record["host"],
+              "config": record["config"]}))
 
 
 # ---------------------------------------------------------------------------

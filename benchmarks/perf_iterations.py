@@ -114,6 +114,14 @@ def main():
     ap.add_argument("--attn-chunk", type=int, default=None)
     ap.add_argument("--tag", default="")
     ap.add_argument("--top", type=int, default=8)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a modeled Chrome trace of this cell's "
+                         "policy table (repro.obs, DESIGN.md §16)")
+    ap.add_argument("--metrics-out", default="results/perf_log.jsonl",
+                    metavar="PATH",
+                    help="JSONL file the measurement is appended to, in the "
+                         "unified obs metric-line schema (kind="
+                         "perf_iteration; legacy lines still parse)")
     args = ap.parse_args()
 
     import dataclasses
@@ -213,9 +221,26 @@ def main():
     for wire, kind, g, mult, tstr, opname in top_collectives(hlo, n_dev, args.top):
         print(f"  {wire / 1e9:9.1f}GB {kind:18s} g={g:<4d} mult={mult:6.0f} "
               f"{tstr:38s} {opname}")
-    os.makedirs("results", exist_ok=True)
-    with open("results/perf_log.jsonl", "a") as f:
-        f.write(json.dumps(rec) + "\n")
+    if args.trace:
+        from repro import obs
+        from repro import plan as plan_mod
+        cl = cluster_for_mesh(mesh)
+        table = (rc.policies if rc.policies is not None
+                 else plan_mod.policy_table_for(cl))
+        obs.write_chrome_trace(args.trace,
+                               obs.chrome_trace(obs.modeled_spans(table, cl)))
+        print(f"modeled trace: {args.trace}")
+    # unified perf JSONL schema (repro.obs, DESIGN.md §16): identity fields
+    # are labels, numbers are metrics; read_metric_lines still parses the
+    # pre-unification flat records of existing history files
+    from repro.obs import append_metric_line, metric_line
+    label_keys = ("tag", "arch", "shape", "mesh", "zero", "mode", "backend",
+                  "policy", "n_channels", "n_stripes", "cross_dtype",
+                  "seq_shard_acts")
+    append_metric_line(args.metrics_out, metric_line(
+        "perf_iteration",
+        labels={k: rec[k] for k in label_keys},
+        metrics={k: v for k, v in rec.items() if k not in label_keys}))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,159 @@
+"""Trace smoke: run a chaos scenario under the unified telemetry plane and
+assert the observability acceptance contract end to end (DESIGN.md §16,
+CI `chaos` job):
+
+  - the flight recorder dumps a schema-valid post-mortem on the injected
+    fault, and the dump round-trips through ``obs.load_dump``;
+  - the injected fault's events (the chaos injection AND the watchdog's
+    escalation ladder) are present in the dump, alongside collective spans
+    carrying measured time, the simulator's modeled time, and the full
+    policy identity (op / size_class / backend / mode / channels / stripes);
+  - the Chrome-trace export validates, reloads through the reader, and
+    every recorded eager dispatch appears as an "X" event with those tags;
+  - ``plan.measured.rows_from_flight`` ingests the dump into calibration
+    rows covering every ``(op, size_class, backend)`` cell the run
+    dispatched (``Tracer.dispatched_cells()`` — the coverage contract).
+
+    PYTHONPATH=src python -m benchmarks.trace_smoke
+"""
+import json
+import math
+import os
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import elastic, obs
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.core import compat
+    from repro.core.balance import uniform_plan
+    from repro.data.pipeline import DataPipeline
+    from repro.launch.mesh import cluster_for_mesh
+    from repro.models import build
+    from repro.plan import measured
+    from repro.train.trainer import make_train_program
+
+    cfg = get_config("smollm-135m").reduced()
+    model = build(cfg)
+    seq = 64
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    prog = make_train_program(
+        model, mesh,
+        RunConfig(zero_stage=3, collective_mode="hier", learning_rate=1e-3,
+                  param_dtype="float32"),
+        uniform_plan(2, 2, 1))
+    cluster = cluster_for_mesh(mesh)
+
+    def make_batches(p):
+        pipe = DataPipeline(seed=0, plan=p.plan, dp_world=p.dp_world(),
+                            seq_len=seq, vocab=cfg.vocab)
+        return lambda s: {k: jnp.asarray(v)
+                          for k, v in pipe.batch_at(s).items()}
+
+    n_steps = 8
+    with tempfile.TemporaryDirectory() as d:
+        out_dir = os.path.join(d, "tele")
+        tel = obs.Telemetry(out_dir=out_dir)
+        state = prog.init_fn(jax.random.PRNGKey(1))
+        state, report = elastic.run_elastic(
+            prog, state, make_batches, cluster=cluster,
+            ckpt_dir=os.path.join(d, "e"), n_steps=n_steps,
+            script=elastic.parse_script("hang:pod1@4"), telemetry=tel)
+
+        # the run itself behaved as the chaos suite pins it
+        assert report.hang_actions == ["retry", "retry", "rebuild"], \
+            report.hang_actions
+        assert [h["step"] for h in report.history] == list(range(n_steps))
+
+        # -- flight dumps: schema-valid, fault visible ----------------------
+        assert tel.dump_paths, "injected fault produced no post-mortem dump"
+        reasons = [os.path.basename(p) for p in tel.dump_paths]
+        assert any("chaos-hang" in r for r in reasons), reasons
+        assert any("hang-rebuild" in r for r in reasons), reasons
+        dumps = [obs.load_dump(p) for p in tel.dump_paths]
+        for dmp in dumps:
+            obs.validate_dump(dmp)
+
+        post = next(dmp for p, dmp in zip(tel.dump_paths, dumps)
+                    if "hang-rebuild" in p)
+        events = [e for e in post["entries"] if e["kind"] == "event"]
+        assert any(e["event"] == "chaos" and e.get("op") == "hang"
+                   for e in events), "chaos injection missing from dump"
+        hangs = [e for e in events if e["event"] == "hang"]
+        assert [e["action"] for e in hangs] == ["retry", "retry", "rebuild"], \
+            hangs
+        coll = [e for e in post["entries"] if e["kind"] == "span"
+                and e.get("cat") == "collective" and e.get("dur_s") is not None]
+        assert coll, "no collective spans reached the flight recorder"
+        for sp in coll:
+            tags = sp["tags"]
+            for f in ("op", "size_class", "backend", "mode", "n_channels",
+                      "n_stripes", "nbytes", "comm_epoch"):
+                assert f in tags, (f, sp)
+            assert sp["modeled_s"] is not None and sp["modeled_s"] > 0, sp
+            assert sp["residual"] is not None \
+                and math.isfinite(sp["residual"]), sp
+
+        # -- final dump: calibration coverage of every dispatched cell ------
+        final = tel.flight.dump("final", step=n_steps)
+        obs.validate_dump(final)
+        rows = measured.rows_from_flight(final, cluster)
+        assert rows, "flight ingest produced no calibration rows"
+        for r in rows:
+            assert r.group == "flight" and r.measured_s > 0 \
+                and r.modeled_s > 0, r
+        covered = set(measured.flight_cells(rows))
+        dispatched = tel.tracer.dispatched_cells()
+        assert dispatched, "run recorded no eager dispatches"
+        assert covered == dispatched, (
+            "calibration coverage != dispatched cells",
+            sorted(dispatched - covered), sorted(covered - dispatched))
+
+        # -- chrome trace: writes, validates, reloads, spans tagged ---------
+        paths = tel.write(metrics_out=os.path.join(d, "metrics.jsonl"))
+        trace = obs.load_chrome_trace(paths["trace"])
+        xs = [e for e in trace["traceEvents"] if e["ph"] == "X"
+              and e.get("cat") == "collective"]
+        assert len(xs) >= len(dispatched), (len(xs), len(dispatched))
+        for ev in xs:
+            for f in ("op", "size_class", "backend", "modeled_s", "residual"):
+                assert f in ev["args"], (f, ev)
+        obs.validate_chrome_trace(obs.chrome_trace(dump=final))
+        lines = obs.read_metric_lines(paths["metrics_out"])
+        assert [ln["kind"] for ln in lines] == ["fleet_snapshot"], lines
+
+        # -- fleet metrics saw the whole story ------------------------------
+        snap = tel.snapshot()
+        assert snap["schema_version"] == obs.METRICS_SCHEMA_VERSION
+        counters = {(c["name"], tuple(sorted(c["labels"].items()))):
+                    c["value"] for c in snap["counters"]}
+        total_disp = sum(v for (n, _), v in counters.items()
+                         if n == "collective_dispatch_total")
+        assert total_disp == len([s for s in tel.tracer.collective_spans()]), \
+            total_disp
+        assert sum(v for (n, _), v in counters.items()
+                   if n == "watchdog_breach_total") == 3
+        assert sum(v for (n, _), v in counters.items()
+                   if n == "chaos_actions_total") >= 1
+        assert json.loads(json.dumps(snap)) == snap   # JSON-clean
+
+        report_txt = tel.step_report()
+        assert "collective time share" in report_txt
+        assert "top residuals" in report_txt
+
+        print(f"trace smoke: {total_disp} dispatches over "
+              f"{len(dispatched)} (op,class,backend) cells, "
+              f"{len(rows)} calibration rows, {len(tel.dump_paths)} dumps "
+              f"({', '.join(sorted(set(r.split('-', 2)[-1].rsplit('.', 1)[0] for r in reasons)))}), "
+              f"chrome trace {len(trace['traceEvents'])} events")
+        print("trace smoke OK")
+
+
+if __name__ == "__main__":
+    main()

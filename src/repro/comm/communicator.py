@@ -82,6 +82,10 @@ class Communicator:
     # state, not part of the communicator's value
     inventory: Any = dataclasses.field(default=None, compare=False,
                                        repr=False)
+    # telemetry binding (DESIGN.md §16): a pinned repro.obs.Tracer records
+    # this group's eager dispatches, taking precedence over the installed
+    # process tracer; like the inventory, an observer — not identity
+    tracer: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     def _value(self):
         return (self.local_axes, self.pod_axis, self.table,

@@ -294,24 +294,56 @@ def disarm_watchdog() -> None:
     _WATCHDOG = None
 
 
+# Telemetry hook (DESIGN.md §16): an installed repro.obs.Tracer records every
+# eager dispatch as a policy-tagged span.  Same eager-only contract as the
+# watchdog above; same stack-safe install/uninstall shape as the communicator.
+_TRACER = None
+_TRACER_STACK: list = []
+
+
+def install_tracer(tracer) -> None:
+    """Make ``tracer`` the process dispatch-span recorder.  Stack-safe:
+    :func:`uninstall_tracer` restores whatever was installed before."""
+    global _TRACER
+    _TRACER_STACK.append(_TRACER)
+    _TRACER = tracer
+
+
+def uninstall_tracer() -> None:
+    global _TRACER
+    _TRACER = _TRACER_STACK.pop() if _TRACER_STACK else None
+
+
+def current_tracer():
+    """The tracer observing dispatches, if any (communicator-pinned tracers
+    take precedence inside :func:`_call` itself)."""
+    return _TRACER
+
+
 def _call(op: str, x, cfg, **kw):
     """Communicator-scoped dispatch (DESIGN.md §12): resolve this payload's
     policy from the active communicator's (op, size class) table, then let
     tacc.dispatch map exactly the policy fields the resolved variant
-    declared.  An armed watchdog times eager dispatches against their
-    derived deadline (DESIGN.md §15)."""
+    declared.  Eager dispatches are observed by an armed watchdog (deadline
+    enforcement, DESIGN.md §15) and an installed/pinned tracer (telemetry
+    spans, DESIGN.md §16); traced dispatches inside jit skip both."""
     c = _as_communicator(cfg)
     nbytes = _payload_bytes(op, x, c)
     pol = c.policy(op, nbytes)
     variant = c.variant_for(op, pol)
     if variant == "pipelined" and c.pipeline_chunk_bytes:
         kw.setdefault("pipeline_chunk_bytes", c.pipeline_chunk_bytes)
-    if _WATCHDOG is not None and not isinstance(x, jax.core.Tracer):
-        with _WATCHDOG.watch(op, nbytes):
-            return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
-                                 variant=variant, policy=pol, **kw)
-    return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
-                         variant=variant, policy=pol, **kw)
+    tr = c.tracer if c.tracer is not None else _TRACER
+    if (tr is None and _WATCHDOG is None) or isinstance(x, jax.core.Tracer):
+        return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
+                             variant=variant, policy=pol, **kw)
+    with contextlib.ExitStack() as stack:
+        if tr is not None and tr.enabled:
+            stack.enter_context(tr.collective(op, nbytes, pol))
+        if _WATCHDOG is not None:
+            stack.enter_context(_WATCHDOG.watch(op, nbytes))
+        return tacc.dispatch(op, x, c.local_axes, c.pod_axis,
+                             variant=variant, policy=pol, **kw)
 
 
 def all_reduce(x, cfg=None, **kw):

@@ -269,6 +269,7 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
                 ckpt_dir: str, n_steps: int, script: ChaosScript | None = None,
                 train_plan=None, detector: FailureDetector | None = None,
                 watchdog: CollectiveWatchdog | None = None,
+                telemetry=None,
                 ckpt_every: int = 50, state_bytes: float = 0.0,
                 max_restarts: int = 3, backoff_base: float = 0.0):
     """Run ``n_steps`` surviving membership changes without a job restart.
@@ -295,6 +296,11 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
             ``BENCH_comm.json`` when present) when the script injects
             ``hang`` faults.  Armed on the ``hetccl`` dispatch path for the
             duration of the run.
+        telemetry: optional :class:`repro.obs.Telemetry` bundle (DESIGN.md
+            §16).  The loop installs its tracer for the run, subscribes its
+            metrics to the detector's event stream, runs its eager probes
+            between steps, and triggers its post-mortem dumps on chaos
+            faults and hang escalations.
     Returns:
         ``(final_state, ElasticReport)``.
     """
@@ -322,24 +328,32 @@ def run_elastic(prog, state, make_batches: Callable, *, cluster,
     pending_plan: list[PodEvent] = []
     if watchdog is not None:
         hetccl.arm_watchdog(watchdog)
+    if telemetry is not None:
+        telemetry.bind(cluster=cluster, comm=prog.comm)
+        detector.subscribe(telemetry.on_pod_event)
+        telemetry.install()
     try:
         state, report = _elastic_loop(
             prog, state, make_batches, cluster=cluster, ckpt_dir=ckpt_dir,
             n_steps=n_steps, script=script, detector=detector,
-            watchdog=watchdog, membership=membership, full_mesh=full_mesh,
+            watchdog=watchdog, telemetry=telemetry, membership=membership,
+            full_mesh=full_mesh,
             by_step=by_step, segments=segments, rebuilds=rebuilds,
             recoveries=recoveries, pending_plan=pending_plan,
             ckpt_every=ckpt_every, state_bytes=state_bytes,
             max_restarts=max_restarts, backoff_base=backoff_base,
             ft=ft, trainer_mod=trainer_mod)
     finally:
+        if telemetry is not None:
+            telemetry.uninstall()
         if watchdog is not None:
             hetccl.disarm_watchdog()
     return state, report
 
 
 def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
-                  script, detector, watchdog, membership, full_mesh, by_step,
+                  script, detector, watchdog, telemetry, membership,
+                  full_mesh, by_step,
                   segments, rebuilds, recoveries, pending_plan, ckpt_every,
                   state_bytes, max_restarts, backoff_base, ft, trainer_mod):
     step, epoch = 0, 0
@@ -347,11 +361,17 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
     while step < n_steps:
         seg_start = step
         batches = make_batches(prog)
-        members = {p.name for p in membership.cluster.pods}
+        # Ordered, not a set: beat/observe iteration below feeds the
+        # detector's ladder, whose emission order must be deterministic
+        # under same-step multi-pod faults (not hash-seed dependent).
+        members = tuple(p.name for p in membership.cluster.pods)
 
         def seg_batches(s, _b=batches, _members=members):
             if script is not None:
-                script.apply(cluster, s)
+                applied = script.apply(cluster, s)
+                if telemetry is not None:
+                    for a in applied:
+                        telemetry.on_chaos(a.op, a.pod, step=s)
             events = detector.poll(step=s)
             changes = [e for e in events if e.membership_change]
             if changes:
@@ -372,6 +392,9 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
             by_step[s] = _rec
             if watchdog is not None:
                 watchdog.clear()        # the step's collectives completed
+            if telemetry is not None:
+                telemetry.on_step(s, _rec, dur_s=_rec.get("step_s"))
+                telemetry.probe_step(s)
             if detector.heartbeat is not None:
                 for name in _members:
                     detector.heartbeat.beat(name, s)
@@ -410,12 +433,14 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
             segments.append({"epoch": epoch, "start": seg_start,
                              "end": sig.step})
             ev = sig.event
+            if telemetry is not None:
+                telemetry.on_hang(ev, step=sig.step)
             if ev.action == ACTION_REBUILD:
-                pe = PodEvent(kind=EVENT_COMM_REBUILD, pod=ev.pod or "",
-                              epoch=membership.epoch, step=sig.step,
-                              detail=f"hang {ev.op}/{ev.size_class} "
-                                     f"breach #{ev.breaches}")
-                detector.events.append(pe)
+                pe = detector.emit(EVENT_COMM_REBUILD, ev.pod or "",
+                                   sig.step,
+                                   f"hang {ev.op}/{ev.size_class} "
+                                   f"breach #{ev.breaches}",
+                                   epoch=membership.epoch)
                 result = membership.rebuild_in_place(pe, state_bytes)
                 rebuilds.append(result)
                 # same mesh, same plan: recompiling the program IS the
@@ -428,6 +453,9 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
                     script.clear_hangs(sig.step)
                 watchdog.clear()
                 epoch = membership.epoch
+                if telemetry is not None:
+                    telemetry.rebind_comm(prog.comm, epoch=epoch,
+                                          step=sig.step)
             elif ev.action == ACTION_EVICT and ev.pod:
                 # even a fresh communicator hangs on this pod: amputate.
                 # ban -> next poll classifies it dead -> the existing
@@ -454,6 +482,8 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
                                                plan=result.plan)
             pending_plan.clear()
             step, epoch = sig.step, membership.epoch
+            if telemetry is not None:
+                telemetry.rebind_comm(prog.comm, epoch=epoch, step=step)
             continue
         except MembershipSignal as sig:
             state = latest["state"]
@@ -484,6 +514,8 @@ def _elastic_loop(prog, state, make_batches, *, cluster, ckpt_dir, n_steps,
                                             ckpt_dir=ckpt_dir)
             recoveries.append(rec)
             state, step, epoch = rec.state, rec.step, membership.epoch
+            if telemetry is not None:
+                telemetry.rebind_comm(prog.comm, epoch=epoch, step=step)
 
     history = [by_step[s] for s in sorted(by_step)]
     return state, ElasticReport(history=history, segments=segments,

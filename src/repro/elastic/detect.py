@@ -61,6 +61,9 @@ class PodEvent:
     epoch:  membership epoch the event was observed in (stale-event fence).
     step:   training step at observation time (for chaos scripts / logs).
     detail: free-form cause ("links 0,2 down", "heartbeat timeout", ...).
+    seq:    monotonic per-detector sequence number — the total order of
+            emission, which ``step`` alone can't give when several pods
+            fault in the same step (-1 on events built outside a detector).
     """
 
     kind: str
@@ -68,6 +71,7 @@ class PodEvent:
     epoch: int
     step: int
     detail: str = ""
+    seq: int = -1
 
     @property
     def membership_change(self) -> bool:
@@ -165,6 +169,29 @@ class FailureDetector:
         self.events: list[PodEvent] = []
         self._last: dict[str, str] = {p.name: POD_UP for p in cluster.pods}
         self._banned: set[str] = set()
+        self._seq = 0
+        self._observers: list = []
+
+    # -- emission (the single event source) ---------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(event)`` to be called on every emitted event (how
+        the telemetry plane taps the stream without polling ``events``)."""
+        self._observers.append(fn)
+
+    def emit(self, kind: str, pod: str, step: int, detail: str = "",
+             epoch: int | None = None) -> PodEvent:
+        """Stamp, record, and fan out one event.  Every event this detector
+        produces flows through here, so ``seq`` is a total emission order —
+        deterministic even when several pods fault in the same step."""
+        ev = PodEvent(kind=kind, pod=pod,
+                      epoch=self.epoch if epoch is None else epoch,
+                      step=step, detail=detail, seq=self._seq)
+        self._seq += 1
+        self.events.append(ev)
+        for fn in self._observers:
+            fn(ev)
+        return ev
 
     # -- gray failures (straggler ladder) -----------------------------------
 
@@ -190,10 +217,8 @@ class FailureDetector:
             return None
         else:
             kind = EVENT_POD_REINSTATED
-        ev = PodEvent(kind=kind, pod=pod_name, epoch=self.epoch, step=step,
-                      detail=f"{tr.frm}->{tr.to} at {tr.ratio:.2f}x baseline")
-        self.events.append(ev)
-        return ev
+        return self.emit(kind, pod_name, step,
+                         f"{tr.frm}->{tr.to} at {tr.ratio:.2f}x baseline")
 
     def ban(self, pod_name: str) -> None:
         """Administratively declare ``pod_name`` dead (straggler eviction /
@@ -224,7 +249,9 @@ class FailureDetector:
     def poll(self, step: int = 0, now: float | None = None) -> list[PodEvent]:
         """Classify every pod; emit events for *transitions* since the last
         poll (steady state emits nothing).  Returned events are also
-        appended to :attr:`events`."""
+        appended to :attr:`events`.  Pods are visited in ``cluster.pods``
+        order, so same-step multi-pod faults emit in a deterministic order
+        (and carry distinct ``seq`` stamps)."""
         out: list[PodEvent] = []
         for pod in self.cluster.pods:
             health, cause = self.classify(pod, now)
@@ -242,19 +269,14 @@ class FailureDetector:
                 kind = EVENT_LINK_DEGRADED
             else:
                 kind = EVENT_LINK_RECOVERED
-            out.append(PodEvent(kind=kind, pod=pod.name, epoch=self.epoch,
-                                step=step, detail=cause))
-        self.events.extend(out)
+            out.append(self.emit(kind, pod.name, step, cause))
         return out
 
     def notice_join(self, pod_name: str, step: int = 0) -> PodEvent:
         """Externally announced join (scheduler handed us a replacement pod
         that was never part of this detector's fleet view)."""
-        ev = PodEvent(kind=EVENT_POD_JOINED, pod=pod_name, epoch=self.epoch,
-                      step=step, detail="scheduler join")
         self._last[pod_name] = POD_UP
-        self.events.append(ev)
-        return ev
+        return self.emit(EVENT_POD_JOINED, pod_name, step, "scheduler join")
 
 
 def dead_pods(events: Iterable[PodEvent]) -> list[str]:

@@ -89,7 +89,7 @@ def _serve_batch_sds(cfg: ModelConfig, shape: ShapeConfig, kind: str):
 def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
              verbose: bool = True, plan_mode: str = "manual",
              backend: str = "auto", stripes: str = "auto",
-             policy: str = "auto") -> dict:
+             policy: str = "auto", trace_out: str | None = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "zero": zero,
@@ -172,6 +172,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, zero: int = 3,
                         cluster_for_mesh(mesh), space,
                         bucket_bytes=rc.bucket_bytes, zero_stage=zero))
                     rec["policy_table"] = rc.policies.summary()
+            if trace_out is not None:
+                # modeled Chrome trace of this cell: one span per policy-
+                # table row priced by the simulator (repro.obs, DESIGN.md
+                # §16) — nothing dispatches in a dryrun, so the trace is the
+                # plan, residual 1.0 by construction
+                from repro import obs
+                cl = cluster_for_mesh(mesh)
+                table = (rc.policies if rc.policies is not None
+                         else plan_mod.policy_table_for(cl))
+                spans = obs.modeled_spans(table, cl)
+                obs.write_chrome_trace(trace_out, obs.chrome_trace(spans))
+                rec["trace"] = trace_out
             batch_sds, extra_specs = _train_batch_sds(cfg, shape, mesh, plan)
             prog = make_train_program(model, mesh, rc, plan,
                                       extra_batch_specs=extra_specs)
@@ -285,6 +297,14 @@ def main():
                          "policy everywhere")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--trace", action="store_true",
+                    help="also write a modeled Chrome trace per train cell "
+                         "(<out>/<tag>.trace.json; repro.obs, DESIGN.md §16)"
+                         ": one span per policy-table row priced by the "
+                         "simulator")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append one unified-schema metric line per cell "
+                         "(kind=dryrun_cell) to this JSONL file")
     args = ap.parse_args()
 
     archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
@@ -299,11 +319,24 @@ def main():
                 if args.backend != "auto":
                     tag += f"__{args.backend}"
                 print(f"=== {tag} ===", flush=True)
+                trace_out = (os.path.join(args.out, tag + ".trace.json")
+                             if args.trace else None)
                 rec = run_cell(arch, shape, mesh_kind, args.zero,
                                plan_mode=args.plan, backend=args.backend,
-                               stripes=args.stripes, policy=args.policy)
+                               stripes=args.stripes, policy=args.policy,
+                               trace_out=trace_out)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
+                if args.metrics_out:
+                    from repro.obs import append_metric_line, metric_line
+                    append_metric_line(args.metrics_out, metric_line(
+                        "dryrun_cell",
+                        labels={"arch": arch, "shape": shape,
+                                "mesh": mesh_kind, "zero": args.zero,
+                                "policy": args.policy},
+                        metrics={k: v for k, v in rec.items()
+                                 if isinstance(v, (int, float))},
+                        meta={"status": rec["status"]}))
                 print(f"  -> {rec['status']} "
                       f"({rec.get('compile_s', '-')}s compile)", flush=True)
                 if rec["status"] == "FAILED":

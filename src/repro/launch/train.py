@@ -73,6 +73,16 @@ def main():
                          "the committed BENCH_comm.json; breaches escalate "
                          "retry -> communicator rebuild -> evict "
                          "(DESIGN.md §15)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="telemetry plane (repro.obs, DESIGN.md §16): record "
+                         "every eager collective dispatch as a policy-tagged "
+                         "span with its modeled-vs-measured residual, run "
+                         "per-cell eager probes between steps, and write "
+                         "trace.json (chrome://tracing), metrics.json, "
+                         "report.txt and post-mortem flight dumps to DIR")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a unified-schema metric line (the fleet "
+                         "snapshot) to this JSONL file at the end of the run")
     args = ap.parse_args()
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
@@ -172,6 +182,13 @@ def main():
             print(f"step {step:4d}  loss {m['loss']:.4f}  "
                   f"grad_norm {m['grad_norm']:.3f}", flush=True)
 
+    telemetry = None
+    if args.trace or args.metrics_out:
+        from repro import obs
+        from repro.launch.mesh import cluster_for_mesh
+        telemetry = obs.Telemetry(cluster=cluster_for_mesh(mesh),
+                                  out_dir=args.trace)
+
     if args.elastic or args.chaos or args.watchdog:
         from repro import elastic
         from repro.launch.mesh import cluster_for_mesh
@@ -200,6 +217,7 @@ def main():
             prog, state, make_batches, cluster=cluster,
             ckpt_dir=args.ckpt_dir, n_steps=args.steps, script=script,
             train_plan=tp, detector=detector, watchdog=watchdog,
+            telemetry=telemetry,
             ckpt_every=args.ckpt_every, state_bytes=state_bytes)
         for h in report.history:
             log(h["step"], h)
@@ -216,11 +234,29 @@ def main():
             print(f"recovery: {rec.method}@{rec.step}")
         hist = report.history
     else:
-        state, hist = ft.run_supervised(
-            prog.step_fn, state, batches, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every, n_steps=args.steps,
-            state_shardings=prog.state_shardings,
-            monitor=ft.StragglerMonitor(), metrics_cb=log)
+        cb = log
+        if telemetry is not None:
+            telemetry.bind(comm=prog.comm)
+            telemetry.install()
+
+            def cb(step, m, _log=log):
+                telemetry.on_step(step, m, dur_s=m.get("step_s"))
+                telemetry.probe_step(step)
+                _log(step, m)
+        try:
+            state, hist = ft.run_supervised(
+                prog.step_fn, state, batches, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every, n_steps=args.steps,
+                state_shardings=prog.state_shardings,
+                monitor=ft.StragglerMonitor(), metrics_cb=cb)
+        finally:
+            if telemetry is not None:
+                telemetry.uninstall()
+    if telemetry is not None:
+        paths = telemetry.write(metrics_out=args.metrics_out)
+        print(telemetry.step_report())
+        for k, p in paths.items():
+            print(f"telemetry {k}: {p}")
     print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 
 

@@ -1,0 +1,110 @@
+"""Eager telemetry probes: per-cell measured evidence from inside jit runs.
+
+The dispatch hook in ``hetccl._call`` only sees **eager** calls — inside a
+jitted train step every collective sees a jax tracer and passes through
+unrecorded (same contract as the watchdog, DESIGN.md §15).  Probes close
+that gap: between steps the elastic loop dispatches one small eager
+collective per active policy-table cell through a *probe communicator*
+(empty local axes, no pod axis), producing real wall-clock spans with the
+run's actual policy tags and the simulator's modeled time — the rows
+``plan.measured.rows_from_flight`` later ingests as online calibration.
+
+Why empty axes: eager jax cannot resolve named mesh axes (``psum`` over an
+unbound axis name raises), but every collective impl degrades gracefully on
+the empty group — hierarchy short-circuits on a falsy pod axis and a psum
+over zero axes is the identity — so the probe exercises the full dispatch
+path (policy resolution, variant mapping, backend kernels where they apply)
+on this process alone.  ``all_to_all`` has no eager eval rule in jax and is
+skipped; the coverage contract only spans cells a run *dispatched*.
+
+Probes disarm the watchdog around their dispatches (a 16 MiB eager psum on
+a slow CPU could breach a derived deadline and fault the run they're
+observing) and tag their spans ``probe=True`` so readers can separate probe
+evidence from in-band dispatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# One representative payload per size class (f32 element counts are derived):
+# small/medium match the class reps used by the autotuner and the offline
+# bench; large stays at 16 MiB — inside the >8 MiB class but affordable to
+# dispatch eagerly every probe interval on CPU hosts.
+PROBE_CLASS_BYTES = {"small": 16 * 1024, "medium": 1 << 20, "large": 16 << 20}
+
+_PROBE_OPS = ("all_gather", "all_reduce", "broadcast", "reduce",
+              "reduce_scatter")        # all_to_all: no eager eval rule
+_PROBE_KW = {"broadcast": {"root": 0}, "reduce": {"root": 0}}
+
+
+def probe_communicator(comm, tracer=None):
+    """Clone ``comm``'s policy table onto an empty-group communicator (and
+    optionally pin ``tracer`` to it) — the probe dispatch target."""
+    # deferred: repro.comm pulls in repro.core, which imports back into
+    # repro.comm — importing obs first must not trip that cycle
+    from repro.comm import communicator as comm_mod
+    pc = comm_mod.create((), None, table=comm.table,
+                         bucket_bytes=comm.bucket_bytes)
+    if tracer is not None:
+        pc = dataclasses.replace(pc, tracer=tracer)
+    return pc
+
+
+def probe_cells(comm) -> list[tuple[str, str]]:
+    """The ``(op, size_class)`` cells a probe pass covers: every explicit
+    policy-table row (wildcard-class rows expand to every class), or the
+    full probe-able grid on a facade table."""
+    rows = set()
+    for (op, cls), _pol in comm.table.rows:
+        if op not in _PROBE_OPS:
+            continue
+        for c in (PROBE_CLASS_BYTES if cls == "*" else (cls,)):
+            rows.add((op, c))
+    if rows:
+        return sorted(rows)
+    return [(op, cls) for op in _PROBE_OPS for cls in PROBE_CLASS_BYTES]
+
+
+def run_probes(probe_comm, *, cells=None, step: int | None = None) -> int:
+    """Dispatch one eager collective per cell through ``probe_comm``.
+
+    Returns the number of probe dispatches.  The tracer riding on
+    ``probe_comm`` (or the installed one) records each as a collective span
+    tagged ``probe=True``; the watchdog is disarmed for the duration.
+    """
+    import jax.numpy as jnp
+    from repro.core import hetccl
+
+    tracer = probe_comm.tracer if probe_comm.tracer is not None \
+        else hetccl.current_tracer()
+    if cells is None:
+        cells = probe_cells(probe_comm)
+    if tracer is not None:
+        tracer.set_step(step)
+
+    wd = hetccl._WATCHDOG
+    hetccl.disarm_watchdog()
+    payloads: dict[int, object] = {}
+    n = 0
+    try:
+        ctx = tracer.extra(probe=True) if tracer is not None \
+            else _null_context()
+        with ctx:
+            for op, cls in cells:
+                if op not in _PROBE_OPS:
+                    continue
+                nbytes = PROBE_CLASS_BYTES[cls]
+                if nbytes not in payloads:
+                    payloads[nbytes] = jnp.zeros(nbytes // 4, jnp.float32)
+                getattr(hetccl, op)(payloads[nbytes], probe_comm,
+                                    **_PROBE_KW.get(op, {}))
+                n += 1
+    finally:
+        if wd is not None:
+            hetccl.arm_watchdog(wd)
+    return n
+
+
+def _null_context():
+    import contextlib
+    return contextlib.nullcontext()

@@ -25,9 +25,11 @@ from repro.plan.autotuner import (CLASS_REP_BYTES, DEFAULT_BUCKET,
 from repro.plan.measured import (AlphaBetaFit, CalibrationRow, bench_cluster,
                                  calibrated_plan, calibration_record,
                                  calibration_report, comm_scale_from_report,
-                                 fit_alpha_beta, missing_table_rows,
+                                 fit_alpha_beta, flight_cells,
+                                 missing_table_rows,
                                  modeled_train_step_s, planner_check,
-                                 profiles_from_train, train_request)
+                                 profiles_from_train, rows_from_flight,
+                                 train_request)
 from repro.plan.refine import calibrate, refine, refined_frontier
 
 __all__ = [
@@ -37,8 +39,9 @@ __all__ = [
     "autotune_policies", "bench_cluster", "best_policy", "calibrate",
     "calibrated_plan", "calibration_record", "calibration_report",
     "comm_scale_from_report", "estimate_hbm_bytes", "fit_alpha_beta",
-    "grad_payload_bytes", "missing_table_rows", "modeled_train_step_s",
+    "flight_cells", "grad_payload_bytes", "missing_table_rows",
+    "modeled_train_step_s",
     "plan_request", "planner_check", "pod_profiles", "policy_table_for",
-    "profiles_from_train", "rank", "refine",
+    "profiles_from_train", "rank", "refine", "rows_from_flight",
     "refined_frontier", "train_request", "workload_for",
 ]

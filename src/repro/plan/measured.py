@@ -72,7 +72,7 @@ class CalibrationRow:
     n_channels: int
     n_stripes: int
     nbytes: int
-    group: str                  # "sweep" | "policy"
+    group: str                  # "sweep" | "policy" | "flight"
     measured_s: float           # median of the measured samples
     modeled_s: float            # simulator price of the same configuration
 
@@ -115,6 +115,63 @@ def calibration_report(bench_comm: Mapping,
             nbytes=int(e["nbytes"]), group=e.get("group", "sweep"),
             measured_s=float(e["median_s"]), modeled_s=float(modeled)))
     return tuple(rows)
+
+
+def rows_from_flight(dump: Mapping, cluster: ClusterSpec | None = None
+                     ) -> tuple[CalibrationRow, ...]:
+    """Ingest a flight-recorder dump (``repro.obs.flight``) as calibration
+    rows — the *online* counterpart of ``BENCH_comm.json`` (DESIGN.md §14).
+
+    Every collective span in the dump carries measured wall time plus the
+    full policy identity and the tracer's modeled price; spans sharing one
+    ``(op, size_class, mode, backend, n_channels, n_stripes, nbytes)`` cell
+    collapse to a single row at the measured *median*.  Pass ``cluster`` to
+    re-price modeled time on a specific topology; otherwise the price
+    recorded in the span is used (same simulator, priced at dispatch time).
+    """
+    cells: dict[tuple, dict] = {}
+    for e in dump.get("entries", ()):
+        if e.get("kind") != "span" or e.get("cat") != "collective":
+            continue
+        t = e.get("tags") or {}
+        if e.get("dur_s") is None or "op" not in t:
+            continue
+        key = (t["op"], t["size_class"], t["mode"], t["backend"],
+               int(t["n_channels"]), int(t["n_stripes"]), int(t["nbytes"]))
+        cell = cells.setdefault(key, {"measured": [], "modeled": []})
+        cell["measured"].append(float(e["dur_s"]))
+        if e.get("modeled_s") is not None:
+            cell["modeled"].append(float(e["modeled_s"]))
+    rows = []
+    for (op, cls, mode, backend, nch, nk, nbytes), cell \
+            in sorted(cells.items()):
+        if cluster is not None:
+            eff_mode = mode if mode != "auto" else (
+                "hier" if len(cluster.pods) > 1 else "flat")
+            modeled = float(sim.collective_time(
+                op, float(nbytes), cluster, eff_mode,
+                n_channels=max(nch, 1), backend=backend,
+                n_stripes=max(nk, 1)))
+        elif cell["modeled"]:
+            modeled = float(np.median(cell["modeled"]))
+        else:
+            modeled = 0.0
+        rows.append(CalibrationRow(
+            name=f"flight/{op}/{cls}/{mode}-{backend}-c{nch}-k{nk}",
+            op=op, size_class=cls, mode=mode, backend=backend,
+            n_channels=nch, n_stripes=nk, nbytes=nbytes, group="flight",
+            measured_s=float(np.median(cell["measured"])),
+            modeled_s=modeled))
+    return tuple(rows)
+
+
+def flight_cells(rows: Sequence[CalibrationRow]
+                 ) -> list[tuple[str, str, str]]:
+    """The ``(op, size_class, backend)`` cells a flight ingest covered —
+    compared against ``Tracer.dispatched_cells()`` this is the ISSUE-9
+    acceptance check: every cell a run dispatched must calibrate."""
+    return sorted({(r.op, r.size_class, r.backend) for r in rows
+                   if r.group == "flight"})
 
 
 def comm_scale_from_report(report: Sequence[CalibrationRow]) -> float:

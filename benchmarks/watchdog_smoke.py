@@ -60,6 +60,7 @@ def main() -> None:
         "tolerance": dt.tolerance,
         "rules": [{
             "op": r.op, "size_class": r.size_class, "backend": r.backend,
+            "wire_quant": r.wire_quant,
             "modeled_s": r.modeled_s, "scale": r.scale, "noise": r.noise,
             "measured_median_s": r.measured_median_s,
             "deadline_s": r.deadline_s,

@@ -27,7 +27,7 @@ import dataclasses
 from typing import Any
 
 from repro.comm.policy import (CommPolicy, DEFAULT_SIZE_CLASS_BOUNDS,
-                               PolicyTable)
+                               PolicyTable, RING_BACKED_OPS)
 from repro.core import tacc
 from repro.transport.stripe import MAX_STRIPES
 
@@ -47,18 +47,25 @@ def variant_for(op: str, mode: str) -> str:
 
 
 def _resolve_policy(p: CommPolicy, pod_axis: str | None,
-                    stripe_cap: int) -> CommPolicy:
+                    stripe_cap: int, op: str | None = None) -> CommPolicy:
     """Compile one table row: "auto" mode against the group's pod axis,
     stripes collapsed for xla (one ppermute is one logical transfer) and
-    clamped to the bound inventory's healthy links."""
+    clamped to the bound inventory's healthy links, and ``wire_quant``
+    collapsed to None for the xla backend and non-ring ops (DESIGN.md §17
+    — only the DMA rings carry a quantized payload; ``op`` None means the
+    row applies to every op, e.g. the table default, and keeps the codec)."""
     mode = p.mode
     if mode == "auto":
         mode = "hier" if pod_axis else "flat"
     stripes = 1 if p.backend != "pallas" else \
         max(min(int(p.n_stripes), stripe_cap), 1)
+    wire_quant = p.wire_quant
+    if p.backend != "pallas" or (op is not None and op not in RING_BACKED_OPS):
+        wire_quant = None
     return CommPolicy(mode=mode, backend=p.backend,
                       n_channels=max(int(p.n_channels), 1),
-                      n_stripes=stripes, cross_dtype=p.cross_dtype)
+                      n_stripes=stripes, cross_dtype=p.cross_dtype,
+                      wire_quant=wire_quant)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -197,7 +204,7 @@ def create(local_axes: tuple[str, ...] = ("data",),
         cap = min(cap, max(len(link_inventory.healthy_links()), 1))
     local_axes = tuple(local_axes)
     resolved = PolicyTable(
-        rows=tuple((k, _resolve_policy(p, pod_axis, cap))
+        rows=tuple((k, _resolve_policy(p, pod_axis, cap, op=k[0]))
                    for k, p in table.rows),
         default=_resolve_policy(table.default, pod_axis, cap),
         bounds=table.bounds)

@@ -29,11 +29,20 @@ from typing import Any, Iterable, Mapping
 # Size-class boundaries (inclusive upper edges): payloads of ≤ bounds[0]
 # bytes are "small", ≤ bounds[1] "medium", anything larger "large".
 DEFAULT_SIZE_CLASS_BOUNDS = (64 * 1024, 8 * 1024 * 1024)
+
+# Ops whose cross-island stage is ring-backed — the only ops a ``pallas``
+# backend row (and therefore a ``wire_quant`` codec, DESIGN.md §17) can
+# change; re-exported as ``plan.RING_BACKED_OPS`` for the planner's
+# candidate pruning.
+RING_BACKED_OPS = frozenset(
+    {"all_reduce", "all_gather", "reduce_scatter", "reduce"})
 SIZE_CLASSES = ("small", "medium", "large")
 WILDCARD = "*"
 
 MODES = ("flat", "hier", "pipelined")
 BACKENDS = ("xla", "pallas")
+# Wire quantization codecs (DESIGN.md §17); None = uncompressed wire.
+WIRE_QUANTS = ("int8", "fp8")
 
 
 def size_class(nbytes: float,
@@ -66,6 +75,12 @@ class CommPolicy:
     cross_dtype: optional wire dtype of the cross-island stage (gradient
                  compression; a dtype name string keeps the policy hashable
                  and JSON-friendly).
+    wire_quant:  optional wire quantization codec of the pallas rings
+                 (None | "int8" | "fp8", DESIGN.md §17): per-chunk absmax
+                 scaling with an f32 accumulator and the scale sidecar on
+                 the wire.  Collapsed to None for the xla backend and
+                 non-ring ops at communicator creation — only the DMA
+                 rings carry a quantized payload.
     """
 
     mode: str = "flat"
@@ -73,6 +88,7 @@ class CommPolicy:
     n_channels: int = 1
     n_stripes: int = 1
     cross_dtype: Any = None
+    wire_quant: str | None = None
 
     def __post_init__(self):
         if self.mode not in MODES + ("auto",):
@@ -87,6 +103,12 @@ class CommPolicy:
             raise ValueError(f"n_channels must be >= 1, got {self.n_channels}")
         if int(self.n_stripes) < 1:
             raise ValueError(f"n_stripes must be >= 1, got {self.n_stripes}")
+        if self.wire_quant is not None:
+            if self.wire_quant not in WIRE_QUANTS:
+                raise ValueError(
+                    f"unknown wire_quant codec {self.wire_quant!r}; "
+                    f"expected None or one of {WIRE_QUANTS}")
+            object.__setattr__(self, "wire_quant", str(self.wire_quant))
 
     def summary(self) -> dict:
         """JSON-friendly digest (dry-run records, perf_log rows)."""
@@ -94,11 +116,13 @@ class CommPolicy:
                 "n_channels": int(self.n_channels),
                 "n_stripes": int(self.n_stripes),
                 "cross_dtype": str(self.cross_dtype)
-                if self.cross_dtype is not None else None}
+                if self.cross_dtype is not None else None,
+                "wire_quant": self.wire_quant}
 
     def label(self) -> str:
         """Compact human-readable tag (figure/row names)."""
-        return f"{self.mode}-{self.backend}-c{self.n_channels}-k{self.n_stripes}"
+        base = f"{self.mode}-{self.backend}-c{self.n_channels}-k{self.n_stripes}"
+        return base if self.wire_quant is None else f"{base}-q{self.wire_quant}"
 
 
 def _norm_key(key) -> tuple[str, str]:
@@ -183,6 +207,22 @@ class PolicyTable:
             if p.cross_dtype is not None:
                 return p
             return dataclasses.replace(p, cross_dtype=cross_dtype)
+        return PolicyTable(rows=tuple((k, fill(p)) for k, p in self.rows),
+                           default=fill(self.default), bounds=self.bounds)
+
+    def with_wire_quant(self, wire_quant: str | None) -> "PolicyTable":
+        """A copy with ``wire_quant`` filled into every policy that leaves
+        it unset — same exact-row-wins composition contract as
+        :meth:`with_cross_dtype` (DESIGN.md §17): a planner-emitted quant
+        row is never overridden by the run-level knob, and filling ``None``
+        is the identity (run knob absent, planner rows stand)."""
+        if wire_quant is None:
+            return self
+
+        def fill(p: CommPolicy) -> CommPolicy:
+            if p.wire_quant is not None:
+                return p
+            return dataclasses.replace(p, wire_quant=wire_quant)
         return PolicyTable(rows=tuple((k, fill(p)) for k, p in self.rows),
                            default=fill(self.default), bounds=self.bounds)
 

@@ -190,6 +190,15 @@ class RunConfig:
     eps: float = 1e-8
     grad_clip: float = 1.0
     cross_dtype: str | None = None   # cross-pod gradient compression
+    wire_quant: str | None = None    # wire quantization codec of the pallas
+                                     # rings (None | "int8" | "fp8",
+                                     # DESIGN.md §17); composes with a
+                                     # planner table via with_wire_quant —
+                                     # planner rows win
+    error_feedback: str = "auto"     # EF residual state for quantized
+                                     # gradient collectives: "auto" (on iff
+                                     # the gradient rings quantize) | "on" |
+                                     # "off" (ablation: quantize without EF)
     param_dtype: str = "bfloat16"
     master_dtype: str = "float32"
     seed: int = 0

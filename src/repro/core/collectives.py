@@ -65,7 +65,7 @@ RING_BACKENDS = ("xla", "pallas")
 
 
 def resolve_ring_backend(backend: str, *, bidir: bool = False,
-                         n_stripes: int = 1):
+                         n_stripes: int = 1, wire_quant: str | None = None):
     """(reduce_scatter, all_gather) ring primitives for ``backend``.
 
     ``"xla"``: the ``lax.ppermute`` rings in this module.  ``"pallas"``: the
@@ -80,6 +80,12 @@ def resolve_ring_backend(backend: str, *, bidir: bool = False,
     rings are single-stream by construction (one ppermute is one logical
     transfer), so the knob is ignored there — mirroring
     ``HetCCLConfig.resolved_stripes``.
+
+    ``wire_quant`` binds the wire-quantization codec (None | "int8" |
+    "fp8", DESIGN.md §17) into the pallas rings: payloads cross each hop as
+    per-chunk absmax codes with the f32 scale sidecar and accumulate in
+    f32.  The xla ppermute rings carry no codec — the knob is ignored
+    there, mirroring the communicator's creation-time collapse.
     """
     if backend == "pallas":
         from repro.kernels import ring_dma
@@ -87,9 +93,14 @@ def resolve_ring_backend(backend: str, *, bidir: bool = False,
               else ring_dma.ring_reduce_scatter)
         ag = (ring_dma.ring_all_gather_bidir if bidir
               else ring_dma.ring_all_gather)
+        kw = {}
         if n_stripes and int(n_stripes) > 1:
-            rs = functools.partial(rs, n_stripes=int(n_stripes))
-            ag = functools.partial(ag, n_stripes=int(n_stripes))
+            kw["n_stripes"] = int(n_stripes)
+        if wire_quant is not None:
+            kw["wire_quant"] = wire_quant
+        if kw:
+            rs = functools.partial(rs, **kw)
+            ag = functools.partial(ag, **kw)
         return rs, ag
     if backend != "xla":
         raise ValueError(f"unknown collective backend {backend!r}; "
@@ -346,9 +357,10 @@ def _flat_rank_index(all_axes: tuple[str, ...]) -> jax.Array:
 
 
 @tacc.register("all_reduce", "flat", default=True,
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
-                    backend: str = "xla", n_stripes: int = 1):
+                    backend: str = "xla", n_stripes: int = 1,
+                    wire_quant: str | None = None):
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas":
         # the naive single-stage ring, but with the DMA kernels: one explicit
@@ -356,22 +368,24 @@ def flat_all_reduce(x, axes: Axis, pod_axis: str | None = None, *,
         from repro.kernels import ring_dma
         out = x
         for a in all_axes:
-            out = ring_dma.ring_all_reduce(out, a, n_stripes=n_stripes)
+            out = ring_dma.ring_all_reduce(out, a, n_stripes=n_stripes,
+                                           wire_quant=wire_quant)
         return out
     return lax.psum(x, all_axes)
 
 
 @tacc.register("all_gather", "flat", default=True,
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
                     tiled: bool = True, backend: str = "xla",
-                    n_stripes: int = 1):
+                    n_stripes: int = 1, wire_quant: str | None = None):
     gather_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     if backend == "pallas" and tiled:
         from repro.kernels import ring_dma
         out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
         for a in gather_axes:
-            out = ring_dma.ring_all_gather(out, a, n_stripes=n_stripes)
+            out = ring_dma.ring_all_gather(out, a, n_stripes=n_stripes,
+                                           wire_quant=wire_quant)
         return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
     for a in gather_axes:
@@ -380,16 +394,17 @@ def flat_all_gather(x, axes: Axis, pod_axis: str | None = None, *, dim: int = 0,
 
 
 @tacc.register("reduce_scatter", "flat", default=True,
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def flat_reduce_scatter(x, axes: Axis, pod_axis: str | None = None, *,
                         dim: int = 0, backend: str = "xla",
-                        n_stripes: int = 1):
+                        n_stripes: int = 1, wire_quant: str | None = None):
     all_axes = ((pod_axis,) if pod_axis else ()) + _axes_tuple(axes)
     if backend == "pallas":
         from repro.kernels import ring_dma
         out = jnp.moveaxis(x, dim, 0) if dim != 0 else x
         for a in all_axes:
-            out = ring_dma.ring_reduce_scatter(out, a, n_stripes=n_stripes)
+            out = ring_dma.ring_reduce_scatter(out, a, n_stripes=n_stripes,
+                                               wire_quant=wire_quant)
         return jnp.moveaxis(out, 0, dim) if dim != 0 else out
     out = x
     for a in all_axes:
@@ -440,10 +455,11 @@ def _flatten_pad(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
 
 
 @tacc.register("all_reduce", "hier",
-               policy_fields=("backend", "n_stripes", "cross_dtype"))
+               policy_fields=("backend", "n_stripes", "cross_dtype",
+                              "wire_quant"))
 def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                     cross_dtype=None, backend: str = "xla",
-                    n_stripes: int = 1):
+                    n_stripes: int = 1, wire_quant: str | None = None):
     """AllReduce = local ReduceScatter -> cross-pod ring AllReduce -> local AllGather.
 
     ``cross_dtype`` optionally compresses the cross-island stage (the slow
@@ -451,12 +467,18 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     transit the pod boundary.  ``backend="pallas"`` swaps the cross-pod rings
     for the DMA rings (which additionally keep an f32 accumulator under the
     narrow wire — the fused decompression of DESIGN.md §10); ``n_stripes``
-    is their multi-NIC stripe count (DESIGN.md §11).
+    is their multi-NIC stripe count (DESIGN.md §11) and ``wire_quant`` their
+    per-chunk absmax codec (DESIGN.md §17) — when set it supersedes the
+    ``cross_dtype`` cast (the codec already narrows the wire harder and the
+    DMA rings keep the f32 accumulator underneath).
     """
     local = _axes_tuple(axes)
     if not pod_axis:
         return lax.psum(x, local)
-    cross_rs, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes)
+    cross_rs, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes,
+                                              wire_quant=wire_quant)
+    if wire_quant is not None and backend == "pallas":
+        cross_dtype = None       # the codec owns the wire format
     D = 1
     for a in local:
         D *= lax.axis_size(a)
@@ -484,14 +506,15 @@ def hier_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 
 @tacc.register("all_gather", "hier",
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0,
                     tiled: bool = True, backend: str = "xla",
-                    n_stripes: int = 1):
+                    n_stripes: int = 1, wire_quant: str | None = None):
     """Local native gather, then cross-pod ring gather (pod-major order)."""
     out = flat_all_gather(x, axes, None, dim=dim, tiled=tiled)
     if pod_axis:
-        _, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes)
+        _, cross_ag = resolve_ring_backend(backend, n_stripes=n_stripes,
+                                           wire_quant=wire_quant)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
         out = cross_ag(out, pod_axis)
@@ -501,14 +524,15 @@ def hier_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *, dim: int = 0
 
 
 @tacc.register("reduce_scatter", "hier",
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def hier_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                         dim: int = 0, backend: str = "xla",
-                        n_stripes: int = 1):
+                        n_stripes: int = 1, wire_quant: str | None = None):
     """Cross-pod ring reduce-scatter first (P2P), then local native stage."""
     out = x
     if pod_axis:
-        cross_rs, _ = resolve_ring_backend(backend, n_stripes=n_stripes)
+        cross_rs, _ = resolve_ring_backend(backend, n_stripes=n_stripes,
+                                           wire_quant=wire_quant)
         if dim != 0:
             out = jnp.moveaxis(out, dim, 0)
         out = cross_rs(out, pod_axis)
@@ -553,11 +577,12 @@ def hier_broadcast(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0
 
 
 @tacc.register("reduce", "hier",
-               policy_fields=("backend", "n_stripes"))
+               policy_fields=("backend", "n_stripes", "wire_quant"))
 def hier_reduce(x, axes: Axis, pod_axis: str | None = "pod", *, root: int = 0,
-                backend: str = "xla", n_stripes: int = 1):
+                backend: str = "xla", n_stripes: int = 1,
+                wire_quant: str | None = None):
     s = hier_all_reduce(x, axes, pod_axis, backend=backend,
-                        n_stripes=n_stripes)
+                        n_stripes=n_stripes, wire_quant=wire_quant)
     all_axes = _axes_tuple(axes) + ((pod_axis,) if pod_axis else ())
     flat_idx = _flat_rank_index(all_axes)
     return jnp.where(flat_idx == root, s, jnp.zeros_like(s))
@@ -621,12 +646,12 @@ def resolve_channels(nbytes: int, n_channels: int,
 
 @tacc.register("all_reduce", "pipelined",
                policy_fields=("backend", "n_stripes", "cross_dtype",
-                              "n_channels"))
+                              "n_channels", "wire_quant"))
 def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
                          cross_dtype=None, n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
                          bidir: bool = True, backend: str = "xla",
-                         n_stripes: int = 1):
+                         n_stripes: int = 1, wire_quant: str | None = None):
     """AllReduce as a C-channel pipeline of (local RS -> cross ring -> local AG).
 
     Equals :func:`hier_all_reduce` numerically; chunk k's cross-pod stage is
@@ -648,7 +673,9 @@ def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
     n = flat.shape[0]
     chunks = list(jnp.split(flat, C)) if C > 1 else [flat]
     cross_ring_rs, cross_ring_ag = resolve_ring_backend(
-        backend, bidir=bidir, n_stripes=n_stripes)
+        backend, bidir=bidir, n_stripes=n_stripes, wire_quant=wire_quant)
+    if wire_quant is not None and backend == "pallas":
+        cross_dtype = None       # the codec owns the wire format (§17)
 
     def local_rs(c):
         if D == 1:
@@ -677,13 +704,14 @@ def pipelined_all_reduce(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 
 @tacc.register("all_gather", "pipelined",
-               policy_fields=("backend", "n_stripes", "n_channels"))
+               policy_fields=("backend", "n_stripes", "n_channels",
+                              "wire_quant"))
 def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
                          dim: int = 0, tiled: bool = True,
                          n_channels: int = 4,
                          pipeline_chunk_bytes: int | None = None,
                          bidir: bool = True, backend: str = "xla",
-                         n_stripes: int = 1):
+                         n_stripes: int = 1, wire_quant: str | None = None):
     """Two-stage gather, pipelined: chunk k's cross-pod ring gather overlaps
     chunk k+1's local native gather.  Pod-major result order (same as hier)."""
     if not pod_axis:
@@ -698,7 +726,8 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
                          pipeline_chunk_bytes, c0, n_stripes)
     chunks = list(jnp.array_split(xm, C)) if C > 1 else [xm]
     _, cross_ring_ag = resolve_ring_backend(backend, bidir=bidir,
-                                            n_stripes=n_stripes)
+                                            n_stripes=n_stripes,
+                                            wire_quant=wire_quant)
 
     def local_ag(c):
         return flat_all_gather(c, axes, None, dim=0, tiled=True)
@@ -720,12 +749,14 @@ def pipelined_all_gather(x, axes: Axis, pod_axis: str | None = "pod", *,
 
 
 @tacc.register("reduce_scatter", "pipelined",
-               policy_fields=("backend", "n_stripes", "n_channels"))
+               policy_fields=("backend", "n_stripes", "n_channels",
+                              "wire_quant"))
 def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
                              dim: int = 0, n_channels: int = 4,
                              pipeline_chunk_bytes: int | None = None,
                              bidir: bool = True, backend: str = "xla",
-                             n_stripes: int = 1):
+                             n_stripes: int = 1,
+                             wire_quant: str | None = None):
     """Two-stage reduce-scatter, pipelined: chunk k's local native stage
     overlaps chunk k+1's cross-pod ring."""
     if not pod_axis:
@@ -743,7 +774,8 @@ def pipelined_reduce_scatter(x, axes: Axis, pod_axis: str | None = "pod", *,
     chunks = [c.reshape((W * c.shape[1],) + xm.shape[1:])
               for c in jnp.array_split(grouped, C, axis=1)] if C > 1 else [xm]
     cross_ring_rs, _ = resolve_ring_backend(backend, bidir=bidir,
-                                            n_stripes=n_stripes)
+                                            n_stripes=n_stripes,
+                                            wire_quant=wire_quant)
 
     def cross(c):
         return cross_ring_rs(c, pod_axis)
@@ -791,7 +823,8 @@ def _fsdp_ag_bwd(axis, dim, _, g):
     if pol.backend == "pallas":
         from repro.kernels import ring_dma
         out = ring_dma.ring_reduce_scatter(gm, axis, wire_dtype=g.dtype,
-                                           n_stripes=pol.n_stripes)
+                                           n_stripes=pol.n_stripes,
+                                           wire_quant=pol.wire_quant)
     else:
         out = ring_reduce_scatter_mixed(gm, axis)
     out = jnp.moveaxis(out, 0, dim) if dim else out

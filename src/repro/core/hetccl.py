@@ -72,6 +72,12 @@ class HetCCLConfig:
                  logical transfer, so :meth:`resolved_stripes` collapses the
                  knob to 1 there.  The plan autotuner searches it jointly
                  (``SearchSpace.stripe_counts``).
+    wire_quant:  optional wire-quantization codec of the DMA rings
+                 (None | "int8" | "fp8", DESIGN.md §17): ring payloads cross
+                 each hop as per-chunk absmax codes with an f32 scale
+                 sidecar, accumulated in f32.  Pallas-backend only — the
+                 communicator's creation-time resolve collapses it to None
+                 for xla rows and non-ring ops.
     """
 
     mode: str = "auto"
@@ -83,6 +89,7 @@ class HetCCLConfig:
     pipeline_chunk_bytes: int | None = None
     backend: str = "xla"
     n_stripes: int = 1
+    wire_quant: str | None = None
 
     def resolved_mode(self) -> str:
         if self.mode == "auto":
@@ -124,7 +131,10 @@ class HetCCLConfig:
                           backend=self.resolved_backend(),
                           n_channels=max(int(self.n_channels), 1),
                           n_stripes=self.resolved_stripes(),
-                          cross_dtype=self.cross_dtype)
+                          cross_dtype=self.cross_dtype,
+                          wire_quant=(self.wire_quant
+                                      if self.resolved_backend() == "pallas"
+                                      else None))
 
     def to_table(self) -> PolicyTable:
         """The facade contract (DESIGN.md §12): a legacy single-policy

@@ -74,6 +74,26 @@ DMA_STREAMS = 2
 
 RING_BACKENDS = ("xla", "pallas")
 
+# Wire-quantization pricing constants (DESIGN.md §17).  The codec layout MUST
+# match kernels.quant: one code byte per element plus an f32 scale per
+# DEFAULT_CHUNK-element chunk (cross-layer contract, tested in
+# tests/test_quant.py).  Kept as literals so this module stays jax-free.
+QUANT_CODE_BYTES = 1.0           # int8 and fp8-e4m3 both ship 1 byte/elem
+QUANT_SCALE_BYTES = 4.0          # f32 scale sidecar, per chunk
+QUANT_CHUNK = 512.0              # MUST equal kernels.quant.DEFAULT_CHUNK
+QUANT_WIRE_RATIO = (QUANT_CODE_BYTES + QUANT_SCALE_BYTES / QUANT_CHUNK) / 4.0
+# Extra HBM passes of the codec per wire-touched byte: quantize reads the f32
+# partial and writes codes; the decode is fused into the accumulate.  Priced
+# against the same HBM-bound reduce bandwidth as the chunk accumulate.
+QUANT_COMPUTE_FACTOR = 1.0
+# Per-ring-step launch cost of the quantize/dequant kernel pair (fused with
+# the hop's DMA dispatch, so marginal) — the fixed term that makes
+# quantization a strict loss on small/latency-bound payloads (the planner
+# additionally never emits quant rows outside the large class).
+QUANT_STEP_ALPHA = 1e-6
+
+WIRE_QUANTS = (None, "int8", "fp8")
+
 
 def _reduce_bw(cluster: ClusterSpec) -> float:
     """On-device accumulate throughput of the slowest island (HBM-bound)."""
@@ -111,7 +131,8 @@ def _stripe_plan(cluster: ClusterSpec, n_stripes, nbytes: float,
 def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
                         alpha: float, reduce_bw: float, *,
                         half: float = 1.0, backend: str = "xla",
-                        stripes: StripePlan | None = None) -> float:
+                        stripes: StripePlan | None = None,
+                        wire_quant: str | None = None) -> float:
     """One explicit ring (ppermute or DMA) over ``n`` ranks (DESIGN.md §10).
 
     backend "xla": XLA schedules each ring step's wire transfer and its chunk
@@ -128,14 +149,33 @@ def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
     stripe fill + max over links of that link's per-stripe time, degraded
     links priced at their reduced bandwidth.  The reduction term is
     unaffected (it is HBM-bound, not NIC-bound).
+
+    ``wire_quant`` (pallas only, DESIGN.md §17) shrinks the wire bytes to
+    the codec's 1 byte/element plus the f32 per-chunk scale sidecar
+    (:data:`QUANT_WIRE_RATIO`) and charges the codec's HBM passes
+    (:data:`QUANT_COMPUTE_FACTOR`, folded into the overlappable reduce-side
+    term) plus a per-step kernel-launch pair (:data:`QUANT_STEP_ALPHA`) —
+    the fixed cost that keeps quantization a loss on latency-bound payloads.
     """
     if n <= 1:
         return 0.0
     if backend not in RING_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected "
                          f"one of {RING_BACKENDS}")
+    if wire_quant not in WIRE_QUANTS:
+        raise ValueError(f"unknown wire_quant {wire_quant!r}; expected "
+                         f"one of {WIRE_QUANTS}")
+    if backend != "pallas":
+        # only the DMA rings carry a quantized payload (the communicator
+        # collapses wire_quant to None for xla rows; mirror that here)
+        wire_quant = None
     steps = (2 if op == "all_reduce" else 1) * (n - 1)
     wire_bytes = half * _RING_FACTORS[op](n) * nbytes
+    Q = 0.0
+    if wire_quant is not None:
+        wire_bytes *= QUANT_WIRE_RATIO
+        Q = (_RING_FACTORS[op](n) * nbytes * QUANT_COMPUTE_FACTOR / reduce_bw
+             + QUANT_STEP_ALPHA * steps)
     if backend == "pallas" and stripes is not None:
         # per-link wire term: the k-descriptor fill recurs every ring step
         W = stripes.wire_time(wire_bytes, n_transfers=steps)
@@ -145,6 +185,7 @@ def _explicit_ring_time(op: str, nbytes: float, n: int, bw: float,
     if op in _REDUCING_OPS:
         # reduction happens in the reduce-scatter half: (n-1)/n of the buffer
         R = _RING_FACTORS["reduce_scatter"](n) * nbytes / reduce_bw
+    R += Q       # codec passes are HBM-bound like the accumulate — overlap
     if backend == "pallas" and R:
         S = DMA_STREAMS
         body = (W + R) / S + (S - 1) / S * max(W, R)
@@ -173,15 +214,18 @@ def _local_collective_time(op: str, nbytes: float, pod: PodSpec,
 def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
                            alpha: float, bidir: bool,
                            backend: str = "xla",
-                           n_stripes=1) -> list[float]:
+                           n_stripes=1,
+                           wire_quant: str | None = None) -> list[float]:
     """Per-chunk stage costs of the pipelined hierarchical schedule.
 
     Stage list mirrors the hier decomposition (local native stage(s) + the
     cross-island ring); ``bidir`` halves the cross ring's *bandwidth* term —
     the bidirectional rings push half the payload per direction over the
     full-duplex link — while the per-hop α count is unchanged.  ``backend``
-    selects the cross ring's wire/reduce schedule (DESIGN.md §10) and
-    ``n_stripes`` its multi-NIC stripe schedule (§11; pallas only).
+    selects the cross ring's wire/reduce schedule (DESIGN.md §10),
+    ``n_stripes`` its multi-NIC stripe schedule (§11; pallas only) and
+    ``wire_quant`` its payload codec (§17; pallas only — vendor-local
+    stages always run the native library on uncompressed payloads).
     """
     pods = list(cluster.pods)
     P = len(pods)
@@ -203,7 +247,7 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
             max(local("reduce_scatter", p) for p in pods),
             _explicit_ring_time("all_reduce", shard, P, cross_bw, alpha,
                                 red_bw, half=half, backend=backend,
-                                stripes=stripes),
+                                stripes=stripes, wire_quant=wire_quant),
             max(local("all_gather", p) for p in pods),
         ]
     if op in ("all_gather", "reduce_scatter", "broadcast", "reduce"):
@@ -212,7 +256,7 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
             max(local(op, p) for p in pods),
             _explicit_ring_time(op, shard, P, cross_bw, alpha, red_bw,
                                 half=ring_half, backend=backend,
-                                stripes=stripes),
+                                stripes=stripes, wire_quant=wire_quant),
         ]
     if op == "all_to_all":
         return [
@@ -224,7 +268,8 @@ def _pipelined_stage_times(op: str, chunk_bytes: float, cluster: ClusterSpec,
 
 def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
                     alpha: float, n_channels: int, bidir: bool,
-                    backend: str = "xla", n_stripes=1) -> float:
+                    backend: str = "xla", n_stripes=1,
+                    wire_quant: str | None = None) -> float:
     """Multi-channel software-pipelined time: with C chunks the slowest stage
     is paid C times and the others once (classic pipeline fill/drain), i.e.
 
@@ -238,7 +283,7 @@ def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
     best = float("inf")
     for c in range(1, max(int(n_channels), 1) + 1):
         stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
-                                        backend, n_stripes)
+                                        backend, n_stripes, wire_quant)
         best = min(best, sum(stages) + (c - 1) * max(stages))
     return best
 
@@ -246,21 +291,23 @@ def _pipelined_time(op: str, nbytes: float, cluster: ClusterSpec,
 def pipelined_channel_time(op: str, nbytes: float, cluster: ClusterSpec,
                            n_channels: int, alpha: float | None = None,
                            bidir: bool = True, backend: str = "xla",
-                           n_stripes=1) -> float:
+                           n_stripes=1,
+                           wire_quant: str | None = None) -> float:
     """T(C) at *exactly* C channels — no auto-tune.  For channel sweeps that
     want to show the fill/drain-vs-α tradeoff (collective_time's pipelined
     mode returns min over 1..n_channels and is monotone in n_channels)."""
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     c = max(int(n_channels), 1)
     stages = _pipelined_stage_times(op, nbytes / c, cluster, alpha, bidir,
-                                    backend, n_stripes)
+                                    backend, n_stripes, wire_quant)
     return sum(stages) + (c - 1) * max(stages)
 
 
 def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
                     mode: str = "auto", alpha: float | None = None, *,
                     n_channels: int = 4, bidir: bool = True,
-                    backend: str = "xla", n_stripes=1) -> float:
+                    backend: str = "xla", n_stripes=1,
+                    wire_quant: str | None = None) -> float:
     """Time of one collective over every chip in ``cluster``.
 
     mode "flat": one ring over all chips, every link bounded by the slowest
@@ -287,6 +334,12 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     The default 1 keeps the legacy aggregate-endpoint wire model; the xla
     backend ignores the knob (a ppermute ring is one logical transfer),
     mirroring ``HetCCLConfig.resolved_stripes``.
+
+    wire_quant (pallas only, DESIGN.md §17): None | "int8" | "fp8" payload
+    codec of the explicit rings — 1 code byte/element plus the f32 per-chunk
+    scale sidecar on the wire, the codec's HBM passes and per-step launch
+    cost charged on top.  The xla backend ignores the knob, mirroring the
+    communicator's creation-time collapse.
     """
     alpha = cluster.inter_pod_alpha if alpha is None else alpha
     pods = list(cluster.pods)
@@ -313,7 +366,8 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
                 if len(pods) > 1 else None
             return _explicit_ring_time(op, nbytes, n, bw, alpha,
                                        _reduce_bw(cluster), backend="pallas",
-                                       stripes=stripes)
+                                       stripes=stripes,
+                                       wire_quant=wire_quant)
         return alpha * (n - 1) + _RING_FACTORS[op](n) * nbytes / bw
     if mode == "pipelined":
         # only the ops with a "pipelined" TACC registration run the
@@ -322,12 +376,12 @@ def collective_time(op: str, nbytes: float, cluster: ClusterSpec,
         # with overlap the runtime never achieves.
         if op in ("all_reduce", "all_gather", "reduce_scatter"):
             return _pipelined_time(op, nbytes, cluster, alpha, n_channels,
-                                   bidir, backend, n_stripes)
+                                   bidir, backend, n_stripes, wire_quant)
         mode = "hier"
     # hierarchical: local stage + cross-pod ring on 1/n_local shards —
     # the serial (C=1, unidirectional) case of the pipelined stage model.
     stages = _pipelined_stage_times(op, nbytes, cluster, alpha, False, backend,
-                                    n_stripes)
+                                    n_stripes, wire_quant)
     return sum(stages)
 
 
@@ -341,7 +395,8 @@ def policy_collective_time(op: str, nbytes: float, cluster: ClusterSpec,
     p = policies.resolve(op, nbytes)
     return collective_time(op, nbytes, cluster, p.mode, alpha,
                            n_channels=max(int(p.n_channels), 1),
-                           backend=p.backend, n_stripes=p.n_stripes)
+                           backend=p.backend, n_stripes=p.n_stripes,
+                           wire_quant=p.wire_quant)
 
 
 def collective_busbw(op: str, nbytes: float, cluster: ClusterSpec,

@@ -68,6 +68,7 @@ class DeadlineRule:
     noise: float                        # measured IQR-high/median headroom
     measured_median_s: float | None     # BENCH_comm.json evidence (if any)
     deadline_s: float
+    wire_quant: str | None = None       # the row's wire codec (DESIGN.md §17)
 
 
 class DeadlineCoverageError(ValueError):
@@ -104,6 +105,23 @@ class DeadlineTable:
                 if (op, c) not in have and (op, c) not in missing:
                     missing.append((op, c))
         return missing
+
+    def missing_cells(self, cells) -> list[tuple]:
+        """Dispatched cells with no deadline rule — the quant-aware coverage
+        check of the CI smoke.  Accepts ``(op, size_class, backend)``
+        3-tuples (``Tracer.dispatched_cells``) and ``(..., wire_quant)``
+        4-tuples (``Tracer.dispatched_quant_cells``); a 4-tuple cell matches
+        only a rule whose codec agrees, so a quantized dispatch can never
+        hide behind an unquantized deadline."""
+        have4 = {(r.op, r.size_class, r.backend, r.wire_quant)
+                 for r in self.rows}
+        have3 = {k[:3] for k in have4}
+        out = []
+        for cell in sorted(tuple(c) for c in cells):
+            hit = cell in have4 if len(cell) == 4 else cell in have3
+            if not hit and cell not in out:
+                out.append(cell)
+        return out
 
     def representative(self) -> DeadlineRule:
         """The bandwidth-dominant rule (largest deadline) — the gradient-path
@@ -179,11 +197,14 @@ def derive_deadlines(cluster, policy_table, bench_comm: Mapping | None = None,
                 continue
             mode = pol.mode if pol.mode != "auto" else \
                 ("hier" if n_pods > 1 else "flat")
+            quant = getattr(pol, "wire_quant", None) \
+                if pol.backend == "pallas" else None
             modeled = sim.collective_time(
                 op, float(CLASS_REP_BYTES[c]), cluster, mode,
                 n_channels=max(int(pol.n_channels), 1), backend=pol.backend,
                 n_stripes=max(int(pol.n_stripes), 1)
-                if pol.backend == "pallas" else 1)
+                if pol.backend == "pallas" else 1,
+                wire_quant=quant)
             cell = cells.get((op, c, pol.backend))
             scale = cell["ratio"] if cell and cell["ratio"] > 0 \
                 else fleet_scale
@@ -200,7 +221,7 @@ def derive_deadlines(cluster, policy_table, bench_comm: Mapping | None = None,
             rules[(op, c)] = DeadlineRule(
                 op=op, size_class=c, backend=pol.backend, modeled_s=modeled,
                 scale=scale, noise=noise, measured_median_s=median,
-                deadline_s=deadline)
+                deadline_s=deadline, wire_quant=quant)
     return DeadlineTable(rows=tuple(rules.values()), tolerance=tolerance)
 
 

@@ -11,13 +11,74 @@ payload to bf16; the accumulator stays f32).
 
 Tiled (8, 128)-aligned 2-D blocks; ops.py reshapes flat chunks.  Shapes that
 don't divide the block are padded up and sliced back (ragged chunk tails from
-the multi-channel payload splits, DESIGN.md §10), never asserted away.
+the multi-channel payload splits, DESIGN.md §10), never asserted away.  The
+pad-and-slice plumbing is :func:`ragged_block_call`, shared with the
+quantized dequantize-accumulate kernel (``kernels/quant.py``, DESIGN.md §17)
+— one ragged-handling implementation, not two.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def ragged_block_call(kernel, arrays, out_shapes, *, block,
+                      interpret: bool = False):
+    """Run a 2-D blockwise Pallas kernel over ragged (M, L) operands.
+
+    The shared pad-and-slice ragged handling (DESIGN.md §10): every operand
+    is padded up to the block grid and every output sliced back, so kernels
+    only ever see full blocks.  Operands (and outputs) of shape (M, 1) with
+    L > 1 are treated as *column sidecars* — per-row scalars such as the
+    quantization scales of DESIGN.md §17 — blocked (bm, 1) and broadcast
+    along the column grid instead of being padded to L.
+
+    Args:
+        kernel: Pallas kernel body taking ``len(arrays)`` input refs then
+            ``len(out_shapes)`` output refs.
+        arrays: 2-D operands; ``arrays[0]`` fixes (M, L).
+        out_shapes: ``jax.ShapeDtypeStruct`` per output, shaped (M, L) or
+            (M, 1) (sidecar).
+    Returns:
+        The sliced-back output array, or a tuple of them when
+        ``len(out_shapes) > 1``.
+    """
+    M, L = arrays[0].shape
+    bm, bl = min(block[0], M), min(block[1], L)
+    pad_m, pad_l = (-M) % bm, (-L) % bl
+    Mp, Lp = M + pad_m, L + pad_l
+
+    def is_sidecar(shape):
+        return shape[1] == 1 and L != 1
+
+    def spec(shape):
+        if is_sidecar(shape):
+            return pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+        return pl.BlockSpec((bm, bl), lambda i, j: (i, j))
+
+    ins = []
+    for a in arrays:
+        pl_ = 0 if is_sidecar(a.shape) else pad_l
+        if pad_m or pl_:
+            a = jnp.pad(a, ((0, pad_m), (0, pl_)))
+        ins.append(a)
+    padded_out = [jax.ShapeDtypeStruct(
+        (Mp, 1 if is_sidecar(o.shape) else Lp), o.dtype) for o in out_shapes]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Lp // bl),
+        in_specs=[spec(a.shape) for a in arrays],
+        out_specs=[spec(o.shape) for o in out_shapes] if len(out_shapes) > 1
+        else spec(out_shapes[0].shape),
+        out_shape=padded_out if len(out_shapes) > 1 else padded_out[0],
+        interpret=interpret,
+    )(*ins)
+    if len(out_shapes) == 1:
+        outs = (outs,)
+    sliced = tuple(o[:s.shape[0], :s.shape[1]]
+                   for o, s in zip(outs, out_shapes))
+    return sliced if len(sliced) > 1 else sliced[0]
 
 
 def _reduce_kernel(acc_ref, inc_ref, o_ref):
@@ -29,23 +90,7 @@ def collective_reduce(acc, incoming, *, block=(256, 256),
                       interpret: bool = False):
     """acc (M, L), incoming (M, L) possibly narrower dtype -> acc.dtype."""
     M, L = acc.shape
-    bm, bl = min(block[0], M), min(block[1], L)
-    pad_m, pad_l = (-M) % bm, (-L) % bl
-    if pad_m or pad_l:
-        acc = jnp.pad(acc, ((0, pad_m), (0, pad_l)))
-        incoming = jnp.pad(incoming, ((0, pad_m), (0, pad_l)))
-    Mp, Lp = acc.shape
-    out = pl.pallas_call(
-        _reduce_kernel,
-        grid=(Mp // bm, Lp // bl),
-        in_specs=[
-            pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bl), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Lp), acc.dtype),
-        interpret=interpret,
-    )(acc, incoming)
-    if pad_m or pad_l:
-        out = out[:M, :L]
-    return out
+    return ragged_block_call(
+        _reduce_kernel, [acc, incoming],
+        [jax.ShapeDtypeStruct((M, L), acc.dtype)],
+        block=block, interpret=interpret)

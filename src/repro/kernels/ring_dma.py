@@ -47,6 +47,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import tacc
+from repro.kernels import quant
 from repro.transport.stripe import MAX_STRIPES
 
 # Double-buffer depth: streams per ring step whose DMAs overlap the other
@@ -142,6 +143,84 @@ def _rs_emulated(chunks: jax.Array, axis: str, direction: int,
 
     acc = lax.fori_loop(0, n - 1, body, acc)
     return jnp.take(acc, idx, axis=0)
+
+
+def _quant_hop(blk: jax.Array, axis: str, perm, n_stripes: int,
+               codec: str):
+    """One quantized wire hop: per-chunk absmax encode, the byte codes ride
+    the striped per-link streams exactly like an uncompressed payload, the
+    f32 scale sidecar rides one ppermute (DESIGN.md §17)."""
+    codes, scales = quant.quantize(blk, codec=codec)
+    r_codes = _striped_hop(codes, axis, perm, n_stripes)
+    r_scales = lax.ppermute(scales, axis, perm)
+    return r_codes, r_scales
+
+
+def _quant_rs_emulated(chunks: jax.Array, axis: str, direction: int,
+                       codec: str, n_stripes: int = 1) -> jax.Array:
+    """Quantized ring reduce-scatter: :func:`_rs_emulated`'s wave structure
+    with each hop's payload quantized (DESIGN.md §17).
+
+    Every step re-quantizes the *running partial* it forwards — the scale
+    sidecar travels alongside the codes — and the receiver dequantizes into
+    the f32 accumulator via the ``wire_dequant_accum`` kernel; the
+    accumulator itself never narrows.  The double-buffer split and
+    ``optimization_barrier`` wave pinning are identical to the
+    uncompressed schedule, so stream 1's (quantized) hop may overlap
+    stream 0's dequantize-accumulate.
+    """
+    n = chunks.shape[0]
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n, direction)
+    acc = chunks.astype(jnp.float32)
+    c = chunks.shape[1]
+    h = c // NUM_BUFFERS if c >= NUM_BUFFERS else 0
+
+    def body(s, acc):
+        send_idx = (idx - direction * (s + 1)) % n
+        recv_idx = (idx - direction * (s + 2)) % n
+        blk = jnp.take(acc, send_idx, axis=0)
+        cur = jnp.take(acc, recv_idx, axis=0)
+        if h:
+            r0, rs0 = _quant_hop(blk[:h], axis, perm, n_stripes, codec)
+            r1, rs1 = _quant_hop(blk[h:], axis, perm, n_stripes, codec)
+            new0 = quant.dequantize_accumulate(cur[:h], r0, rs0, codec=codec)
+            new0, r1, rs1 = lax.optimization_barrier((new0, r1, rs1))
+            new1 = quant.dequantize_accumulate(cur[h:], r1, rs1, codec=codec)
+            new = jnp.concatenate([new0, new1], axis=0)
+        else:
+            rc, rs = _quant_hop(blk, axis, perm, n_stripes, codec)
+            new = quant.dequantize_accumulate(cur, rc, rs, codec=codec)
+        return acc.at[recv_idx].set(new)
+
+    acc = lax.fori_loop(0, n - 1, body, acc)
+    return jnp.take(acc, idx, axis=0)
+
+
+def _quant_ag_emulated(x: jax.Array, axis: str, direction: int,
+                       codec: str, n_stripes: int = 1) -> jax.Array:
+    """Quantized ring all-gather: the chunk is encoded **once** and the
+    byte codes are forwarded verbatim around the ring (no re-quantization —
+    unlike the reduce-scatter there is no growing partial), so every rank
+    decodes the identical grid value for every chunk, including its own.
+    Result is f32 on the codec grid."""
+    n = lax.axis_size(axis)
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n, direction)
+    codes, scales = quant.quantize(x, codec=codec)
+    own = quant.dequantize(codes, scales, codec=codec)
+    out = jnp.zeros((n,) + x.shape, jnp.float32).at[idx].set(own)
+
+    def body(s, state):
+        acc, cur_c, cur_s = state
+        cur_c = _striped_hop(cur_c, axis, perm, n_stripes)
+        cur_s = lax.ppermute(cur_s, axis, perm)
+        val = quant.dequantize(cur_c, cur_s, codec=codec)
+        acc = acc.at[(idx - direction * (s + 1)) % n].set(val)
+        return acc, cur_c, cur_s
+
+    out, _, _ = lax.fori_loop(0, n - 1, body, (out, codes, scales))
+    return out
 
 
 def _ag_emulated(x: jax.Array, axis: str, direction: int,
@@ -407,7 +486,8 @@ def _on_tpu() -> bool:
 # ---------------------------------------------------------------------------
 
 def ring_reduce_scatter(x: jax.Array, axis: str, *, direction: int = 1,
-                        wire_dtype=None, n_stripes: int = 1) -> jax.Array:
+                        wire_dtype=None, n_stripes: int = 1,
+                        wire_quant: str | None = None) -> jax.Array:
     """x (n*c, ...) tiled on dim 0 -> this rank's reduced chunk (c, ...).
 
     Same result as ``collectives.ring_reduce_scatter`` (within dtype
@@ -417,13 +497,26 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, direction: int = 1,
     ``n_stripes`` splits each wire hop over that many per-link DMA streams
     (the transport layer's stripe schedule, DESIGN.md §11) — bit-equivalent
     to the unstriped ring, clamped to the payload's granularity.
+
+    ``wire_quant`` (``"int8"`` | ``"fp8"``) replaces the dtype cast with
+    the per-chunk absmax codec of DESIGN.md §17: each hop quantizes the
+    running partial it forwards (scale sidecar alongside the byte codes)
+    and dequantize-accumulates into the f32 accumulator.  It takes
+    precedence over ``wire_dtype`` and runs the same schedule on every
+    platform — the quantize / dequantize-accumulate compute resolves to
+    the Pallas kernels per TACC platform, so the tier-1 CPU suite
+    exercises the real numerics bit-equivalently.
     """
     n = lax.axis_size(axis)
     if n == 1:
         return x
     assert x.shape[0] % n == 0, (x.shape, n)
-    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else x.dtype
     chunks = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    if wire_quant is not None:
+        out = _quant_rs_emulated(chunks, axis, direction, wire_quant,
+                                 n_stripes)
+        return out.astype(x.dtype)
+    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else x.dtype
     if _on_tpu():
         out = _rs_dma_tpu(chunks, axis, direction, wire, n_stripes)
     else:
@@ -432,7 +525,8 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, direction: int = 1,
 
 
 def ring_reduce_scatter_bidir(x: jax.Array, axis: str, *,
-                              wire_dtype=None, n_stripes: int = 1) -> jax.Array:
+                              wire_dtype=None, n_stripes: int = 1,
+                              wire_quant: str | None = None) -> jax.Array:
     """Bidirectional DMA ring reduce-scatter: the payload's halves travel in
     opposite directions concurrently (independent kernels per direction —
     each link's two lanes carry half the bytes, as in the xla bidir ring)."""
@@ -443,52 +537,67 @@ def ring_reduce_scatter_bidir(x: jax.Array, axis: str, *,
     c = x.shape[0] // n
     if c < 2:
         return ring_reduce_scatter(x, axis, wire_dtype=wire_dtype,
-                                   n_stripes=n_stripes)
+                                   n_stripes=n_stripes,
+                                   wire_quant=wire_quant)
     h = c // 2
     chunks = x.reshape((n, c) + x.shape[1:])
     fwd = chunks[:, :h].reshape((n * h,) + x.shape[1:])
     bwd = chunks[:, h:].reshape((n * (c - h),) + x.shape[1:])
     return jnp.concatenate([
         ring_reduce_scatter(fwd, axis, direction=1, wire_dtype=wire_dtype,
-                            n_stripes=n_stripes),
+                            n_stripes=n_stripes, wire_quant=wire_quant),
         ring_reduce_scatter(bwd, axis, direction=-1, wire_dtype=wire_dtype,
-                            n_stripes=n_stripes),
+                            n_stripes=n_stripes, wire_quant=wire_quant),
     ], axis=0)
 
 
 def ring_all_gather(x: jax.Array, axis: str, *, direction: int = 1,
-                    n_stripes: int = 1) -> jax.Array:
+                    n_stripes: int = 1,
+                    wire_quant: str | None = None) -> jax.Array:
     """x (c, ...) per-rank chunk -> (n*c, ...) rank-major; matches
     ``collectives.ring_all_gather`` exactly (no reduction, no dtype drift;
-    stripes only split the wire hops, DESIGN.md §11)."""
+    stripes only split the wire hops, DESIGN.md §11).  With ``wire_quant``
+    each chunk is encoded once and its byte codes forwarded verbatim, so
+    every rank decodes the identical on-grid value (DESIGN.md §17)."""
     n = lax.axis_size(axis)
     if n == 1:
         return x
-    out = _ag_dma_tpu(x, axis, direction, n_stripes) if _on_tpu() else \
-        _ag_emulated(x, axis, direction, n_stripes)
+    if wire_quant is not None:
+        out = _quant_ag_emulated(x, axis, direction, wire_quant, n_stripes)
+        out = out.astype(x.dtype)
+    else:
+        out = _ag_dma_tpu(x, axis, direction, n_stripes) if _on_tpu() else \
+            _ag_emulated(x, axis, direction, n_stripes)
     return out.reshape((n * x.shape[0],) + x.shape[1:])
 
 
 def ring_all_gather_bidir(x: jax.Array, axis: str, *,
-                          n_stripes: int = 1) -> jax.Array:
+                          n_stripes: int = 1,
+                          wire_quant: str | None = None) -> jax.Array:
     """Bidirectional DMA ring all-gather (halves per-link byte-hops)."""
     n = lax.axis_size(axis)
     if n == 1:
         return x
     c = x.shape[0]
     if c < 2:
-        return ring_all_gather(x, axis, n_stripes=n_stripes)
+        return ring_all_gather(x, axis, n_stripes=n_stripes,
+                               wire_quant=wire_quant)
     h = c // 2
-    accf = _ag_dma_tpu(x[:h], axis, 1, n_stripes) if _on_tpu() else \
-        _ag_emulated(x[:h], axis, 1, n_stripes)
-    accb = _ag_dma_tpu(x[h:], axis, -1, n_stripes) if _on_tpu() else \
-        _ag_emulated(x[h:], axis, -1, n_stripes)
-    out = jnp.concatenate([accf, accb], axis=1)        # (n, c, ...)
+
+    def one(xs, direction):
+        if wire_quant is not None:
+            return _quant_ag_emulated(xs, axis, direction, wire_quant,
+                                      n_stripes).astype(x.dtype)
+        return _ag_dma_tpu(xs, axis, direction, n_stripes) if _on_tpu() \
+            else _ag_emulated(xs, axis, direction, n_stripes)
+
+    out = jnp.concatenate([one(x[:h], 1), one(x[h:], -1)], axis=1)
     return out.reshape((n * c,) + x.shape[1:])
 
 
 def ring_all_reduce(x: jax.Array, axis: str, *, wire_dtype=None,
-                    n_stripes: int = 1) -> jax.Array:
+                    n_stripes: int = 1,
+                    wire_quant: str | None = None) -> jax.Array:
     """Bandwidth-optimal DMA ring all-reduce (reduce-scatter + all-gather),
     f32 accumulation, result cast back to x.dtype."""
     n = lax.axis_size(axis)
@@ -501,7 +610,8 @@ def ring_all_reduce(x: jax.Array, axis: str, *, wire_dtype=None,
         flat = jnp.pad(flat, (0, pad))
     red = ring_all_gather(
         ring_reduce_scatter(flat, axis, wire_dtype=wire_dtype,
-                            n_stripes=n_stripes), axis, n_stripes=n_stripes)
+                            n_stripes=n_stripes, wire_quant=wire_quant),
+        axis, n_stripes=n_stripes, wire_quant=wire_quant)
     if pad:
         red = red[: flat.shape[0] - pad]
     return red.reshape(shape).astype(dtype)

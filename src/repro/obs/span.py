@@ -219,7 +219,8 @@ class Tracer:
                     n_channels=max(int(policy.n_channels), 1),
                     backend=policy.backend,
                     n_stripes=max(int(policy.n_stripes), 1)
-                    if policy.backend == "pallas" else 1))
+                    if policy.backend == "pallas" else 1,
+                    wire_quant=getattr(policy, "wire_quant", None)))
             except Exception:
                 self._price_cache[key] = None   # unpriceable op: span stays
         return self._price_cache[key]
@@ -241,6 +242,8 @@ class Tracer:
                               "backend": policy.backend, "mode": policy.mode,
                               "n_channels": int(policy.n_channels),
                               "n_stripes": int(policy.n_stripes),
+                              "wire_quant": getattr(policy, "wire_quant",
+                                                    None),
                               "nbytes": int(nbytes),
                               "comm_epoch": self.comm_epoch},
                         modeled_s=self.price(op, nbytes, policy))
@@ -262,4 +265,13 @@ class Tracer:
         the coverage set ``plan.measured.rows_from_flight`` must reproduce
         from a flight dump (the ISSUE-9 acceptance contract)."""
         return {(s.tags["op"], s.tags["size_class"], s.tags["backend"])
+                for s in self.collective_spans() if "op" in s.tags}
+
+    def dispatched_quant_cells(self) -> set[tuple[str, str, str, str | None]]:
+        """``(op, size_class, backend, wire_quant)`` dispatch coverage —
+        the finer cell the watchdog deadline table keys on once rows carry a
+        codec (DESIGN.md §17); :meth:`dispatched_cells` keeps the legacy
+        3-tuple shape for the flight-dump calibration consumers."""
+        return {(s.tags["op"], s.tags["size_class"], s.tags["backend"],
+                 s.tags.get("wire_quant"))
                 for s in self.collective_spans() if "op" in s.tags}

@@ -29,8 +29,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.comm.policy import (CommPolicy, PolicyTable, SIZE_CLASSES,
-                               size_class)
+from repro.comm.policy import (CommPolicy, PolicyTable, RING_BACKED_OPS,
+                               SIZE_CLASSES, size_class)
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import simulator as sim
 from repro.core.balance import HetPlan, PodProfile, make_plan
@@ -50,13 +50,14 @@ _BACKEND_ORDER = {"xla": 0, "pallas": 1}
 POLICY_OPS = ("all_reduce", "all_gather", "reduce_scatter", "broadcast",
               "reduce", "all_to_all")
 CLASS_REP_BYTES = {"small": 16 * 1024, "medium": MiB, "large": 64 * MiB}
-# Ops whose registered implementations actually consume backend/n_stripes
-# (declare them as policy fields): only these may carry pallas/striped rows —
-# emitting a schedule the runtime cannot execute would make the modeled
-# speedup fictional.  Mirrors the collectives registry (CI's dispatch-table
-# sanity keeps the registry side honest; tests/test_comm.py ties the two).
-RING_BACKED_OPS = frozenset({"all_reduce", "all_gather", "reduce_scatter",
-                             "reduce"})
+# Ops whose registered implementations actually consume backend/n_stripes/
+# wire_quant (declare them as policy fields): only these may carry pallas/
+# striped/quantized rows — emitting a schedule the runtime cannot execute
+# would make the modeled speedup fictional.  Re-exported from
+# ``repro.comm.policy`` (the communicator's creation-time collapse and the
+# planner's candidate pruning must agree on one set; CI's dispatch-table
+# sanity keeps the registry side honest, tests/test_comm.py ties the two).
+assert RING_BACKED_OPS     # imported from repro.comm.policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,15 @@ class SearchSpace:
                   modeled slower than any single-policy candidate sharing
                   its (zero, bucket); exact ties break toward the simpler
                   single-policy plan.
+    wire_quants:  wire-quantization codecs of the per-op search (DESIGN.md
+                  §17).  Tried only for pallas rows of ring-backed ops in
+                  the **large** size class — quantizing a latency-bound
+                  payload is a strict loss (the codec's per-step launch
+                  cost, ``simulator.QUANT_STEP_ALPHA``) and the planner
+                  never emits it — and only kept where modeled *strictly*
+                  faster (the uncompressed wire wins exact ties).  ``None``
+                  (the uncompressed baseline) is always priced even when
+                  absent from the tuple.
     """
 
     modes: tuple[str, ...] = ("flat", "hier", "pipelined")
@@ -100,6 +110,7 @@ class SearchSpace:
     backends: tuple[str, ...] = ("xla", "pallas")
     stripe_counts: tuple[int, ...] = (1, 2, 4)
     per_op: bool = True
+    wire_quants: tuple = (None, "int8")
 
 
 DEFAULT_SPACE = SearchSpace()
@@ -210,6 +221,9 @@ class TrainPlan:
     hbm_bytes_per_device: float
     n_stripes: int = 1            # per-link DMA streams of the cross ring
                                   # (transport layer, DESIGN.md §11; pallas)
+    wire_quant: str | None = None  # wire codec of the gradient-path row
+                                   # (DESIGN.md §17; per-op candidates only —
+                                   # single-policy plans never quantize)
     compute_scale: float = 1.0    # profile-refinement calibration (refine())
     # the per-pod speeds the shares were computed from (measured profiles or
     # the hardware-constant fallback) — carried so refine() re-plans on the
@@ -259,7 +273,7 @@ class TrainPlan:
         return PolicyTable.single(CommPolicy(
             mode=self.mode, backend=self.backend,
             n_channels=max(int(self.n_channels), 1),
-            n_stripes=self.n_stripes))
+            n_stripes=self.n_stripes, wire_quant=self.wire_quant))
 
     def hetccl_config(self, local_axes: tuple[str, ...] = ("data",),
                       pod_axis: str | None = "pod"):
@@ -270,7 +284,8 @@ class TrainPlan:
             mode=self.mode, local_axes=local_axes,
             pod_axis=pod_axis if len(self.request.cluster.pods) > 1 else None,
             bucket_bytes=self.bucket_bytes, n_channels=self.n_channels,
-            backend=self.backend, n_stripes=self.n_stripes)
+            backend=self.backend, n_stripes=self.n_stripes,
+            wire_quant=self.wire_quant)
 
     def summary(self) -> dict:
         """JSON-friendly digest (the dry-run record / plan_sweep row)."""
@@ -278,6 +293,7 @@ class TrainPlan:
             "mode": self.mode, "backend": self.backend,
             "n_channels": self.n_channels,
             "n_stripes": self.n_stripes,
+            "wire_quant": self.wire_quant,
             "bucket_MiB": self.bucket_bytes // MiB,
             "zero_stage": self.zero_stage,
             "micro_per_pod": list(self.plan.micro_per_pod),
@@ -400,20 +416,30 @@ def best_policy(op: str, nbytes: float, cluster: ClusterSpec,
 
     Returns:
         ``(policy, modeled_seconds)``.  Ties break toward the simpler
-        schedule (flat < hier < pipelined, xla < pallas, fewer stripes,
-        fewer channels), so degenerate cells (single island, single-link
-        chips, tiny payloads) keep the legacy configuration.
+        schedule (uncompressed wire, then flat < hier < pipelined,
+        xla < pallas, fewer stripes, fewer channels), so degenerate cells
+        (single island, single-link chips, tiny payloads) keep the legacy
+        configuration.  ``wire_quant`` codecs enter the search only for
+        pallas rows of ring-backed ops in the large size class (DESIGN.md
+        §17) and must be *strictly* faster to win.
     """
+    quant_dim = tuple(dict.fromkeys((None,) + tuple(space.wire_quants)))
     best = None
     for mode, backend, c, k in _comm_candidates(space):
         if op not in RING_BACKED_OPS:
             backend, k = "xla", 1   # the op can't execute a pallas/striped row
-        t = sim.collective_time(op, nbytes, cluster, mode, n_channels=c,
-                                backend=backend, n_stripes=k)
-        key = (t, _MODE_ORDER[mode], _BACKEND_ORDER[backend], k, c)
-        if best is None or key < best[0]:
-            best = (key, CommPolicy(mode=mode, backend=backend,
-                                    n_channels=c, n_stripes=k))
+        quants = quant_dim if (backend == "pallas" and op in RING_BACKED_OPS
+                               and size_class(nbytes) == "large") else (None,)
+        for q in quants:
+            t = sim.collective_time(op, nbytes, cluster, mode, n_channels=c,
+                                    backend=backend, n_stripes=k,
+                                    wire_quant=q)
+            key = (t, q is not None, _MODE_ORDER[mode],
+                   _BACKEND_ORDER[backend], k, c)
+            if best is None or key < best[0]:
+                best = (key, CommPolicy(mode=mode, backend=backend,
+                                        n_channels=c, n_stripes=k,
+                                        wire_quant=q))
     return best[1], best[0][0]
 
 
@@ -560,6 +586,7 @@ def rank(request: PlanRequest, space: SearchSpace = DEFAULT_SPACE, *,
                     mode=dom.mode, backend=dom.backend,
                     n_channels=dom.n_channels, bucket_bytes=bucket,
                     zero_stage=zero, n_stripes=dom.n_stripes,
+                    wire_quant=dom.wire_quant,
                     modeled_step_s=step_s, modeled_compute_s=comp,
                     modeled_comm_s=comm,
                     modeled_tokens_per_s=(live_tokens / step_s

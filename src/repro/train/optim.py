@@ -30,6 +30,72 @@ from jax import lax
 
 from repro.configs.base import RunConfig
 from repro.core import hetccl
+from repro.kernels import quant
+
+
+def ef_codec(rc: RunConfig) -> str | None:
+    """The wire codec error feedback compensates for, or None when EF is off
+    (DESIGN.md §17).
+
+    ``rc.error_feedback``: "auto" enables EF iff the gradient reductions
+    actually quantize — a ``wire_quant`` codec on the large class of
+    reduce_scatter/all_reduce after the run-level ``rc.wire_quant`` knob
+    composes into the table (planner rows win, ``with_wire_quant``);
+    "on" additionally *requires* a codec to resolve; "off" disables EF —
+    the convergence ablation (quantize without compensation).
+    """
+    if rc.error_feedback not in ("auto", "on", "off"):
+        raise ValueError(
+            f"unknown error_feedback {rc.error_feedback!r}; "
+            f"expected 'auto', 'on' or 'off'")
+    if rc.error_feedback == "off":
+        return None
+    codec = None
+    if rc.policies is not None:
+        table = rc.policies.with_wire_quant(rc.wire_quant)
+        for op in ("reduce_scatter", "all_reduce"):
+            p = table.lookup(op, "large")
+            if p.backend == "pallas" and p.wire_quant:
+                codec = p.wire_quant
+                break
+    elif rc.wire_quant and rc.backend == "pallas":
+        codec = rc.wire_quant
+    if codec is None and rc.error_feedback == "on":
+        raise ValueError(
+            "error_feedback='on' but no wire_quant codec resolves: set "
+            "RunConfig.wire_quant (with backend='pallas') or plan a policy "
+            "table with quantized gradient rows")
+    return codec
+
+
+def ef_init(params):
+    """Rank-local EF residual state: one flat f32 array per param leaf,
+    zero-initialized, in the *local* gradient size (full leaf under ZeRO-1,
+    'data'-shard under ZeRO-3).  Error feedback is worker-local — the
+    residual leaf is sharded over the full DP axes so every rank keeps its
+    own quantization error (the ``"ef"`` opt-state entry, DESIGN.md §17)."""
+    return jax.tree.map(lambda p: jnp.zeros((p.size,), jnp.float32), params)
+
+
+def ef_apply(grads, residuals, codec: str):
+    """Per-leaf error-feedback compression before the quantized collective
+    (DESIGN.md §17): each local contribution is projected onto the codec's
+    grid via :func:`repro.kernels.quant.ef_compress` — the ring's first-hop
+    quantization of an on-grid value is then exact (the idempotence
+    property) — and the projection error telescopes into the rank-local
+    residual instead of compounding across steps.
+
+    Returns ``(compressed_grads, new_residuals)``.
+    """
+    def one(g, r):
+        c, nr = quant.ef_compress(g.astype(jnp.float32).reshape(-1), r,
+                                  codec=codec)
+        return c.reshape(g.shape), nr
+
+    pairs = jax.tree.map(one, grads, residuals)
+    is_pair = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair))
 
 
 def dp_rank_and_world(dp_axes: tuple[str, ...]) -> tuple[jax.Array, int]:
@@ -101,6 +167,9 @@ def zero1_step(params, grads, opt, step, rc: RunConfig, cfg):
     ``cfg``: the program's ``repro.comm.Communicator`` (or a legacy
     ``HetCCLConfig``) — every collective resolves its policy from it."""
     rank, world = dp_rank_and_world(cfg.dp_axes())
+    ef = opt.get("ef")
+    if ef is not None:
+        grads, ef = ef_apply(grads, ef, ef_codec(rc))
     grads = hetccl.tree_all_reduce(grads, cfg)
 
     gnorm = global_norm(grads)
@@ -131,6 +200,8 @@ def zero1_step(params, grads, opt, step, rc: RunConfig, cfg):
     new_opt = {"m": tdef.unflatten([o[1] for o in out]),
                "v": tdef.unflatten([o[2] for o in out]),
                "master": tdef.unflatten([o[3] for o in out])}
+    if ef is not None:
+        new_opt["ef"] = ef
     return new_p, new_opt, gnorm
 
 
@@ -154,6 +225,11 @@ def zero3_step(params, grads, opt, step, rc: RunConfig, cfg, fsdp_leaf_mask):
     ``cfg``: communicator (or legacy config); the pod-only projection is a
     ``dataclasses.replace`` like before."""
     pod_cfg = dataclasses.replace(cfg, local_axes=())
+    ef = opt.get("ef")
+    if ef is not None:
+        # compensates the pod-stage ring (the fsdp reduce-scatter adjoint
+        # quantizes inside autodiff, out of EF's reach — DESIGN.md §17)
+        grads, ef = ef_apply(grads, ef, ef_codec(rc))
     def sync(g, is_fsdp):
         if cfg.pod_axis:
             g = hetccl.all_reduce(g, pod_cfg if is_fsdp else cfg)
@@ -176,6 +252,8 @@ def zero3_step(params, grads, opt, step, rc: RunConfig, cfg, fsdp_leaf_mask):
     new_opt = {"m": jax.tree.map(lambda o: o[1], flat, is_leaf=lambda x: isinstance(x, tuple)),
                "v": jax.tree.map(lambda o: o[2], flat, is_leaf=lambda x: isinstance(x, tuple)),
                "master": jax.tree.map(lambda o: o[3], flat, is_leaf=lambda x: isinstance(x, tuple))}
+    if ef is not None:
+        new_opt["ef"] = ef
     return new_p, new_opt, gnorm
 
 

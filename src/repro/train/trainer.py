@@ -127,7 +127,8 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         bucket_bytes=rc.bucket_bytes,
         n_channels=rc.n_channels,
         pipeline_chunk_bytes=rc.pipeline_chunk_bytes,
-        backend=rc.backend, n_stripes=rc.n_stripes)
+        backend=rc.backend, n_stripes=rc.n_stripes,
+        wire_quant=rc.wire_quant)
     hcfg.resolved_mode()        # eager mode/backend/stripe validation (typos
     hcfg.resolved_stripes()     # fail at build, not inside the compiled step)
     if rc.policies is not None:
@@ -137,6 +138,7 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         table = rc.policies
         if rc.cross_dtype:
             table = table.with_cross_dtype(jnp.dtype(rc.cross_dtype))
+        table = table.with_wire_quant(rc.wire_quant)
         comm = comm_mod.create(
             local_axes, pod_axis, table=table,
             bucket_bytes=rc.bucket_bytes,
@@ -252,6 +254,8 @@ def make_train_program(model: Model, mesh, rc: RunConfig, plan: HetPlan,
         else:
             opt = optim.zero1_init_opt(params, dp_world)
             opt["master"] = optim.zero1_master_from_params(params, manual_axes)
+        if optim.ef_codec(rc):
+            opt["ef"] = optim.ef_init(params)
         return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
 
     sm_init = compat.shard_map(init_body, mesh=mesh, in_specs=P(),
@@ -284,9 +288,14 @@ def rebuild_program(prog: TrainProgram, mesh, rc: RunConfig | None = None,
 
 
 def _opt_specs(rc: RunConfig, pspecs, manual_axes):
+    dp = manual_axes if len(manual_axes) > 1 else manual_axes[0]
+    # EF residuals (DESIGN.md §17) are rank-local flat arrays under both
+    # stages: sharded over the full DP axes, never replicated — each rank
+    # owns the quantization error of its own gradient contribution.
+    ef = ({"ef": jax.tree.map(lambda _: P(dp), pspecs)}
+          if optim.ef_codec(rc) else {})
     if rc.zero_stage >= 3:
         f32specs = pspecs
-        return {"m": f32specs, "v": f32specs, "master": f32specs}
-    dp = manual_axes if len(manual_axes) > 1 else manual_axes[0]
+        return {"m": f32specs, "v": f32specs, "master": f32specs, **ef}
     flat = jax.tree.map(lambda _: P(dp), pspecs)
-    return {"m": flat, "v": flat, "master": flat}
+    return {"m": flat, "v": flat, "master": flat, **ef}

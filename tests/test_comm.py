@@ -359,12 +359,41 @@ def test_policy_table_never_emits_unexecutable_rows():
 
 def test_with_cross_dtype_fills_unset_rows_only():
     explicit = comm.CommPolicy(mode="hier", cross_dtype="float16")
-    t = comm.PolicyTable.of({("all_reduce", "small"): explicit},
+    unset = comm.CommPolicy(mode="pipelined", n_channels=4)
+    t = comm.PolicyTable.of({("all_reduce", "small"): explicit,
+                             ("reduce_scatter", "large"): unset},
                             default=comm.CommPolicy(mode="hier"))
     t2 = t.with_cross_dtype("bfloat16")
     assert t2.lookup("all_reduce", "small").cross_dtype == "float16"
+    # non-default rows that leave the knob unset are filled too, keeping
+    # their other fields
+    filled = t2.lookup("reduce_scatter", "large")
+    assert filled.cross_dtype == "bfloat16"
+    assert (filled.mode, filled.n_channels) == ("pipelined", 4)
     assert t2.default.cross_dtype == "bfloat16"
     assert t.default.cross_dtype is None        # original untouched
+
+
+def test_with_wire_quant_planner_rows_win():
+    """Same composition contract as with_cross_dtype (DESIGN.md §17): the
+    run-level codec fills rows the planner left unset, never overrides a
+    planner-emitted quant row, and None is the identity."""
+    planner_row = comm.CommPolicy(mode="hier", backend="pallas",
+                                  wire_quant="fp8")
+    bare = comm.CommPolicy(mode="pipelined", backend="pallas", n_channels=4)
+    t = comm.PolicyTable.of({("reduce_scatter", "large"): planner_row,
+                             ("all_reduce", "large"): bare},
+                            default=comm.CommPolicy(mode="hier"))
+    t2 = t.with_wire_quant("int8")
+    assert t2.lookup("reduce_scatter", "large").wire_quant == "fp8"
+    filled = t2.lookup("all_reduce", "large")
+    assert filled.wire_quant == "int8"
+    assert (filled.mode, filled.n_channels) == ("pipelined", 4)
+    assert t2.default.wire_quant == "int8"
+    assert t.lookup("all_reduce", "large").wire_quant is None   # untouched
+    assert t.with_wire_quant(None) is t                         # identity
+    with pytest.raises(ValueError):
+        t.with_wire_quant("int4")                               # unknown codec
 
 
 def test_per_op_search_disabled_keeps_legacy_frontier():

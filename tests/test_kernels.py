@@ -141,3 +141,74 @@ def test_window_decode_attention_matches_full():
     want = chunked_attention(q, k_all, v_all, kind="causal", window=W,
                              q_offset=S - 1, chunk=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+@pytest.mark.parametrize("codec,denom", [("int8", 254.0), ("fp8", 16.0)])
+@pytest.mark.parametrize("n", [512, 1000, 4096, 257])
+def test_wire_quant_roundtrip_error_bound(codec, denom, n):
+    """Per-chunk absmax scaling bounds the round-trip error at half a code
+    step: absmax/254 for int8, absmax/16 for the e4m3 software codec
+    (DESIGN.md §17 wire format)."""
+    from repro.kernels import quant
+    x = jnp.asarray(rng.randn(n) * 3.0, jnp.float32)
+    y = jax.jit(lambda v: quant.compress(v, codec=codec))(x)
+    pad = (-n) % quant.DEFAULT_CHUNK
+    xc = np.pad(np.asarray(x), (0, pad)).reshape(-1, quant.DEFAULT_CHUNK)
+    ec = np.pad(np.abs(np.asarray(y - x)), (0, pad)).reshape(xc.shape)
+    bound = np.abs(xc).max(axis=1) / denom
+    assert (ec.max(axis=1) <= bound + 1e-7).all(), (ec.max(axis=1), bound)
+
+
+@pytest.mark.parametrize("codec", ["int8", "fp8"])
+def test_wire_quant_platform_equivalence_under_jit(codec):
+    """cpu reference and interpret-mode Pallas kernels produce bit-identical
+    codes, scales and accumulates under jit — the only context the ring
+    dispatches them in (DESIGN.md §17)."""
+    from repro.core import tacc
+    from repro.kernels import quant
+    x = jnp.asarray(rng.randn(1300) * 2.0, jnp.float32)
+    acc = jnp.asarray(rng.randn(1300), jnp.float32)
+    outs = {}
+    for plat in ("cpu", "interpret"):
+        tacc.set_platform(plat)
+        try:
+            codes, scales = jax.jit(
+                lambda v: quant.quantize(v, codec=codec))(x)
+            got = jax.jit(lambda a, c, s: quant.dequantize_accumulate(
+                a, c, s, codec=codec))(acc, codes, scales)
+        finally:
+            tacc.set_platform_auto()
+        outs[plat] = (np.asarray(codes), np.asarray(scales), np.asarray(got))
+    for a, b in zip(outs["cpu"], outs["interpret"]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("shape", [
+    (300, 300),       # ragged in both dims
+    (7, 130),         # payload smaller than one chunk
+    (513, 1),         # ragged chunk tail from an odd channel split
+])
+def test_wire_quant_ragged_shapes(shape):
+    """Regression: non-divisible (M, L) payloads pad-and-slice through the
+    chunked quantizer — codes keep the payload shape, the accumulate never
+    touches the zero padding (ragged tails from the multi-channel splits,
+    DESIGN.md §17)."""
+    from repro.kernels import quant
+    x = jnp.asarray(rng.randn(*shape), jnp.float32)
+    acc = jnp.asarray(rng.randn(*shape), jnp.float32)
+    codes, scales = jax.jit(quant.quantize)(x)
+    assert codes.shape == shape and codes.dtype == jnp.int8
+    got = jax.jit(quant.dequantize_accumulate)(acc, codes, scales)
+    assert got.shape == shape
+    pad = (-x.size) % quant.DEFAULT_CHUNK
+    xc = np.pad(np.asarray(x).reshape(-1), (0, pad)).reshape(
+        -1, quant.DEFAULT_CHUNK)
+    absmax = np.abs(xc).max(1)              # f32 throughout, like the codec
+    np.testing.assert_allclose(             # absmax sidecar (1 ulp: XLA may
+        np.asarray(scales).reshape(-1),     # fuse the /127 as a reciprocal)
+        np.where(absmax == 0, np.float32(1.0), absmax / np.float32(127.0)),
+        rtol=1e-6)
+    err = np.abs(np.asarray(got) - (np.asarray(acc) + np.asarray(x)))
+    ec = np.pad(err.reshape(-1), (0, pad)).reshape(xc.shape)
+    bound = np.abs(xc).max(axis=1) / 254.0
+    assert (ec.max(axis=1) <= bound + 1e-7).all()

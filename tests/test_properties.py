@@ -124,3 +124,40 @@ def test_collective_reduce_padding_roundtrip(n):
     b = jnp.ones(n, jnp.float32)
     got = ops.collective_reduce(a, b, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.arange(n) + 1.0)
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_ef_telescoping(seed, steps):
+    """Error feedback's convergence guarantee (DESIGN.md §17): the sum of
+    compressed updates plus the final residual equals the sum of the true
+    updates — quantization error never accumulates, it only delays."""
+    from repro.kernels import quant
+    rng = np.random.RandomState(seed)
+    f = jax.jit(lambda x, r: quant.ef_compress(x, r, chunk=32))
+    r = jnp.zeros(96, jnp.float32)
+    tot = jnp.zeros(96, jnp.float32)
+    true = np.zeros(96, np.float64)
+    for _ in range(steps):
+        x = (rng.randn(96) * 2.0).astype(np.float32)
+        true += x
+        c, r = f(jnp.asarray(x), r)
+        tot = tot + c
+    np.testing.assert_allclose(np.asarray(tot + r), true.astype(np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), k=st.integers(-3, 3))
+@settings(max_examples=20, deadline=None)
+def test_wire_quant_idempotent_on_grid(seed, k):
+    """compress(compress(x)) == compress(x): points already on the int8
+    grid (codes x a 2^k step, top code present so the re-derived scale is
+    exact) project onto themselves — the property that makes EF residuals
+    vanish once the gradient lands on the grid (DESIGN.md §17)."""
+    from repro.kernels import quant
+    rng = np.random.RandomState(seed)
+    codes = rng.randint(-127, 128, size=64).astype(np.float32)
+    codes[rng.randint(64)] = 127.0       # chunk carries the top code
+    x = jnp.asarray(codes * np.float32(2.0 ** k))
+    y = jax.jit(lambda v: quant.compress(v, chunk=64))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))

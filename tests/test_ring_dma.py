@@ -22,15 +22,26 @@ from repro.kernels import ring_dma
 
 rng = np.random.RandomState(7)
 
-# CI matrix knob (DESIGN.md §11): the pallas-equivalence job re-runs this
-# whole suite with the transport stripe count forced to 2, so every
-# mode-level equivalence below also certifies the striped schedule.
+# CI matrix knobs: the pallas-equivalence job re-runs this whole suite with
+# the transport stripe count forced to 2 (DESIGN.md §11) and again with the
+# wire codec forced to int8 (DESIGN.md §17), so every mode-level equivalence
+# below also certifies the striped and the quantized schedules.
 N_STRIPES = int(os.environ.get("REPRO_TEST_N_STRIPES", "1"))
+WIRE_QUANT = os.environ.get("REPRO_TEST_WIRE_QUANT", "none").lower()
+WIRE_QUANT = None if WIRE_QUANT in ("", "none") else WIRE_QUANT
 
 TOL = {np.float32: dict(rtol=1e-5, atol=1e-5),
        # bf16 payloads: the xla ring accumulates in bf16, the pallas ring in
        # f32 (collective_reduce contract) — equal within bf16 resolution
        "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+# A quantized wire is deliberately lossy: per-chunk absmax/127 grid
+# resolution, re-quantized partials on the reduce path — equivalence to the
+# xla ring holds within the codec's error envelope, not bitwise.
+QTOL = dict(rtol=5e-2, atol=5e-2)
+
+
+def _tol(dtype_key):
+    return QTOL if WIRE_QUANT else TOL[dtype_key]
 
 
 @pytest.fixture(scope="module", autouse=True)
@@ -56,6 +67,7 @@ def _ring_mesh(n):
 
 def _cfg(mode, backend, **kw):
     kw.setdefault("n_stripes", N_STRIPES)
+    kw.setdefault("wire_quant", WIRE_QUANT)
     return hetccl.HetCCLConfig(mode=mode, local_axes=("data",),
                                pod_axis="pod", backend=backend, **kw)
 
@@ -191,7 +203,7 @@ def test_dma_ring_narrow_wire_decompression():
 @pytest.mark.parametrize("mode", ["flat", "hier", "pipelined"])
 def test_all_reduce_backend_equivalence(mesh3, mode, dtype):
     x = rng.randn(4, 37, 3).astype(np.float32)
-    tol = TOL[dtype]
+    tol = _tol(dtype)
 
     def go(backend):
         cfg = _cfg(mode, backend, n_channels=2)
@@ -209,7 +221,7 @@ def test_all_reduce_backend_equivalence(mesh3, mode, dtype):
 @pytest.mark.parametrize("mode", ["flat", "hier", "pipelined"])
 def test_reduce_scatter_backend_equivalence(mesh3, mode, dtype):
     x = rng.randn(4 * 4 * 3, 2).astype(np.float32)
-    tol = TOL[dtype]
+    tol = _tol(dtype)
 
     def go(backend):
         cfg = _cfg(mode, backend, n_channels=2)
@@ -237,8 +249,11 @@ def test_all_gather_backend_equivalence(mesh3, mode, dtype):
                 cfg).astype(np.float32)
         return _run(mesh3, f, x, P(("pod", "data")), P(None))
 
-    # gather moves bytes verbatim: exact equality in both dtypes
-    np.testing.assert_allclose(go("pallas"), go("xla"), atol=0)
+    # gather moves bytes verbatim: exact equality in both dtypes — except
+    # under a wire codec, where the gathered values are the sender's grid
+    # projection (encode once, forward codes verbatim)
+    np.testing.assert_allclose(go("pallas"), go("xla"),
+                               **(QTOL if WIRE_QUANT else dict(atol=0)))
 
 
 def test_tree_all_reduce_pallas_backend(mesh3):
@@ -256,10 +271,9 @@ def test_tree_all_reduce_pallas_backend(mesh3):
                           out_specs=(P(("pod", "data")), P(("pod", "data"))),
                           axis_names={"pod", "data"}, check_vma=False)
     ga, gb = jax.jit(sm)(tree["a"][:, None], tree["b"][:, None])
-    np.testing.assert_allclose(np.asarray(ga)[0, 0], tree["a"].sum(0),
-                               rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(gb)[0, 0], tree["b"].sum(0),
-                               rtol=1e-5)
+    tol = dict(rtol=5e-2, atol=0.3) if WIRE_QUANT else dict(rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ga)[0, 0], tree["a"].sum(0), **tol)
+    np.testing.assert_allclose(np.asarray(gb)[0, 0], tree["b"].sum(0), **tol)
 
 
 def test_fsdp_adjoint_routes_through_installed_backend(mesh3):
@@ -275,7 +289,8 @@ def test_fsdp_adjoint_routes_through_installed_backend(mesh3):
 
     with hetccl.use(_cfg("hier", "pallas")):
         got = _run(mesh3, grad_fn, x, P("data"), P("data"))
-    np.testing.assert_allclose(got, 2 * x, rtol=1e-5)
+    tol = dict(rtol=5e-2, atol=0.2) if WIRE_QUANT else dict(rtol=1e-5)
+    np.testing.assert_allclose(got, 2 * x, **tol)
 
 
 def test_unknown_backend_rejected():
